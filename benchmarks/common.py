@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: timing, synthetic Table-1 stand-ins, CSV."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.hck_krr import HCKConfig
+from repro.data.pipeline import regression_dataset
+
+
+def timeit(fn, *args, repeats: int = 3, **kwargs) -> tuple[float, object]:
+    """Median wall time (seconds) + last result (blocked)."""
+    out = None
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def small_dataset(name: str, n: int, d: int, task: str = "regression",
+                  n_classes: int = 0, seed: int = 0):
+    """CPU-sized synthetic stand-in mirroring a Table-1 dataset's (d, task)."""
+    cfg = HCKConfig(name, n_train=n, n_test=max(n // 4, 64), d=d, task=task,
+                    n_classes=n_classes)
+    return regression_dataset(cfg, jax.random.PRNGKey(seed))
+
+
+def emit(rows: list[dict], header: list[str]):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in header))
+
+
+def rel_err(pred, truth) -> float:
+    return float(jnp.linalg.norm(pred - truth) / jnp.linalg.norm(truth))
+
+
+def acc(pred, truth) -> float:
+    return float(jnp.mean((pred == truth).astype(jnp.float32)))

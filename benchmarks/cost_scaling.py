@@ -1,0 +1,68 @@
+"""§4.5 cost verification: measured scaling of the core algorithms.
+
+Checks the paper's complexity claims on real timings:
+  matvec (Alg 1)     ~ O(n r)    -> time(2n)/time(n) ≈ 2 at fixed r
+  inversion (Alg 2)  ~ O(n r^2)  -> time(2r)/time(r) ≈ 4 at fixed n
+  oos query (Alg 3)  ~ O(r^2 log(n/r)) per query after O(nr) prep
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.core import hmatrix, oos
+from repro.core.hck import build_hck
+from repro.core.kernels_fn import BaseKernel
+
+
+def run():
+    ker = BaseKernel("gaussian", sigma=1.0)
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # matvec scaling in n at fixed r
+    for n, levels in ((2048, 4), (4096, 5), (8192, 6)):
+        x = jax.random.normal(key, (n, 8))
+        f = build_hck(x, levels=levels, rank=64, key=key, kernel=ker)
+        b = jax.random.normal(key, (n, 1))
+        mv = jax.jit(hmatrix.matvec)
+        mv(f, b)  # compile
+        t, _ = timeit(mv, f, b, repeats=5)
+        rows.append(dict(algo="matvec", n=n, r=64, us=round(t * 1e6, 1)))
+
+    # inversion scaling in r at fixed n (Eq. 22 coupling: n0 = r, so levels
+    # shrink as r grows — the paper's own sizing rule)
+    n = 4096
+    x = jax.random.normal(key, (n, 8))
+    for r in (32, 64, 128):
+        levels = (n // r).bit_length() - 1
+        f = build_hck(x, levels=levels, rank=r, key=key, kernel=ker)
+        inv = jax.jit(lambda f: hmatrix.invert(f, 0.1))
+        inv(f)
+        t, _ = timeit(inv, f, repeats=3)
+        rows.append(dict(algo="invert", n=n, r=r, us=round(t * 1e6, 1)))
+
+    # oos per-query cost after prep
+    f = build_hck(x, levels=levels, rank=64, key=key, kernel=ker)
+    w = jax.random.normal(key, (n, 1))
+    plan = oos.prepare(f, w)
+    for q in (64, 256, 1024):
+        queries = jax.random.normal(key, (q, 8))
+        ap = jax.jit(oos.apply_plan, static_argnames=("kernel",))
+        ap(f, plan, queries, ker)
+        t, _ = timeit(ap, f, plan, queries, ker, repeats=5)
+        rows.append(dict(algo="oos_query", n=q, r=64,
+                         us=round(t * 1e6 / q, 2)))
+
+    emit(rows, ["algo", "n", "r", "us"])
+    mv_t = [r["us"] for r in rows if r["algo"] == "matvec"]
+    inv_t = [r["us"] for r in rows if r["algo"] == "invert"]
+    print(f"# matvec time ratio n->2n: {mv_t[1]/mv_t[0]:.2f}, "
+          f"{mv_t[2]/mv_t[1]:.2f} (expect ~2 for O(nr))")
+    print(f"# invert time ratio r->2r: {inv_t[1]/inv_t[0]:.2f}, "
+          f"{inv_t[2]/inv_t[1]:.2f} (expect ~4 for O(nr^2))")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,83 @@
+"""Figs 5-6 reproduction: performance vs r / training time / memory for the
+four approximate kernels over Table-1-like datasets (synthetic stand-ins of
+matching dimension and task; sizes scaled to the CPU container).
+
+Memory model follows §5.3: ~4nr for the proposed kernel, ~nr for the rest.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import acc, emit, rel_err, small_dataset, timeit
+from repro.core import baselines, krr
+from repro.core.kernels_fn import BaseKernel
+
+DATASETS = [
+    ("cadata", 8, "regression", 0),
+    ("ijcnn1", 22, "binary", 0),
+    ("covtype", 16, "multiclass", 4),
+]
+
+
+def run(n: int = 2048, ranks=(16, 32, 64, 128), lam: float = 1e-2,
+        kernel_name: str = "gaussian", sigma: float = 1.0):
+    rows = []
+    for dname, d, task, ncls in DATASETS:
+        (x, y), (xt, yt) = small_dataset(dname, n, d, task, ncls)
+        ker = BaseKernel(kernel_name, sigma=sigma)
+        classification = task != "regression"
+
+        def score(pred):
+            return acc(pred, yt) if classification else rel_err(pred, yt)
+
+        for r in ranks:
+            key = jax.random.PRNGKey(r)
+            t_h, m = timeit(lambda: krr.fit(
+                x, y, kernel=ker, lam=lam, rank=r, key=key,
+                classification=classification), repeats=1)
+            pred = m.predict_class(xt) if classification else m.predict(xt)
+            rows.append(dict(dataset=dname, method="hierarchical", r=r,
+                             score=round(score(pred), 4),
+                             train_s=round(t_h, 3), mem_units=4 * n * r))
+            t_n, ny = timeit(lambda: baselines.fit_nystrom(
+                x, (y.astype(float) if not classification else
+                    2.0 * (y == 1) - 1 if ncls == 0 else
+                    jax.nn.one_hot(y, ncls) * 2 - 1),
+                kernel=ker, lam=lam, rank=r, key=key), repeats=1)
+            p = ny.predict(xt)
+            p = (p.argmax(-1) if ncls else (p[:, 0] > 0).astype(int)) \
+                if classification else p[:, 0]
+            rows.append(dict(dataset=dname, method="nystrom", r=r,
+                             score=round(score(p), 4),
+                             train_s=round(t_n, 3), mem_units=n * r))
+            t_f, rf = timeit(lambda: baselines.fit_rff(
+                x, (y.astype(float) if not classification else
+                    2.0 * (y == 1) - 1 if ncls == 0 else
+                    jax.nn.one_hot(y, ncls) * 2 - 1),
+                kernel=ker, lam=lam, rank=r, key=key), repeats=1)
+            p = rf.predict(xt)
+            p = (p.argmax(-1) if ncls else (p[:, 0] > 0).astype(int)) \
+                if classification else p[:, 0]
+            rows.append(dict(dataset=dname, method="fourier", r=r,
+                             score=round(score(p), 4),
+                             train_s=round(t_f, 3), mem_units=n * r))
+            levels = max((n // max(r, 1)).bit_length() - 1, 1)
+            t_i, ind = timeit(lambda: baselines.fit_independent(
+                x, (y.astype(float) if not classification else
+                    2.0 * (y == 1) - 1 if ncls == 0 else
+                    jax.nn.one_hot(y, ncls) * 2 - 1),
+                kernel=ker, lam=lam, levels=levels, key=key), repeats=1)
+            p = ind.predict(xt)
+            if p.ndim > 1:
+                p = p.argmax(-1) if ncls else (p[:, 0] > 0).astype(int)
+            elif classification:
+                p = (p > 0).astype(int)
+            rows.append(dict(dataset=dname, method="independent", r=r,
+                             score=round(score(p), 4),
+                             train_s=round(t_i, 3), mem_units=n * r))
+    emit(rows, ["dataset", "method", "r", "score", "train_s", "mem_units"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

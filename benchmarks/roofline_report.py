@@ -1,0 +1,62 @@
+"""Roofline table generator: reads the dry-run JSONL artifacts and prints
+the per-(arch x shape x mesh) three-term roofline with bottleneck + useful-
+flops fraction.  This is the §Roofline source of truth in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load(path: str) -> list[dict]:
+    recs = {}
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+                   r.get("tag", "baseline"))
+            recs[key] = r  # last write wins (reruns supersede)
+    return list(recs.values())
+
+
+def fmt_row(r: dict) -> str:
+    rf = r.get("roofline", {})
+    mem = r.get("memory", {})
+    frac = r.get("useful_flops_frac")
+    hbm_gb = (mem.get("argument_bytes") or 0) / 1e9
+    return (f"{r['arch']:18s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{'OK' if r.get('ok') else 'FAIL':4s} "
+            f"{rf.get('compute_s', 0):.3e} {rf.get('memory_s', 0):.3e} "
+            f"{rf.get('collective_s', 0):.3e} {rf.get('bound', '?'):10s} "
+            f"{(frac if frac is not None else float('nan')):7.3f} "
+            f"{hbm_gb:8.2f}")
+
+
+def run(path: str = "artifacts/dryrun/results.jsonl", tag: str | None = None):
+    recs = load(path)
+    if tag:
+        recs = [r for r in recs if r.get("tag", "baseline") == tag]
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("arch               shape        mesh     ok   compute_s  "
+          "memory_s   collect_s  bound      useful  args_GB")
+    for r in recs:
+        print(fmt_row(r))
+    ok = sum(1 for r in recs if r.get("ok"))
+    print(f"# {ok}/{len(recs)} cells OK")
+    bounds = {}
+    for r in recs:
+        if r.get("ok") and "roofline" in r:
+            b = r["roofline"]["bound"]
+            bounds[b] = bounds.get(b, 0) + 1
+    print(f"# bottleneck distribution: {bounds}")
+    return recs
+
+
+if __name__ == "__main__":
+    run(*(sys.argv[1:] or []))

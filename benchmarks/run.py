@@ -1,0 +1,90 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all, CPU-scaled
+  PYTHONPATH=src python -m benchmarks.run fig3       # one
+
+Prints ``name,us_per_call,derived`` CSV blocks per benchmark plus the
+per-figure detail tables.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _section(name):
+    print(f"\n==== {name} " + "=" * max(0, 60 - len(name)))
+
+
+def main() -> None:
+    which = set(sys.argv[1:])
+
+    def want(name):
+        return not which or name in which
+
+    summary = []
+
+    if want("fig3"):
+        _section("fig3_stability (error-vs-sigma variance bands)")
+        from benchmarks import fig3_stability
+
+        t0 = time.perf_counter()
+        fig3_stability.run()
+        summary.append(("fig3_stability", time.perf_counter() - t0))
+
+    if want("fig4"):
+        _section("fig4_partitioning (+Table 2 overhead)")
+        from benchmarks import fig4_partitioning
+
+        t0 = time.perf_counter()
+        fig4_partitioning.run()
+        summary.append(("fig4_partitioning", time.perf_counter() - t0))
+
+    if want("fig56"):
+        _section("fig5/6 performance vs r / time / memory")
+        from benchmarks import fig56_perf_vs_r
+
+        t0 = time.perf_counter()
+        fig56_perf_vs_r.run()
+        summary.append(("fig56_perf_vs_r", time.perf_counter() - t0))
+
+    if want("fig7"):
+        _section("fig7 n-vs-r trade-off")
+        from benchmarks import fig7_n_vs_r
+
+        t0 = time.perf_counter()
+        fig7_n_vs_r.run()
+        summary.append(("fig7_n_vs_r", time.perf_counter() - t0))
+
+    if want("fig8"):
+        _section("fig8 kernel-PCA alignment")
+        from benchmarks import fig8_kpca
+
+        t0 = time.perf_counter()
+        fig8_kpca.run()
+        summary.append(("fig8_kpca", time.perf_counter() - t0))
+
+    if want("cost"):
+        _section("cost scaling of Alg 1/2/3 (paper §4.5)")
+        from benchmarks import cost_scaling
+
+        t0 = time.perf_counter()
+        cost_scaling.run()
+        summary.append(("cost_scaling", time.perf_counter() - t0))
+
+    if want("roofline"):
+        _section("roofline table (from dry-run artifacts)")
+        from benchmarks import roofline_report
+
+        t0 = time.perf_counter()
+        roofline_report.run()
+        summary.append(("roofline_report", time.perf_counter() - t0))
+
+    _section("summary")
+    print("name,us_per_call,derived")
+    for name, dt in summary:
+        print(f"{name},{dt * 1e6:.0f},wall_s={dt:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Gaussian-process hyper-parameter estimation by maximum likelihood — the
+paper's §6 'avenue of future work', implemented with the Algorithm-2
+structured logdet and full autodiff through the hierarchy.
+
+    PYTHONPATH=src python examples/gp_mle.py
+
+Maximizes Eq. 25's log marginal likelihood over (log sigma, log noise) with
+plain gradient descent; each objective evaluation is O(n r^2) instead of
+the O(n^3) the paper flags as the obstacle.  The partition/landmark
+randomness is frozen (paper §5.1: stable surfaces are a prerequisite for
+parameter estimation — and the HCK surface is the stable one).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import gp
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    n, d = 2048, 4
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.uniform(k1, (n, d))
+    true_sigma, true_noise = 0.35, 0.05
+    # draw y from a GP-ish generative process at the true hyper-params
+    centers = jax.random.uniform(k2, (64, d))
+    w = jax.random.normal(k3, (64,))
+    dist2 = jnp.sum((x[:, None] - centers[None]) ** 2, -1)
+    f = jnp.exp(-dist2 / (2 * true_sigma ** 2)) @ w
+    f = f / jnp.std(f)
+    y = f + true_noise * jax.random.normal(key, (n,))
+
+    nll = gp.mle_objective(x, y, levels=4, rank=64, key=jax.random.PRNGKey(7))
+    grad = jax.jit(jax.value_and_grad(nll, argnums=(0, 1)))
+
+    log_sigma = jnp.log(jnp.array(1.0))     # deliberately misspecified init
+    log_noise = jnp.log(jnp.array(0.5))
+    lr = 0.05
+    print(f"true: sigma={true_sigma} noise={true_noise}")
+    for step in range(40):
+        val, (gs, gn) = grad(log_sigma, log_noise)
+        log_sigma = log_sigma - lr * jnp.clip(gs / n, -0.5, 0.5) * n / n
+        log_noise = log_noise - lr * jnp.clip(gn / n, -0.5, 0.5) * n / n
+        if step % 8 == 0:
+            print(f"step {step:3d} nll/n={float(val)/n:.4f} "
+                  f"sigma={float(jnp.exp(log_sigma)):.3f} "
+                  f"noise={float(jnp.exp(log_noise)):.3f}")
+    print(f"final: sigma={float(jnp.exp(log_sigma)):.3f} "
+          f"noise={float(jnp.exp(log_noise)):.3f}  "
+          f"(true {true_sigma}/{true_noise})")
+
+
+if __name__ == "__main__":
+    main()

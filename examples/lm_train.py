@@ -1,0 +1,58 @@
+"""End-to-end LM training driver: train a ~100M-parameter granite-family
+model for a few hundred steps on the synthetic token pipeline, with
+checkpoint/restart and (optional) int8 gradient compression.
+
+    PYTHONPATH=src python examples/lm_train.py                 # CPU-sized
+    PYTHONPATH=src python examples/lm_train.py --full          # ~100M params
+
+The same step function is what the multi-pod dry-run lowers at the
+deepseek-67b scale; here it executes for real on the local device and the
+loss visibly drops on the structured synthetic stream.
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs import TrainConfig, get_arch
+from repro.data.pipeline import TokenPipeline
+from repro.training.checkpoint import CheckpointManager
+from repro.training.train_loop import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params, 200 steps (slow on 1 CPU core)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--compression", action="store_true")
+    args = ap.parse_args()
+
+    if args.full:
+        # granite family at ~100M: 12L x 768d x 12H, ff 2048, vocab 16k
+        cfg = dataclasses.replace(
+            get_arch("granite-3-2b"), n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=4, d_head=64, d_ff=2048, vocab=16384, dtype="float32")
+        steps = args.steps or 200
+        seq, batch = 256, 8
+    else:
+        cfg = get_arch("granite-3-2b").reduced()
+        steps = args.steps or 60
+        seq, batch = 64, 8
+
+    print(f"params ≈ {cfg.param_count()/1e6:.1f}M, steps={steps}")
+    tcfg = TrainConfig(
+        lr=3e-4 if args.full else 3e-3, warmup_steps=max(steps // 10, 1),
+        total_steps=steps, checkpoint_every=max(steps // 4, 10),
+        grad_compression="int8" if args.compression else "none")
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=seq, global_batch=batch)
+    with tempfile.TemporaryDirectory() as ckdir:
+        _, _, hist = train_loop(cfg, tcfg, pipe, steps=steps,
+                                manager=CheckpointManager(ckdir),
+                                log_every=max(steps // 10, 1))
+    first, last = hist[0][1]["loss"], hist[-1][1]["loss"]
+    print(f"loss: {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

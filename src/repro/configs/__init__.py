@@ -1,0 +1,11 @@
+"""Config registry: importing this package registers all assigned archs."""
+from repro.configs.base import (ArchConfig, MeshConfig, ShapeConfig, SHAPES,
+                                TrainConfig, get_arch, get_shape, list_archs)
+from repro.configs import (arctic_480b, deepseek_7b, deepseek_67b,
+                           granite_3_2b, hck_krr, mamba2_780m, mixtral_8x22b,
+                           musicgen_medium, qwen2_vl_7b, qwen3_32b, zamba2_7b)
+
+__all__ = [
+    "ArchConfig", "MeshConfig", "ShapeConfig", "SHAPES", "TrainConfig",
+    "get_arch", "get_shape", "list_archs",
+]

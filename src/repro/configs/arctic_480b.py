@@ -1,0 +1,21 @@
+"""arctic-480b — MoE 128 experts top-2 with a dense residual MLP path.
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000
+[hf:Snowflake/snowflake-arctic-base; hf]
+
+Arctic's dense-MoE hybrid: every block has a (small) dense residual MLP in
+parallel with the 128-expert top-2 MoE FFN.
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch
+def arctic_480b() -> ArchConfig:
+    return ArchConfig(
+        name="arctic-480b", family="moe",
+        n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+        d_ff=4864, vocab=32000, d_head=128,
+        rope_theta=1.0e4,
+        moe=True, n_experts=128, top_k=2, dense_residual=True,
+        attn_backend="auto",
+    )

@@ -1,0 +1,243 @@
+"""Config system: architecture + input-shape + mesh + run configs.
+
+Every assigned architecture registers an ``ArchConfig`` via
+``@register_arch``; ``--arch <id>`` in the launchers resolves through
+:func:`get_arch`.  ``ArchConfig.reduced()`` yields the small same-family
+config used by the per-arch CPU smoke tests (full configs are exercised
+only through the dry-run's ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+# ---------------------------------------------------------------------------
+# Architecture
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                     # 0 => attention-free
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                  # 0 => d_model // n_heads
+
+    # attention details
+    qk_norm: bool = False
+    rope_theta: float = 1.0e4
+    mrope: bool = False              # qwen2-vl M-RoPE (3-section rotary)
+    sliding_window: int = 0          # 0 => none (mixtral SWA = 4096)
+    attn_backend: str = "auto"       # auto | full | hck
+
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25    # expert capacity = cf * tokens*k / E
+    dense_residual: bool = False     # arctic: dense MLP residual beside MoE
+
+    # SSM (Mamba2/SSD)
+    ssm: bool = False
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    ssm_groups: int = 1
+
+    # hybrid (zamba2): one *shared* attention block applied every N layers
+    shared_attn_every: int = 0
+
+    # modality frontend stub: inputs are precomputed embeddings, not tokens
+    frontend: str = "none"           # none | patch (vlm) | frame (audio)
+
+    # HCK attention hyper-parameters (paper technique; used when backend=hck)
+    hck_leaf: int = 1024             # exact local block (n0)
+    hck_rank: int = 64               # landmarks per node (r)
+    hck_levels: int = 5              # tree depth over the sequence
+
+    dtype: str = "bfloat16"
+
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def has_attention(self) -> bool:
+        return self.n_heads > 0 or self.shared_attn_every > 0
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this config run long_500k? (SSM/hybrid native, or hck backend.)"""
+        return self.ssm or self.attn_backend == "hck"
+
+    def reduced(self) -> "ArchConfig":
+        """Same-family tiny config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            n_layers=max(2, min(3, self.n_layers)),
+            d_model=64,
+            n_heads=4 if self.n_heads else 0,
+            n_kv_heads=2 if self.n_kv_heads else 0,
+            d_head=16 if self.has_attention else 0,
+            d_ff=128,
+            vocab=256,
+            n_experts=min(self.n_experts, 4),
+            ssm_state=min(self.ssm_state, 16),
+            ssm_head_dim=16 if self.ssm else 0,
+            ssm_chunk=16,
+            sliding_window=min(self.sliding_window, 32),
+            shared_attn_every=2 if self.shared_attn_every else 0,
+            hck_leaf=32, hck_rank=8, hck_levels=2,
+            dtype="float32",
+        )
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        per_layer = 0
+        if self.ssm:
+            d_in = self.ssm_expand * d
+            nh = d_in // self.ssm_head_dim
+            per_layer += d * (2 * d_in + 2 * self.ssm_groups * self.ssm_state + nh)
+            per_layer += d_in * d + 2 * d
+        if self.n_heads:
+            hd = self.head_dim
+            qkv = d * (self.n_heads + 2 * self.n_kv_heads) * hd
+            per_layer += qkv + self.n_heads * hd * d
+        if self.moe:
+            per_layer += d * self.n_experts + self.n_experts * 3 * d * ff
+            if self.dense_residual:
+                per_layer += 3 * d * ff  # paper-reported arctic keeps both paths
+        elif not self.ssm:
+            per_layer += 3 * d * ff
+        per_layer += 2 * d
+        total = self.n_layers * per_layer + 2 * v * d
+        if self.shared_attn_every:
+            hd = self.head_dim or d // 32
+            total += d * 4 * 32 * hd  # one shared attention block
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if not self.moe:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        inactive = self.n_layers * (self.n_experts - self.top_k) * 3 * d * ff
+        return self.param_count() - inactive
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned set — applies to every architecture)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+    def reduced(self) -> "ShapeConfig":
+        return dataclasses.replace(
+            self, seq_len=min(self.seq_len, 64),
+            global_batch=min(self.global_batch, 2))
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_ARCHS: dict[str, Callable[[], ArchConfig]] = {}
+
+
+def register_arch(fn: Callable[[], ArchConfig]) -> Callable[[], ArchConfig]:
+    cfg = fn()
+    _ARCHS[cfg.name] = fn
+    return fn
+
+
+def get_arch(name: str) -> ArchConfig:
+    # importing the package populates the registry
+    import repro.configs  # noqa: F401
+
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_ARCHS)}")
+    return _ARCHS[name]()
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_ARCHS)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; have {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+# ---------------------------------------------------------------------------
+# Mesh / train configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    data: int = 16
+    model: int = 16
+    pods: int = 1                    # >1 adds the leading "pod" axis
+
+    @property
+    def num_devices(self) -> int:
+        return self.pods * self.data * self.model
+
+    @property
+    def axis_names(self) -> tuple:
+        return ("pod", "data", "model") if self.pods > 1 else ("data", "model")
+
+    @property
+    def shape(self) -> tuple:
+        if self.pods > 1:
+            return (self.pods, self.data, self.model)
+        return (self.data, self.model)
+
+    @property
+    def dp_axes(self) -> tuple:
+        return ("pod", "data") if self.pods > 1 else ("data",)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    microbatches: int = 1            # gradient accumulation / overlap unit
+    zero1: bool = True               # shard optimizer state over DP axes
+    grad_compression: str = "none"   # none | int8  (error feedback carried)
+    remat: str = "block"             # none | block  (checkpoint each layer)
+    seed: int = 0
+    checkpoint_every: int = 100
+    checkpoint_dir: str = "checkpoints"
+    keep_checkpoints: int = 3

@@ -1,0 +1,17 @@
+"""deepseek-67b — dense llama-arch.
+
+95L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=102400
+[arXiv:2401.02954; hf]
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch
+def deepseek_67b() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-67b", family="dense",
+        n_layers=95, d_model=8192, n_heads=64, n_kv_heads=8,
+        d_ff=22016, vocab=102400, d_head=128,
+        rope_theta=1.0e4,
+        attn_backend="auto",
+    )

@@ -1,0 +1,17 @@
+"""deepseek-7b — dense llama-arch.
+
+30L d_model=4096 32H (GQA kv=32, i.e. MHA) d_ff=11008 vocab=102400
+[arXiv:2401.02954; hf]
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch
+def deepseek_7b() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-7b", family="dense",
+        n_layers=30, d_model=4096, n_heads=32, n_kv_heads=32,
+        d_ff=11008, vocab=102400, d_head=128,
+        rope_theta=1.0e4,
+        attn_backend="auto",
+    )

@@ -1,0 +1,17 @@
+"""granite-3-2b — dense GQA.
+
+40L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=49155
+[hf:ibm-granite/granite-3.0-2b-base; hf]
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch
+def granite_3_2b() -> ArchConfig:
+    return ArchConfig(
+        name="granite-3-2b", family="dense",
+        n_layers=40, d_model=2048, n_heads=32, n_kv_heads=8,
+        d_ff=8192, vocab=49155, d_head=64,
+        rope_theta=1.0e4,
+        attn_backend="auto",
+    )

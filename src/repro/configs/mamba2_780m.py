@@ -1,0 +1,21 @@
+"""mamba2-780m — pure SSM (SSD, state-space duality), attention-free.
+
+48L d_model=1536 (attn-free) d_ff=0 vocab=50280, ssm_state=128
+[arXiv:2405.21060; unverified]
+
+The paper's kernel-attention technique is inapplicable here (no attention
+to approximate — DESIGN.md §Arch-applicability); long_500k runs natively
+via the O(1)-state recurrent decode path.
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch
+def mamba2_780m() -> ArchConfig:
+    return ArchConfig(
+        name="mamba2-780m", family="ssm",
+        n_layers=48, d_model=1536, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab=50280,
+        ssm=True, ssm_state=128, ssm_head_dim=64, ssm_expand=2,
+        attn_backend="auto",
+    )

@@ -1,0 +1,18 @@
+"""mixtral-8x22b — MoE 8 experts top-2, sliding-window attention.
+
+56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768
+[arXiv:2401.04088; hf]
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch
+def mixtral_8x22b() -> ArchConfig:
+    return ArchConfig(
+        name="mixtral-8x22b", family="moe",
+        n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8,
+        d_ff=16384, vocab=32768, d_head=128,
+        sliding_window=4096, rope_theta=1.0e6,
+        moe=True, n_experts=8, top_k=2,
+        attn_backend="auto",
+    )

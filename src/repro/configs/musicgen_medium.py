@@ -1,0 +1,21 @@
+"""musicgen-medium — audio decoder-only over EnCodec tokens.
+
+48L d_model=1536 24H (GQA kv=24, i.e. MHA) d_ff=6144 vocab=2048
+[arXiv:2306.05284; hf]
+
+Backbone only: the EnCodec frontend is a STUB — input_specs() provides
+precomputed frame embeddings (the codebook-summed token embeddings).
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch
+def musicgen_medium() -> ArchConfig:
+    return ArchConfig(
+        name="musicgen-medium", family="audio",
+        n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24,
+        d_ff=6144, vocab=2048, d_head=64,
+        rope_theta=1.0e4,
+        frontend="frame",
+        attn_backend="auto",
+    )

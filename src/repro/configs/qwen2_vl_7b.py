@@ -1,0 +1,22 @@
+"""qwen2-vl-7b — VLM backbone with M-RoPE and dynamic resolution.
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064
+[arXiv:2409.12191; hf]
+
+Backbone only, per the brief: the vision frontend is a STUB — input_specs()
+provides precomputed patch embeddings alongside text tokens.  M-RoPE splits
+the rotary dims into (temporal, height, width) sections.
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch
+def qwen2_vl_7b() -> ArchConfig:
+    return ArchConfig(
+        name="qwen2-vl-7b", family="vlm",
+        n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+        d_ff=18944, vocab=152064, d_head=128,
+        mrope=True, rope_theta=1.0e6,
+        frontend="patch",
+        attn_backend="auto",
+    )

@@ -1,0 +1,20 @@
+"""qwen3-32b — dense GQA with qk_norm.
+
+64L d_model=5120 64H (GQA kv=8) d_ff=25600 vocab=151936
+[hf:Qwen/Qwen3-8B; hf]
+
+qk_norm RMS-normalizes per-head q and k before rotary — this also makes the
+HCK attention backend's exp-kernel logits bounded (DESIGN.md §3).
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch
+def qwen3_32b() -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-32b", family="dense",
+        n_layers=64, d_model=5120, n_heads=64, n_kv_heads=8,
+        d_ff=25600, vocab=151936, d_head=80,
+        qk_norm=True, rope_theta=1.0e6,
+        attn_backend="auto",
+    )

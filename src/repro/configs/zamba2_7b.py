@@ -1,0 +1,23 @@
+"""zamba2-7b — hybrid: Mamba2 blocks + one shared attention block.
+
+81L d_model=3584 32H (GQA kv=32) d_ff=14336 vocab=32000, ssm_state=64
+[arXiv:2411.15242; unverified]
+
+Zamba2 interleaves a single *shared-weight* attention block (applied every
+6 Mamba2 layers here) with the Mamba2 trunk; d_ff is carried by the
+attention block's MLP.  long_500k runs natively (SSM trunk is O(n)); the
+shared attention block uses the paper's HCK backend at long context.
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+
+@register_arch
+def zamba2_7b() -> ArchConfig:
+    return ArchConfig(
+        name="zamba2-7b", family="hybrid",
+        n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+        d_ff=14336, vocab=32000, d_head=112,
+        ssm=True, ssm_state=64, ssm_head_dim=64, ssm_expand=2,
+        shared_attn_every=6,
+        attn_backend="hck",
+    )

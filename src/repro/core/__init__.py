@@ -1,0 +1,19 @@
+# The paper's primary contribution: the Hierarchically Compositional Kernel
+# (HCK) and its O(nr)/O(nr^2) matrix algebra, in level-batched JAX.
+from repro.core.kernels_fn import BaseKernel, available_kernels, get_kernel
+from repro.core.partition import (PartitionTree, auto_levels, build_partition,
+                                  pad_points, route)
+from repro.core.hck import HCKFactors, build_hck, to_dense
+from repro.core.hmatrix import (InverseFactors, apply_inverse, invert, logdet,
+                                matvec, solve)
+from repro.core.oos import OOSPlan, apply_plan, predict, prepare
+from repro.core import baselines, gp, kpca, krr, sampling
+
+__all__ = [
+    "BaseKernel", "available_kernels", "get_kernel",
+    "PartitionTree", "auto_levels", "build_partition", "pad_points", "route",
+    "HCKFactors", "build_hck", "to_dense",
+    "InverseFactors", "apply_inverse", "invert", "logdet", "matvec", "solve",
+    "OOSPlan", "apply_plan", "predict", "prepare",
+    "baselines", "gp", "kpca", "krr", "sampling",
+]

@@ -1,0 +1,260 @@
+"""Hierarchically Compositional Kernel — factor construction (paper §2–§3).
+
+Builds the recursively off-diagonal low-rank (ROLR) representation of
+``K_hck(X, X)`` for a balanced binary partition tree:
+
+  * ``Adiag[i] = K(X_i, X_i) (+ jitter)``                leaf blocks (n0, n0)
+  * ``U[i]    = K(X_i, Xl_p) K(Xl_p, Xl_p)^-1``          leaf bases  (n0, r)
+  * ``Sigma[l][p] = K(Xl_p, Xl_p) (+ jitter)``           middle factors (r, r)
+  * ``W[l][i] = K(Xl_i, Xl_p) K(Xl_p, Xl_p)^-1``         transfer ops (r, r)
+
+All factors are stacked per tree level so every traversal in
+``repro.core.hmatrix`` is a batched einsum (see DESIGN.md §2).
+
+Landmarks ``Xl_i`` are uniform random subsamples of each node's points
+(paper §4.2).  Setting ``shared_landmarks=True`` reuses the root landmark
+set at every node, which by the §4.2 remark reproduces the *flat*
+compositional kernel ``k_compositional`` exactly — used as a baseline and in
+the Theorem-4 test.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_fn import BaseKernel
+from repro.core.partition import PartitionTree, build_partition
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class HCKFactors:
+    """Stacked ROLR factors of K_hck(X, X) (+ the partition metadata)."""
+
+    x_sorted: Array            # (n, d) points in tree order
+    tree: PartitionTree
+    landmarks: tuple           # levels 0..L-1: (2**l, r, d)
+    sigma: tuple               # levels 0..L-1: (2**l, r, r)   K(Xl, Xl)+jit
+    sigma_cho: tuple           # cholesky(lower) of sigma, same shapes
+    w: tuple                   # levels 1..L-1: (2**l, r, r)
+    u: Array                   # (2**L, n0, r)
+    adiag: Array               # (2**L, n0, n0)
+
+    # -- static metadata -------------------------------------------------
+    @property
+    def levels(self) -> int:
+        return len(self.landmarks)
+
+    @property
+    def num_leaves(self) -> int:
+        return self.adiag.shape[0]
+
+    @property
+    def leaf_size(self) -> int:
+        return self.adiag.shape[1]
+
+    @property
+    def rank(self) -> int:
+        return self.landmarks[0].shape[1] if self.landmarks else 0
+
+    @property
+    def n(self) -> int:
+        return self.x_sorted.shape[0]
+
+    def tree_flatten(self):
+        leaves = (
+            self.x_sorted, self.tree, self.landmarks, self.sigma,
+            self.sigma_cho, self.w, self.u, self.adiag,
+        )
+        return leaves, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _sample_landmarks(key: Array, blocks: Array, r: int) -> Array:
+    """Uniform sample of r points per block: (B, m, d) -> (B, r, d)."""
+    bsz, m, d = blocks.shape
+    keys = jax.random.split(key, bsz)
+    idx = jax.vmap(lambda k: jax.random.permutation(k, m)[:r])(keys)  # (B, r)
+    flat = (idx + jnp.arange(bsz)[:, None] * m).reshape(-1)
+    return jnp.take(blocks.reshape(bsz * m, d), flat, axis=0).reshape(bsz, r, d)
+
+
+def _chol(mat: Array) -> Array:
+    """Batched lower Cholesky (stacked over axis 0)."""
+    return jnp.linalg.cholesky(mat)
+
+
+def _cho_solve(lower: Array, rhs: Array) -> Array:
+    """Batched SPD solve with precomputed lower factors: (B,r,r),(B,r,k)."""
+    solve = jax.scipy.linalg.cho_solve
+    return jax.vmap(lambda l, b: solve((l, True), b))(lower, rhs)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("levels", "rank", "method", "shared_landmarks", "kernel"),
+)
+def build_hck(
+    x: Array,
+    *,
+    levels: int,
+    rank: int,
+    key: Array,
+    kernel: BaseKernel,
+    method: str = "rp",
+    shared_landmarks: bool = False,
+) -> HCKFactors:
+    """Partition ``x`` and instantiate all HCK factors.
+
+    Cost (paper §4.5): O(n d log(n/r)) partitioning + O(n r (r + d)) factor
+    instantiation.  Everything is batched over nodes of one level.
+    """
+    n, d = x.shape
+    n_leaves = 1 << levels
+    if n % n_leaves != 0:
+        raise ValueError(f"n={n} not divisible by 2**levels={n_leaves}")
+    n0 = n // n_leaves
+    if rank > n0:
+        raise ValueError(f"rank {rank} exceeds leaf size {n0} (paper §4.4)")
+
+    kpart, key = jax.random.split(key)
+    x_sorted, tree = build_partition(x, levels, kpart, method=method)
+
+    # --- landmarks: uniform subsample of each internal node's block ------
+    landmarks = []
+    for lvl in range(levels):
+        key, sub = jax.random.split(key)
+        blocks = x_sorted.reshape(1 << lvl, n // (1 << lvl), d)
+        landmarks.append(_sample_landmarks(sub, blocks, rank))
+    if shared_landmarks and levels > 0:
+        # §4.2 remark: same landmark set everywhere == flat k_compositional.
+        root = landmarks[0]
+        landmarks = [jnp.broadcast_to(root, (1 << lvl, rank, d)).reshape(1 << lvl, rank, d)
+                     for lvl in range(levels)]
+    landmarks = tuple(landmarks)
+
+    # --- middle factors Sigma + their Cholesky ---------------------------
+    gram = jax.vmap(kernel.gram)
+    sigma = tuple(gram(lm) for lm in landmarks)
+    sigma_cho = tuple(_chol(s) for s in sigma)
+
+    # --- leaf factors -----------------------------------------------------
+    leaves = x_sorted.reshape(n_leaves, n0, d)
+    adiag = gram(leaves)                                     # (2**L, n0, n0)
+    if levels == 0:
+        return HCKFactors(x_sorted, tree, (), (), (), (),
+                          jnp.zeros((1, n0, 0), x.dtype), adiag)
+
+    # U_i = K(X_i, Xl_p) inv(K(Xl_p, Xl_p)); parent of leaf i is i//2.
+    lm_parent = jnp.repeat(landmarks[-1], 2, axis=0)         # (2**L, r, d)
+    cho_parent = jnp.repeat(sigma_cho[-1], 2, axis=0)
+    kxu = jax.vmap(kernel.cross)(leaves, lm_parent)          # (2**L, n0, r)
+    u = jnp.swapaxes(_cho_solve(cho_parent, jnp.swapaxes(kxu, 1, 2)), 1, 2)
+
+    # --- transfer operators W at levels 1..L-1 ----------------------------
+    w = []
+    for lvl in range(1, levels):
+        lm_p = jnp.repeat(landmarks[lvl - 1], 2, axis=0)     # (2**l, r, d)
+        cho_p = jnp.repeat(sigma_cho[lvl - 1], 2, axis=0)
+        kip = jax.vmap(kernel.cross)(landmarks[lvl], lm_p)   # (2**l, r, r)
+        w.append(jnp.swapaxes(_cho_solve(cho_p, jnp.swapaxes(kip, 1, 2)), 1, 2))
+    return HCKFactors(x_sorted, tree, landmarks, sigma, sigma_cho, tuple(w), u, adiag)
+
+
+# ---------------------------------------------------------------------------
+# Dense reconstruction — oracle for tests/benchmarks only (O(n^2) memory).
+# ---------------------------------------------------------------------------
+
+def to_dense(f: HCKFactors) -> Array:
+    """Materialize K_hck(X, X) from the factors (test oracle, host loop)."""
+    n0, levels = f.leaf_size, f.levels
+    n = f.n
+    if levels == 0:
+        return f.adiag[0]
+    a = jnp.zeros((n, n), dtype=f.adiag.dtype)
+    # leaf diagonal blocks
+    for i in range(f.num_leaves):
+        sl = slice(i * n0, (i + 1) * n0)
+        a = a.at[sl, sl].set(f.adiag[i])
+    # effective bases per level: ubig[l][i] spans node i's whole block
+    ubig = [np.empty(0)] * (levels + 1)
+    ubig[levels] = [f.u[i] for i in range(f.num_leaves)]
+    for lvl in range(levels - 1, 0, -1):
+        cur = []
+        for p in range(1 << lvl):
+            stacked = jnp.concatenate(
+                [ubig[lvl + 1][2 * p], ubig[lvl + 1][2 * p + 1]], axis=0)
+            cur.append(stacked @ f.w[lvl - 1][p])
+        ubig[lvl] = cur
+    # off-diagonal sibling blocks at every level
+    for lvl in range(levels, 0, -1):
+        block = n // (1 << lvl)
+        for p in range(1 << (lvl - 1)):
+            i, j = 2 * p, 2 * p + 1
+            ui, uj = ubig[lvl][i], ubig[lvl][j]
+            cross = ui @ f.sigma[lvl - 1][p] @ uj.T
+            ri = slice(i * block, (i + 1) * block)
+            rj = slice(j * block, (j + 1) * block)
+            a = a.at[ri, rj].set(cross)
+            a = a.at[rj, ri].set(cross.T)
+    return a
+
+
+def dense_reference_kernel(
+    x_sorted: Array, f: HCKFactors, kernel: BaseKernel
+) -> Array:
+    """Direct evaluation of k_hck via the recursive *definition* (Eq. 13-16).
+
+    Independent of the factor algebra — validates ``to_dense`` and the whole
+    construction against the paper's formulas.  O(n^2 r) host loop; tests only.
+    """
+    n0, levels = f.leaf_size, f.levels
+    n = x_sorted.shape[0]
+    if levels == 0:
+        return kernel.gram(x_sorted)
+
+    def psi_chain(pts: Array, leaf: int, up_to_level: int) -> Array:
+        """psi^{(anc)}(pts, Xl_anc) for the ancestor of ``leaf`` at tree level
+        ``up_to_level`` (0-based internal level).  Eq. (14) expansion."""
+        node = leaf >> 1  # parent at level L-1
+        lvl = levels - 1
+        phi = kernel.cross(pts, f.landmarks[lvl][node])      # k(x, Xl_p)
+        while lvl > up_to_level:
+            # move one level up: phi <- phi K(Xl,Xl)^-1 K(Xl, Xl_parent)
+            parent = node >> 1
+            kup = kernel.cross(f.landmarks[lvl][node], f.landmarks[lvl - 1][parent])
+            sol = jax.scipy.linalg.cho_solve((f.sigma_cho[lvl][node], True), kup)
+            phi = phi @ sol
+            node, lvl = parent, lvl - 1
+        return phi, node
+
+    a = jnp.zeros((n, n), dtype=x_sorted.dtype)
+    leaves = x_sorted.reshape(f.num_leaves, n0, -1)
+    for i in range(f.num_leaves):
+        for j in range(i, f.num_leaves):
+            ri = slice(i * n0, (i + 1) * n0)
+            rj = slice(j * n0, (j + 1) * n0)
+            if i == j:
+                a = a.at[ri, rj].set(kernel.gram(leaves[i]))
+                continue
+            # least common ancestor: differs in the top bit_length(i^j) bits,
+            # so the LCA sits at internal level  levels - bit_length(i^j).
+            lca_level = levels - (i ^ j).bit_length()
+            phi_i, node_i = psi_chain(leaves[i], i, lca_level)
+            phi_j, node_j = psi_chain(leaves[j], j, lca_level)
+            assert node_i == node_j
+            mid = jax.scipy.linalg.cho_solve(
+                (f.sigma_cho[lca_level][node_i], True), phi_j.T)
+            cross = phi_i @ mid
+            a = a.at[ri, rj].set(cross)
+            a = a.at[rj, ri].set(cross.T)
+    return a

@@ -1,0 +1,177 @@
+"""Out-of-sample extension — Algorithm 3 (paper §3.3).
+
+Computes ``z = w^T k_hck(X, x)`` for a batch of query points without ever
+materializing the n-vector ``k_hck(X, x)``:
+
+  phase 1 (query independent, O(n r)):  the COMMON-UPWARD pass over ``w``
+  produces per-node coefficients ``c_l = Sigma_p^T (upward c of sibling)``.
+
+  phase 2 (per query, O(r^2 log(n/r) + (n0 + r) d)):  route x to its leaf,
+  evaluate k(Xl_p, x) at the leaf's parent, then walk the root path
+  ``d <- W^T d`` accumulating ``c^T d``, plus the exact local term
+  ``w_leaf^T k(X_leaf, x)``.
+
+TPU adaptation: queries are batched; the "walk" is a gather of each query's
+per-level node factors (W, c) followed by tiny batched matmuls — no
+recursion, no host control flow.  Decode-time hierarchical attention
+(models/attention_backends.py) reuses exactly this routine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hck import HCKFactors
+from repro.core.kernels_fn import BaseKernel
+from repro.core.partition import route
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class OOSPlan:
+    """Query-independent precomputation (phase 1) for a weight matrix w.
+
+    ``c[l]``: (2**l, r, k) — the exchange coefficients per node and RHS.
+    ``w_leaf``: (2**L, n0, k) — w in tree order, per leaf.
+    """
+
+    c: tuple
+    w_leaf: Array
+
+    def tree_flatten(self):
+        return (self.c, self.w_leaf), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _pair_sum(x: Array) -> Array:
+    return x.reshape(x.shape[0] // 2, 2, *x.shape[1:]).sum(axis=1)
+
+
+def _pair_swap(x: Array) -> Array:
+    return x.reshape(x.shape[0] // 2, 2, *x.shape[1:])[:, ::-1].reshape(x.shape)
+
+
+def _rep2(x: Array) -> Array:
+    return jnp.repeat(x, 2, axis=0)
+
+
+@jax.jit
+def prepare(f: HCKFactors, w: Array) -> OOSPlan:
+    """Phase 1: COMMON-UPWARD over w (w given in tree order), O(n r)."""
+    squeeze = w.ndim == 1
+    if squeeze:
+        w = w[:, None]
+    levels, n0, k = f.levels, f.leaf_size, w.shape[1]
+    wl = w.reshape(f.num_leaves, n0, k)
+    if levels == 0:
+        return OOSPlan((), wl)
+    e = {levels: jnp.einsum("pnr,pnk->prk", f.u, wl)}
+    for lvl in range(levels - 1, 0, -1):
+        s = _pair_sum(e[lvl + 1])
+        e[lvl] = jnp.einsum("pab,pak->pbk", f.w[lvl - 1], s)
+    # c_l = Sigma_p^T e_sibling  for each node l (Sigma symmetric -> Sigma)
+    c = tuple(
+        jnp.einsum("qba,qbk->qak", _rep2(f.sigma[lvl - 1]), _pair_swap(e[lvl]))
+        for lvl in range(1, levels + 1)
+    )
+    return OOSPlan(c, wl)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel",))
+def apply_plan(
+    f: HCKFactors, plan: OOSPlan, queries: Array, kernel: BaseKernel
+) -> Array:
+    """Phase 2 for a batch of queries: (q, d) -> (q, k) values of w^T k_hck(X, .)."""
+    levels, n0 = f.levels, f.leaf_size
+    q = queries.shape[0]
+    leaf = route(f.tree, queries) if levels > 0 else jnp.zeros((q,), jnp.int32)
+
+    # exact local term: w_leaf^T k(X_leaf, x)
+    xl = f.x_sorted.reshape(f.num_leaves, n0, -1)[leaf]          # (q, n0, d)
+    kv = jax.vmap(lambda pts, x: kernel.cross(pts, x[None])[:, 0])(xl, queries)
+    z = jnp.einsum("qnk,qn->qk", plan.w_leaf[leaf], kv)
+    if levels == 0:
+        return z
+
+    # d at the leaf's parent: K(Xl_p, Xl_p)^{-1} k(Xl_p, x)
+    parent = leaf >> 1
+    lm = f.landmarks[levels - 1][parent]                         # (q, r, d)
+    cho = f.sigma_cho[levels - 1][parent]                        # (q, r, r)
+    kx = jax.vmap(lambda pts, x: kernel.cross(pts, x[None])[:, 0])(lm, queries)
+    d = jax.vmap(lambda l, b: jax.scipy.linalg.cho_solve((l, True), b))(cho, kx)
+    z = z + jnp.einsum("qrk,qr->qk", plan.c[levels - 1][leaf], d)
+
+    # walk up: d <- W_node^T d ; z += c_node^T d  (nodes at levels L-1 .. 1)
+    node = parent
+    for lvl in range(levels - 1, 0, -1):
+        wmat = f.w[lvl - 1][node]                                # (q, r, r)
+        d = jnp.einsum("qba,qb->qa", wmat, d)
+        z = z + jnp.einsum("qrk,qr->qk", plan.c[lvl - 1][node], d)
+        node = node >> 1
+    return z
+
+
+def predict(
+    f: HCKFactors, w: Array, queries: Array, kernel: BaseKernel
+) -> Array:
+    """Convenience: prepare + apply.  w in tree order, shape (n,) or (n, k)."""
+    squeeze = w.ndim == 1
+    plan = prepare(f, w if w.ndim > 1 else w[:, None])
+    z = apply_plan(f, plan, queries, kernel)
+    return z[:, 0] if squeeze else z
+
+
+# ---------------------------------------------------------------------------
+# Reference path: build k_hck(X, x) densely via the kernel definition.
+# ---------------------------------------------------------------------------
+
+def oos_vector_reference(
+    f: HCKFactors, query: Array, kernel: BaseKernel
+) -> Array:
+    """k_hck(X, x) as an explicit n-vector (Eq. 13-16 with x routed to its
+    leaf).  Host-loop oracle used by tests."""
+    levels, n0 = f.levels, f.leaf_size
+    if levels == 0:
+        return kernel.cross(f.x_sorted, query[None])[:, 0]
+    leaf = int(route(f.tree, query[None])[0])
+    out = jnp.zeros((f.n,), dtype=f.x_sorted.dtype)
+
+    # local block: exact kernel
+    sl = slice(leaf * n0, (leaf + 1) * n0)
+    out = out.at[sl].set(kernel.cross(f.x_sorted[sl], query[None])[:, 0])
+
+    # psi chain of the query up its path
+    node, lvl = leaf >> 1, levels - 1
+    phi = kernel.cross(f.landmarks[lvl][node], query[None])[:, 0]  # (r,)
+    phi = jax.scipy.linalg.cho_solve((f.sigma_cho[lvl][node], True), phi)
+    # phi now = K(Xl,Xl)^{-1} k(Xl, x) in the leaf-parent basis
+
+    # effective bases (same construction as to_dense)
+    ubig = {levels: [f.u[i] for i in range(f.num_leaves)]}
+    for l2 in range(levels - 1, 0, -1):
+        ubig[l2] = []
+        for p in range(1 << l2):
+            stacked = jnp.concatenate(
+                [ubig[l2 + 1][2 * p], ubig[l2 + 1][2 * p + 1]], axis=0)
+            ubig[l2].append(stacked @ f.w[l2 - 1][p])
+
+    cur_node, cur_lvl = leaf, levels
+    d = phi
+    while cur_lvl > 0:
+        parent = cur_node >> 1
+        sib = cur_node ^ 1
+        block = f.n // (1 << cur_lvl)
+        rs = slice(sib * block, (sib + 1) * block)
+        out = out.at[rs].set(ubig[cur_lvl][sib] @ (f.sigma[cur_lvl - 1][parent] @ d))
+        cur_node, cur_lvl = parent, cur_lvl - 1
+        if cur_lvl > 0:
+            d = f.w[cur_lvl - 1][cur_node].T @ d
+    return out

@@ -1,0 +1,198 @@
+"""Hierarchical domain partitioning (paper §4.1).
+
+The paper recommends *random projection* partitioning: pick a random
+direction, project, split at the median so the two halves are balanced.
+(PCA partitioning is also provided for the Fig-4/Table-2 benchmark.)
+
+TPU adaptation: instead of a pointer-based recursive tree we build a
+*balanced binary* tree level-synchronously.  At level ``l`` the (permuted)
+point set is viewed as ``(2**l, m, d)`` and every block is split in one
+batched projection + argsort.  The resulting permutation lays each leaf out
+contiguously, so every downstream factor is a stacked dense array.
+
+The tree is recorded as per-level ``directions`` and ``thresholds`` so that
+out-of-sample points are routed to their leaf with ``l`` batched gathers
+(§3.3 requires membership only along the root-leaf path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PartitionTree:
+    """Balanced binary partition of n = n_leaves * leaf_size points.
+
+    Attributes
+    ----------
+    perm:        (n,) int32 — permutation mapping sorted position -> original index.
+    directions:  tuple over levels 0..L-1 of (2**l, d) float arrays.
+    thresholds:  tuple over levels 0..L-1 of (2**l,) floats (median split points).
+    """
+
+    perm: Array
+    directions: tuple
+    thresholds: tuple
+
+    @property
+    def levels(self) -> int:
+        return len(self.directions)
+
+    @property
+    def num_leaves(self) -> int:
+        return 1 << self.levels
+
+    def tree_flatten(self):
+        return (self.perm, self.directions, self.thresholds), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _split_level(x: Array, perm: Array, direction: Array):
+    """Split every block of ``x``: (B, m, d) -> reordered halves + thresholds.
+
+    Balanced median split: sort by projected coordinate, cut at m//2.
+    """
+    bsz, m, d = x.shape
+    proj = jnp.einsum("bmd,bd->bm", x, direction)
+    # indices are integers (no gradient) — stop_gradient keeps autodiff off
+    # argsort's internal batched gather, which lacks a VJP in this jax
+    # version; gradients flow through the value gathers below
+    order = jnp.argsort(jax.lax.stop_gradient(proj), axis=1)
+    # flat-index gathers (plain 1-D take differentiates cleanly; batched
+    # take_along_axis lacks a VJP in this jax version)
+    flat_idx = (order + jnp.arange(bsz)[:, None] * m).reshape(-1)
+    x = jnp.take(x.reshape(bsz * m, d), flat_idx, axis=0).reshape(bsz, m, d)
+    perm = jnp.take(perm.reshape(-1), flat_idx)
+    sorted_proj = jnp.take(proj.reshape(-1), flat_idx).reshape(bsz, m)
+    # threshold = midpoint between the two order statistics around the cut
+    thr = 0.5 * (sorted_proj[:, m // 2 - 1] + sorted_proj[:, m // 2])
+    return x.reshape(bsz * 2, m // 2, -1), perm, thr
+
+
+def _rp_direction(key: Array, x: Array) -> Array:
+    """Random unit directions, one per block: (B, d)."""
+    d = x.shape[-1]
+    v = jax.random.normal(key, (x.shape[0], d), dtype=x.dtype)
+    return v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-12)
+
+
+def _pca_direction(key: Array, x: Array) -> Array:
+    """Dominant right singular vector of the centered block via power iteration.
+
+    Used only by the Fig-4/Table-2 comparison; the paper's recommended
+    production path is random projection.
+    """
+    del key
+    xc = x - jnp.mean(x, axis=1, keepdims=True)           # (B, m, d)
+    cov = jnp.einsum("bmd,bme->bde", xc, xc)              # (B, d, d)
+    v = jnp.ones((x.shape[0], x.shape[-1]), dtype=x.dtype)
+    v = v / jnp.linalg.norm(v, axis=-1, keepdims=True)
+
+    def body(_, v):
+        v = jnp.einsum("bde,be->bd", cov, v)
+        return v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-12)
+
+    return jax.lax.fori_loop(0, 16, body, v)
+
+
+_DIRECTION_FNS = {"rp": _rp_direction, "pca": _pca_direction}
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "method"))
+def build_partition(
+    x: Array, levels: int, key: Array, method: str = "rp"
+) -> tuple[Array, PartitionTree]:
+    """Partition ``x`` (n, d) into 2**levels balanced leaves.
+
+    n must be divisible by 2**levels (see :func:`pad_points`).
+
+    Returns (x_sorted, tree): points permuted to tree order, plus the
+    routing record.
+    """
+    n, d = x.shape
+    if n % (1 << levels) != 0:
+        raise ValueError(f"n={n} not divisible by 2**levels={1 << levels}")
+    dir_fn = _DIRECTION_FNS[method]
+    perm = jnp.arange(n, dtype=jnp.int32)
+    blocks = x.reshape(1, n, d)
+    dirs, thrs = [], []
+    for lvl in range(levels):
+        key, sub = jax.random.split(key)
+        direction = dir_fn(sub, blocks)
+        blocks, perm, thr = _split_level(blocks, perm, direction)
+        dirs.append(direction)
+        thrs.append(thr)
+    x_sorted = blocks.reshape(n, d)
+    return x_sorted, PartitionTree(perm, tuple(dirs), tuple(thrs))
+
+
+@jax.jit
+def route(tree: PartitionTree, queries: Array) -> Array:
+    """Leaf index for each query point: (q, d) -> (q,) int32.
+
+    Descends the recorded hyperplanes: O(L) gathers, each O(q d).  This is
+    the "determination of which leaf j the point x falls in" of §3.3 and the
+    out-of-sample membership rule of random projection (§4.1 last line).
+    """
+    q = queries.shape[0]
+    node = jnp.zeros((q,), dtype=jnp.int32)
+    for lvl in range(len(tree.directions)):
+        dirs = tree.directions[lvl][node]            # (q, d)
+        thr = tree.thresholds[lvl][node]             # (q,)
+        t = jnp.einsum("qd,qd->q", queries, dirs)
+        node = 2 * node + (t > thr).astype(jnp.int32)
+    return node
+
+
+def pad_points(x: Array, y: Array | None, leaf_size: int, levels: int, key: Array):
+    """Pad (x, y) so n == leaf_size * 2**levels.
+
+    Padding repeats uniformly-sampled existing points with tiny jitter (so
+    Gram blocks stay invertible) and COPIES their targets (a zero target
+    would bias the fit near the duplicated sites; a duplicate with the same
+    target only reweights it slightly).  A mask marks real rows.
+    Exact-size inputs round-trip unchanged.
+    """
+    n = x.shape[0]
+    target = leaf_size * (1 << levels)
+    if n > target:
+        raise ValueError(f"n={n} exceeds capacity {target}")
+    if n == target:
+        mask = jnp.ones((n,), dtype=bool)
+        return x, y, mask
+    k1, k2 = jax.random.split(key)
+    idx = jax.random.randint(k1, (target - n,), 0, n)
+    noise = 1e-4 * jax.random.normal(k2, (target - n, x.shape[1]), dtype=x.dtype)
+    x_pad = jnp.concatenate([x, x[idx] + noise], axis=0)
+    y_pad = None
+    if y is not None:
+        y_pad = jnp.concatenate([y, y[idx]], axis=0)
+    mask = jnp.concatenate([jnp.ones((n,), bool), jnp.zeros((target - n,), bool)])
+    return x_pad, y_pad, mask
+
+
+def auto_levels(n: int, leaf_size: int) -> int:
+    """Largest L with leaf_size * 2**L <= n (paper Eq. 22 sizing)."""
+    levels = 0
+    while leaf_size * (1 << (levels + 1)) <= n:
+        levels += 1
+    return levels
+
+
+def auto_levels_ceil(n: int, leaf_size: int) -> int:
+    """Smallest L with leaf_size * 2**L >= n (padding-capacity sizing)."""
+    levels = 0
+    while leaf_size * (1 << levels) < n:
+        levels += 1
+    return levels

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: causal GQA flash attention (online softmax).
+
+The LM-side compute hot spot shared by every attention architecture in the
+assigned pool.  Streaming KV blocks through VMEM with running (m, l, acc)
+statistics keeps the working set at O(bq*d + bk*d) instead of O(S^2).
+
+Grid: (batch*q_heads, S/bq, S/bk) — KV innermost so the VMEM scratch
+accumulators persist across KV tiles (TPU revisiting semantics).  Causal
+blocks strictly above the diagonal are skipped entirely (`pl.when`), the
+diagonal block gets an elementwise mask.  GQA maps query head h to KV head
+h // (Hq // Hkv) in the BlockSpec index maps — no KV replication in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _body(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+          *, scale: float, bq: int, bk: int, causal: bool):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: skip blocks entirely above the diagonal
+    run = (not causal) or (ik * bk <= iq * bq + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0]                                        # (bq, d)
+        k = k_ref[0]                                        # (bk, d)
+        v = v_ref[0]                                        # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale     # (bq, bk)
+        if causal:
+            rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[:, :1]                               # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)           # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                              # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                     # (bq, 1)
+        l_ref[...] = alpha * l_ref[...] + jnp.broadcast_to(
+            jnp.sum(p, axis=1, keepdims=True), l_ref.shape)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        l = l_ref[:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: Array, k: Array, v: Array, *,
+    causal: bool = True, bq: int = 128, bk: int = 128, interpret: bool = True,
+) -> Array:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D); Hq % Hkv == 0; S % bq == 0.
+
+    Returns (B, Hq, S, D) in q.dtype (accumulation in f32).
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0 and s % bq == 0 and s % bk == 0
+    group = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+
+    qr = q.reshape(b * hq, s, d)
+    kr = k.reshape(b * hkv, s, d)
+    vr = v.reshape(b * hkv, s, d)
+
+    def kv_index(bh, iq, ik):
+        return (bh // hq) * hkv + (bh % hq) // group, ik, 0
+
+    out = pl.pallas_call(
+        functools.partial(_body, scale=scale, bq=bq, bk=bk, causal=causal),
+        grid=(b * hq, s // bq, s // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, s, d)

@@ -1,0 +1,31 @@
+"""Jit'd wrapper for flash attention with padding + backend selection.
+
+``backend="auto"`` picks Pallas for TPU-aligned shapes and the jnp oracle
+otherwise (tiny smoke-test shapes).  The models layer calls this, so a real
+TPU deployment flips one flag (interpret=False) without touching models.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+Array = jax.Array
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "backend", "interpret", "bq", "bk"))
+def attention(
+    q: Array, k: Array, v: Array, *,
+    causal: bool = True, backend: str = "auto",
+    interpret: bool = True, bq: int = 128, bk: int = 128,
+) -> Array:
+    s = q.shape[2]
+    if backend == "ref" or (backend == "auto" and (s % bq != 0 or s % bk != 0)):
+        return attention_ref(q, k, v, causal=causal)
+    return flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                           interpret=interpret)

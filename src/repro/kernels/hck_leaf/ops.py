@@ -1,0 +1,27 @@
+"""Jit'd wrapper for the fused HCK leaf matvec."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hck_leaf.hck_leaf import hck_leaf_matvec
+from repro.kernels.hck_leaf.ref import hck_leaf_matvec_ref
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def leaf_matvec(
+    adiag: Array, u: Array, b: Array, *,
+    interpret: bool = True, use_pallas: bool = True,
+) -> tuple[Array, Array]:
+    """Fused leaf stage; falls back to the oracle when use_pallas=False
+    (the CPU-containerized default in repro.core keeps XLA fusion; the
+    Pallas path is the TPU deployment path)."""
+    if not use_pallas:
+        return hck_leaf_matvec_ref(adiag, u, b)
+    return hck_leaf_matvec(
+        adiag.astype(jnp.float32), u.astype(jnp.float32),
+        b.astype(jnp.float32), interpret=interpret)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused HCK leaf matvec."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def hck_leaf_matvec_ref(adiag: Array, u: Array, b: Array) -> tuple[Array, Array]:
+    y = jnp.einsum("pnm,pmk->pnk", adiag.astype(jnp.float32),
+                   b.astype(jnp.float32))
+    c = jnp.einsum("pnr,pnk->prk", u.astype(jnp.float32),
+                   b.astype(jnp.float32))
+    return y, c

@@ -1,0 +1,57 @@
+"""Jit'd public wrapper for kernel_tile: pads to block multiples, dispatches
+Pallas on TPU-shaped inputs, falls back to the jnp oracle for tiny shapes
+where padding overhead would dominate."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kernel_tile.kernel_tile import SUPPORTED, kernel_tile
+from repro.kernels.kernel_tile.ref import pairwise_kernel_ref
+
+Array = jax.Array
+
+
+def _pad_to(a: Array, mult: int, axis: int) -> Array:
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("name", "sigma", "bn", "bm", "bd", "interpret", "min_pallas"),
+)
+def pairwise_kernel(
+    x: Array,
+    y: Array,
+    *,
+    name: str = "gaussian",
+    sigma: float = 1.0,
+    bn: int = 128,
+    bm: int = 128,
+    bd: int = 128,
+    interpret: bool = True,
+    min_pallas: int = 128,
+) -> Array:
+    """K(X, Y) with automatic padding; output is (n, m) float32.
+
+    ``interpret=True`` executes the Pallas body on CPU (this container);
+    on a real TPU pass ``interpret=False``.
+    """
+    if name not in SUPPORTED:
+        raise ValueError(f"{name!r} not in {SUPPORTED}")
+    n, m = x.shape[0], y.shape[0]
+    if max(n, m) < min_pallas:
+        return pairwise_kernel_ref(x, y, name=name, sigma=sigma)
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), bn, 0), bd, 1)
+    yp = _pad_to(_pad_to(y.astype(jnp.float32), bm, 0), bd, 1)
+    out = kernel_tile(xp, yp, name=name, sigma=sigma, bn=bn, bm=bm, bd=bd,
+                      interpret=interpret)
+    return out[:n, :m]

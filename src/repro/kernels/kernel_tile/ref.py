@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the kernel_tile Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def pairwise_kernel_ref(
+    x: Array, y: Array, *, name: str = "gaussian", sigma: float = 1.0
+) -> Array:
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    if name == "laplace":
+        d1 = jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+        return jnp.exp(-d1 / sigma)
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    yy = jnp.sum(y * y, axis=-1)[None, :]
+    d2 = jnp.maximum(xx + yy - 2.0 * (x @ y.T), 0.0)
+    if name == "gaussian":
+        return jnp.exp(d2 * (-0.5 / (sigma * sigma)))
+    if name == "imq":
+        return sigma / jnp.sqrt(d2 + sigma * sigma)
+    raise ValueError(name)

@@ -1,0 +1,19 @@
+"""Jit'd wrapper for the SSD intra-chunk Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_chunk.ref import ssd_intra_chunk_ref
+from repro.kernels.ssd_chunk.ssd_chunk import ssd_intra_chunk
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def intra_chunk(c: Array, b: Array, xdt: Array, cs: Array, *,
+                use_pallas: bool = True, interpret: bool = True) -> Array:
+    if not use_pallas:
+        return ssd_intra_chunk_ref(c, b, xdt, cs)
+    return ssd_intra_chunk(c, b, xdt, cs, interpret=interpret)

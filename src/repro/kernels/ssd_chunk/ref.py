@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ssd_intra_chunk_ref(c: Array, b: Array, xdt: Array, cs: Array) -> Array:
+    """c, b: (BH, nc, Q, N); xdt: (BH, nc, Q, P); cs: (BH, nc, Q)."""
+    scores = jnp.einsum("zcin,zcjn->zcij", c.astype(jnp.float32),
+                        b.astype(jnp.float32))
+    q = c.shape[2]
+    decay = jnp.exp(cs[..., :, None] - cs[..., None, :])
+    mask = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    l_mat = jnp.where(mask, decay, 0.0)
+    return jnp.einsum("zcij,zcjp->zcip", scores * l_mat,
+                      xdt.astype(jnp.float32))

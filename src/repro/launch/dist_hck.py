@@ -1,0 +1,263 @@
+"""Distributed HCK: the partition tree's top levels ARE the device mesh.
+
+The paper's own scaling story (DESIGN.md §4): with n points split over P
+devices, the top log2(P) tree levels map 1:1 onto mesh coordinates — device
+p owns the contiguous leaf range whose path prefix equals p.
+
+  * Algorithm 1's leaf stage and every level BELOW the device level run as
+    purely local batched einsums (the existing repro.core.hmatrix code);
+  * the device level connects through per-device transfer operators
+    ``w_dev`` (the W factor of each device-root node);
+  * the tiny top tree (log2 P levels of (r, r) factors) is REPLICATED and
+    evaluated redundantly on every device from one all_gather of the
+    per-device root coefficients — O(P r k) wire bytes per matvec, the
+    parallel-FMM "replicate the tree top" trick.  The collective term is
+    O(P r k / link_bw), negligible against the O((n/P) r) local work.
+
+Distributed KRR = CG on the distributed matvec, preconditioned by the
+purely-local structured inverse (Algorithm 2 below the device level).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hmatrix
+from repro.core.hck import HCKFactors, build_hck
+from repro.core.kernels_fn import BaseKernel
+
+Array = jax.Array
+
+
+def device_level(n_devices: int) -> int:
+    lvl = 0
+    while (1 << lvl) < n_devices:
+        lvl += 1
+    if (1 << lvl) != n_devices:
+        raise ValueError(f"device count {n_devices} must be a power of two")
+    return lvl
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kernel", "rank", "local_levels"))
+def build_local_factors(x_local: Array, *, kernel: BaseKernel, rank: int,
+                        local_levels: int, key: Array) -> HCKFactors:
+    """Per-device factor build for the device's contiguous block (the
+    below-device-level subtree); partition/landmark randomness per device."""
+    return build_hck(x_local, levels=local_levels, rank=rank, key=key,
+                     kernel=kernel)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TopFactors:
+    """Replicated factors of the top log2(P) tree levels.
+
+    landmarks[l]: (2**l, r, d) for top levels l = 0..T-1
+    sigma[l]:     (2**l, r, r)
+    w[l]:         (2**l, r, r) for l = 1..T-1   (internal top transfers)
+    w_dev:        (P, r, r)  — device-root -> top-parent transfer
+    """
+
+    landmarks: tuple
+    sigma: tuple
+    w: tuple
+    w_dev: Array
+
+    def tree_flatten(self):
+        return (self.landmarks, self.sigma, self.w, self.w_dev), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def build_top_factors(local_root_landmarks: Array, *, kernel: BaseKernel,
+                      key: Array) -> TopFactors:
+    """Build the replicated top tree from the per-device root landmark sets.
+
+    local_root_landmarks: (P, r, d) — each device's subtree-root landmarks
+    (``local_f.landmarks[0]``), gathered once at setup.  Top-node landmarks
+    are uniform subsamples of the union over each node's span (§4.2);
+    factors are O(P r^2) — replicated by construction.
+    """
+    p, r, d = local_root_landmarks.shape
+    levels = device_level(p)
+    # top landmarks: for level l node i, sample r points from its span
+    landmarks = []
+    for lvl in range(levels):
+        nodes = 1 << lvl
+        span = p // nodes
+        pool = local_root_landmarks.reshape(nodes, span * r, d)
+        key, sub = jax.random.split(key)
+        idx = jax.vmap(lambda k: jax.random.permutation(k, span * r)[:r])(
+            jax.random.split(sub, nodes))
+        landmarks.append(jnp.take_along_axis(pool, idx[:, :, None], axis=1))
+    gram = jax.vmap(kernel.gram)
+    sigma = tuple(gram(lm) for lm in landmarks)
+    cho = tuple(jnp.linalg.cholesky(s) for s in sigma)
+
+    def transfer(lm_child, lm_parent, cho_parent):
+        kcp = jax.vmap(kernel.cross)(lm_child, lm_parent)      # (B, r, r)
+        sol = jax.vmap(lambda c, b: jax.scipy.linalg.cho_solve((c, True), b))(
+            cho_parent, jnp.swapaxes(kcp, -1, -2))
+        return jnp.swapaxes(sol, -1, -2)
+
+    w = tuple(
+        transfer(landmarks[lvl], jnp.repeat(landmarks[lvl - 1], 2, axis=0),
+                 jnp.repeat(cho[lvl - 1], 2, axis=0))
+        for lvl in range(1, levels))
+    w_dev = transfer(local_root_landmarks,
+                     jnp.repeat(landmarks[-1], 2, axis=0),
+                     jnp.repeat(cho[-1], 2, axis=0))
+    return TopFactors(tuple(landmarks), sigma, w, w_dev)
+
+
+# ---------------------------------------------------------------------------
+# Distributed Algorithm 1
+# ---------------------------------------------------------------------------
+
+def local_root_coeff(f: HCKFactors, b: Array) -> Array:
+    """Upward pass to the local subtree root: returns (r, k) in the local
+    root's landmark basis (the device-level W is applied by the caller)."""
+    if b.ndim == 1:
+        b = b[:, None]
+    n0 = f.leaf_size
+    bb = b.reshape(f.num_leaves, n0, -1)
+    c = jnp.einsum("pnr,pnk->prk", f.u, bb)
+    for lvl in range(f.levels - 1, 0, -1):
+        s = c.reshape(c.shape[0] // 2, 2, *c.shape[1:]).sum(1)
+        c = jnp.einsum("pab,pak->pbk", f.w[lvl - 1], s)
+    return c.reshape(c.shape[0] // 2, 2, *c.shape[1:]).sum(1)[0]
+
+
+def apply_root_d(f: HCKFactors, d_root: Array) -> Array:
+    """Push a local-root-basis d down the local tree to leaf outputs:
+    returns (n_local, k)."""
+    d = jnp.repeat(d_root[None], 2, axis=0)          # level-1 children
+    for lvl in range(1, f.levels):
+        d = jnp.einsum("pab,pbk->pak", f.w[lvl - 1], d)
+        d = jnp.repeat(d, 2, axis=0)
+    y = jnp.einsum("pnr,prk->pnk", f.u, d)
+    return y.reshape(-1, y.shape[-1])
+
+
+def top_tree_exchange(c_all: Array, top: TopFactors, my_idx: Array) -> Array:
+    """Algorithm 1's exchange over the replicated top tree.
+
+    c_all: (P, r, k) LOCAL-ROOT-basis coefficients from every device.
+    Returns this device's d in its local-root basis.
+    """
+    p = c_all.shape[0]
+    levels = device_level(p)
+    # ascend into the top tree: device nodes sit at top level `levels`
+    c = {levels: jnp.einsum("pab,pak->pbk", top.w_dev, c_all)}
+    for lvl in range(levels - 1, 0, -1):
+        s = c[lvl + 1].reshape(-1, 2, *c_all.shape[1:]).sum(1)
+        c[lvl] = jnp.einsum("pab,pak->pbk", top.w[lvl - 1], s)
+
+    d = {}
+    for lvl in range(1, levels + 1):
+        cs = c[lvl].reshape(-1, 2, *c_all.shape[1:])[:, ::-1]
+        cs = cs.reshape(-1, *c_all.shape[1:])
+        sig = jnp.repeat(top.sigma[lvl - 1], 2, axis=0)
+        d[lvl] = jnp.einsum("pab,pbk->pak", sig, cs)
+    for lvl in range(1, levels):
+        push = jnp.einsum("pab,pbk->pak", top.w[lvl - 1], d[lvl])
+        d[lvl + 1] = d[lvl + 1] + jnp.repeat(push, 2, axis=0)
+    # back into the device's local-root basis: d_local = W_dev @ d_top
+    d_dev = jnp.einsum("pab,pbk->pak", top.w_dev, d[levels])
+    return d_dev[my_idx]
+
+
+def make_dist_matvec(axis: str):
+    """shard_map body: (local_factors, top, b_local) -> y_local."""
+
+    def matvec(local_f: HCKFactors, top: TopFactors, b_local: Array):
+        squeeze = b_local.ndim == 1
+        bl = b_local[:, None] if squeeze else b_local
+        y = hmatrix.matvec(local_f, bl)
+        c_dev = local_root_coeff(local_f, bl)                  # (r, k)
+        c_all = jax.lax.all_gather(c_dev, axis)                # (P, r, k)
+        d_dev = top_tree_exchange(c_all, top, jax.lax.axis_index(axis))
+        y = y + apply_root_d(local_f, d_dev)
+        return y[:, 0] if squeeze else y
+
+    return matvec
+
+
+def dist_solve_cg(matvec_fn, b: Array, *, ridge: float, iters: int = 50,
+                  precond=None):
+    """CG on (A + ridge I) x = b (inner products must already be global —
+    under shard_map wrap sums with psum; under pjit they compose freely)."""
+
+    def amv(v):
+        return matvec_fn(v) + ridge * v
+
+    x = jnp.zeros_like(b)
+    r = b - amv(x)
+    z = precond(r) if precond else r
+    p = z
+
+    def body(_, carry):
+        x, r, z, p = carry
+        ap = amv(p)
+        rz = jnp.sum(r * z)
+        alpha = rz / jnp.maximum(jnp.sum(p * ap), 1e-30)
+        x = x + alpha * p
+        r_new = r - alpha * ap
+        z_new = precond(r_new) if precond else r_new
+        beta = jnp.sum(r_new * z_new) / jnp.maximum(rz, 1e-30)
+        p = z_new + beta * p
+        return x, r_new, z_new, p
+
+    x, r, z, p = jax.lax.fori_loop(0, iters, body, (x, r, z, p))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Dense oracle of the distributed structure (tests)
+# ---------------------------------------------------------------------------
+
+def dist_to_dense(local_fs: list, top: TopFactors) -> Array:
+    """Materialize the global kernel matrix implied by (local trees + top
+    tree).  Host loop; test oracle only."""
+    from repro.core.hck import to_dense
+
+    p = len(local_fs)
+    levels = device_level(p)
+    n_loc = local_fs[0].n
+    n = p * n_loc
+    a = jnp.zeros((n, n), jnp.float32)
+    for i, f in enumerate(local_fs):
+        sl = slice(i * n_loc, (i + 1) * n_loc)
+        a = a.at[sl, sl].set(to_dense(f))
+
+    # effective basis of each device block: local U-chain up to local root,
+    # then w_dev
+    def device_basis(f: HCKFactors) -> Array:
+        ub = [f.u[i] for i in range(f.num_leaves)]
+        for lvl in range(f.levels - 1, 0, -1):
+            ub = [jnp.concatenate([ub[2 * q], ub[2 * q + 1]], 0)
+                  @ f.w[lvl - 1][q] for q in range(1 << lvl)]
+        return jnp.concatenate([ub[0], ub[1]], 0)       # (n_loc, r) local-root
+
+    ubig = {levels: [device_basis(f) @ top.w_dev[i]
+                     for i, f in enumerate(local_fs)]}
+    for lvl in range(levels - 1, 0, -1):
+        ubig[lvl] = [
+            jnp.concatenate([ubig[lvl + 1][2 * q], ubig[lvl + 1][2 * q + 1]], 0)
+            @ top.w[lvl - 1][q] for q in range(1 << lvl)]
+    for lvl in range(levels, 0, -1):
+        block = n // (1 << lvl)
+        for q in range(1 << (lvl - 1)):
+            i, j = 2 * q, 2 * q + 1
+            cross = ubig[lvl][i] @ top.sigma[lvl - 1][q] @ ubig[lvl][j].T
+            ri = slice(i * block, (i + 1) * block)
+            rj = slice(j * block, (j + 1) * block)
+            a = a.at[ri, rj].set(cross)
+            a = a.at[rj, ri].set(cross.T)
+    return a

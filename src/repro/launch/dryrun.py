@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  This module is the ONLY place the 512 placeholder
+# devices exist — tests and benches see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+under the production meshes and record memory / cost / collective analysis.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out artifacts/dryrun/results.jsonl
+
+Each cell proves: the sharding config is coherent (no mismatched specs), the
+program fits (memory_analysis), and yields the §Roofline inputs.
+
+Cost calibration (verified empirically): compiled.cost_analysis() reports
+the PER-DEVICE program and counts while/scan bodies ONCE.  Since the layer
+stack is a scan, flops / bytes / collective-bytes are measured at two small
+depths (L1, 2*L1 with L1 = the hybrid period or 1) and extrapolated linearly
+to the real depth; the full-depth compile still provides memory_analysis and
+proves the real program shards and fits.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, TrainConfig, get_arch, get_shape, list_archs
+from repro.launch import mesh as mesh_lib
+from repro.models import model_zoo
+from repro.models import transformer as tf
+from repro.models.layers import axis_rules
+from repro.training import optimizer as opt
+from repro.utils import roofline
+
+
+def _build_jitted(cfg, shape, mesh, mcfg, tcfg, decode_out_shardings=True):
+    params_abs = tf.abstract_params(cfg)
+    # serving layout for decode: TP-only weights (no FSDP all-gathers)
+    pspecs = tf.param_pspecs(cfg, mcfg, serving=(shape.kind == "decode"
+                                                 and decode_out_shardings))
+    param_sh = jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    batch_abs = model_zoo.input_specs(cfg, shape, abstract=True)
+    batch_sh = mesh_lib.to_shardings(
+        mesh, mesh_lib.batch_pspecs(cfg, shape, mcfg))
+
+    if shape.kind == "train":
+        from repro.training.train_loop import make_train_step
+
+        step = make_train_step(cfg, tcfg)
+        opt_abs = opt.abstract_opt_state(
+            params_abs, compression=tcfg.grad_compression == "int8")
+        opt_sh = jax.tree.map(
+            lambda p: NamedSharding(mesh, p),
+            opt.opt_pspecs(pspecs, mesh_dp_axes=mcfg.dp_axes,
+                           compression=tcfg.grad_compression == "int8"),
+            is_leaf=lambda x: isinstance(x, P))
+        jitted = jax.jit(step, in_shardings=(param_sh, opt_sh, batch_sh),
+                         out_shardings=(param_sh, opt_sh, None))
+        args = (params_abs, opt_abs, batch_abs)
+    else:
+        fn = model_zoo.step_for_shape(cfg, shape)
+        out_sh = None
+        donate = ()
+        if shape.kind == "decode" and decode_out_shardings:
+            # pin the updated caches to their INPUT shardings and donate the
+            # buffers: without this, XLA reshards (fully re-materializes) the
+            # whole KV cache every step — see EXPERIMENTS.md §Perf
+            out_sh = (None, batch_sh["caches"])
+            donate = (1,)
+        jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh),
+                         out_shardings=out_sh, donate_argnums=donate)
+        args = (params_abs, batch_abs)
+    return jitted, args
+
+
+def _compile(cfg, shape, mesh, mcfg, tcfg, decode_out_shardings=True):
+    jitted, args = _build_jitted(cfg, shape, mesh, mcfg, tcfg,
+                                 decode_out_shardings)
+    with mesh:
+        with axis_rules(mcfg.dp_axes):
+            lowered = jitted.lower(*args)
+        return lowered.compile()
+
+
+def _cost_of(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    coll = roofline.collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll}
+
+
+def _extrapolate(c1: dict, c2: dict, l1: int, l2: int, l_target: int) -> dict:
+    def lin(a, b):
+        slope = (b - a) / (l2 - l1)
+        return a + slope * (l_target - l1)
+
+    coll = {k: lin(c1["coll"][k], c2["coll"][k]) for k in c1["coll"]}
+    return {"flops": lin(c1["flops"], c2["flops"]),
+            "bytes": lin(c1["bytes"], c2["bytes"]), "coll": coll}
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                train_overrides: dict | None = None,
+                verbose: bool = True, skip_cost: bool = False,
+                moe_dispatch: str = "cumsum",
+                moe_local_groups: bool = False,
+                decode_out_shardings: bool = True) -> dict:
+    """Lower + compile one cell; returns the result record."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    mcfg = mesh_lib.mesh_config_for(mesh)
+    tcfg = TrainConfig(**(train_overrides or {}))
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "chips": mcfg.num_devices, "ok": False}
+
+    t0 = time.time()
+    tf.MOE_DISPATCH = moe_dispatch
+    tf.MOE_DP_GROUPS = (mcfg.pods * mcfg.data) if moe_local_groups else 1
+    try:
+        # ---- full-depth compile: sharding coherence + memory analysis ----
+        compiled = _compile(cfg, shape, mesh, mcfg, tcfg,
+                            decode_out_shardings)
+        rec["compile_s"] = round(time.time() - t0, 1)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+
+        # ---- depth-extrapolated cost --------------------------------------
+        # cost_analysis skips while-loop bodies entirely, so the probes
+        # compile with the layer scan UNROLLED (loop-free) at two reduced
+        # depths and extrapolate linearly to the real depth.
+        if not skip_cost:
+            period = cfg.shared_attn_every or 1
+            l1, l2 = period, 2 * period
+            if period == 1:
+                l1, l2 = 4, 8
+            tf.SCAN_UNROLL = True
+            try:
+                cost1 = _cost_of(_compile(
+                    dataclasses.replace(cfg, n_layers=l1), shape, mesh, mcfg,
+                    tcfg, decode_out_shardings))
+                cost2 = _cost_of(_compile(
+                    dataclasses.replace(cfg, n_layers=l2), shape, mesh, mcfg,
+                    tcfg, decode_out_shardings))
+            finally:
+                tf.SCAN_UNROLL = False
+            cost = _extrapolate(cost1, cost2, l1, l2, cfg.n_layers)
+            rec["flops_per_dev"] = cost["flops"]
+            rec["bytes_per_dev"] = cost["bytes"]
+            rec["collectives"] = cost["coll"]
+
+            terms = roofline.RooflineTerms(
+                flops=cost["flops"], hbm_bytes=cost["bytes"],
+                coll_bytes_per_dev=cost["coll"]["total"],
+                chips=mcfg.num_devices)
+            rec["roofline"] = terms.as_dict()
+            tokens = shape.global_batch * (
+                shape.seq_len if shape.kind != "decode" else 1)
+            rec["model_flops"] = roofline.model_flops(
+                cfg.active_param_count(), tokens, shape.kind)
+            total_hlo = cost["flops"] * mcfg.num_devices
+            rec["useful_flops_frac"] = (
+                rec["model_flops"] / total_hlo if total_hlo else None)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    if verbose:
+        status = "OK " if rec["ok"] else "FAIL"
+        extra = ""
+        if rec["ok"] and not skip_cost:
+            extra = (f"flops/dev={rec['flops_per_dev']:.3g} "
+                     f"coll/dev={rec['collectives']['total']:.3g}B "
+                     f"bound={rec['roofline']['bound']}")
+        elif not rec["ok"]:
+            extra = rec.get("error", "")[:160]
+        print(f"[{status}] {arch:18s} {shape_name:12s} {rec['mesh']:8s} "
+              f"{rec['total_s']:7.1f}s {extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="artifacts/dryrun/results.jsonl")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true",
+                    help="compile-only (multi-pod coherence proof)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", choices=["none", "int8"],
+                    default="none")
+    ap.add_argument("--remat", choices=["none", "block"], default="block")
+    ap.add_argument("--moe-dispatch", choices=["cumsum", "sort"],
+                    default="cumsum")
+    ap.add_argument("--moe-local-groups", action="store_true",
+                    help="group-local MoE dispatch (G = DP world size)")
+    ap.add_argument("--no-decode-out-shardings", action="store_true")
+    ap.add_argument("--tag", type=str, default="baseline")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    overrides = {"microbatches": args.microbatches,
+                 "grad_compression": args.grad_compression,
+                 "remat": args.remat}
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("ok"):
+                        done.add((r["arch"], r["shape"], r["mesh"],
+                                  r.get("tag", "baseline")))
+                except json.JSONDecodeError:
+                    pass
+
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                meshname = "2x16x16" if multi else "16x16"
+                if (arch, shape, meshname, args.tag) in done:
+                    continue
+                rec = dryrun_cell(
+                    arch, shape, multi_pod=multi, train_overrides=overrides,
+                    skip_cost=args.skip_cost, moe_dispatch=args.moe_dispatch,
+                    moe_local_groups=args.moe_local_groups,
+                    decode_out_shardings=not args.no_decode_out_shardings)
+                rec["tag"] = args.tag
+                if rec["ok"]:
+                    rec.pop("traceback", None)
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,496 @@
+"""Attention backends: exact (chunked-flash / dense / decode) and the
+paper's HCK hierarchical attention.
+
+== HCK attention (DESIGN.md §3) =============================================
+
+The unnormalized attention matrix ``exp(s(q,k))`` is a strictly-PD kernel
+matrix (exp of an inner product on the sphere — logits are cosine-scaled to
+keep everything bounded in f32).  We apply the paper's hierarchical
+composition to it over the 1-D token domain:
+
+  * contiguous token blocks of size n0 = leaf domains (exact causal softmax
+    inside),
+  * landmark tokens per tree node (strided subsample = the §4.2 uniform
+    sample) carry cross-block attention via Nyström,
+  * the recursive change-of-basis (W factors) composes distant blocks.
+
+Causality makes every off-diagonal block either fully visible or fully
+masked, so Algorithm 1's sibling exchange simply becomes *one-sided*
+(right sibling receives the left sibling's summary, never the reverse).
+Numerator and denominator share the machinery: values are augmented with a
+ones column and the softmax normalization falls out of the same traversal.
+
+Cost O(S (n0 + r log(S/n0))) per head — the long_500k enabler.
+
+Decode (one query vs a frozen prefix) is the paper's Algorithm 3: the whole
+left-of-query hierarchy collapses into one cached (r, Dv+1) summary, plus an
+exact window — O(n0 + r) per token instead of O(S).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import shard
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Exact backends
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q: Array, k: Array) -> Array:
+    """q: (B, K, G, Sq, D), k: (B, K, Sk, D) -> (B, K, G, Sq, Sk)."""
+    return jnp.einsum("bkgqd,bkld->bkgql", q, k)
+
+
+def dense_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 0, scale: float | None = None) -> Array:
+    """Reference full attention. q: (B,H,S,D); k,v: (B,Hkv,S,D)."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, s, d)
+    scores = _gqa_scores(qg * scale, k).astype(jnp.float32)
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= rows >= cols
+    if window:
+        mask &= rows - cols < window
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgql,bkld->bkgqd", p.astype(v.dtype), v)
+    return out.reshape(b, h, s, d)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block"))
+def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                      window: int = 0, block: int = 1024) -> Array:
+    """Flash-style attention in pure XLA: lax.scan over KV blocks with
+    online-softmax carries.  O(S * block) live memory, partitionable under
+    pjit (heads over "model", batch over DP) — the dry-run/production-graph
+    path.  The Pallas kernel (repro.kernels.flash_attention) is the
+    per-shard TPU runtime equivalent.
+    """
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    if s % block != 0:
+        return dense_attention(q, k, v, causal=causal, window=window)
+    nblk = s // block
+    scale = d ** -0.5
+    qg = (q * scale).reshape(b, hkv, g, s, d)
+    kb = k.reshape(b, hkv, nblk, block, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nblk, block, d).transpose(2, 0, 1, 3, 4)
+    rows = jnp.arange(s)[:, None]                       # query positions
+
+    def step(carry, inp):
+        acc, m, l = carry
+        blk_idx, kc, vc = inp
+        sc = _gqa_scores(qg, kc).astype(jnp.float32)    # (b,kv,g,s,block)
+        cols = blk_idx * block + jnp.arange(block)[None, :]
+        mask = jnp.ones((s, block), bool)
+        if causal:
+            mask &= rows >= cols
+        if window:
+            mask &= rows - cols < window
+        sc = jnp.where(mask, sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1, keepdims=True))
+        p = jnp.exp(sc - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + p.sum(axis=-1, keepdims=True)
+        acc = alpha * acc + jnp.einsum("bkgql,bkld->bkgqd", p, vc)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, hkv, g, s, d), jnp.float32)
+    m0 = jnp.full((b, hkv, g, s, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s, 1), jnp.float32)
+    (acc, _, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (jnp.arange(nblk), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array, *,
+                     window: int = 0, length: Array | None = None) -> Array:
+    """One-token decode: q (B,H,1,D) vs cache (B,Hkv,S,D); O(S) exact.
+
+    ``length`` masks out unwritten cache slots (cols >= length); the query
+    sits at position length-1.
+    """
+    b, h, _, d = q.shape
+    hkv = k_cache.shape[1]
+    g = h // hkv
+    s = k_cache.shape[2]
+    qg = (q * d ** -0.5).reshape(b, hkv, g, 1, d)
+    sc = _gqa_scores(qg, k_cache).astype(jnp.float32)   # (b,kv,g,1,s)
+    cols = jnp.arange(s)
+    if length is not None:
+        sc = jnp.where((cols < length)[None, None, None, None, :], sc, NEG_INF)
+    if window:
+        qpos = (length - 1) if length is not None else (s - 1)
+        sc = jnp.where((qpos - cols < window)[None, None, None, None, :],
+                       sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgql,bkld->bkgqd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, h, 1, d)
+
+
+# ---------------------------------------------------------------------------
+# HCK hierarchical attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HCKAttnConfig:
+    leaf: int = 1024        # n0: exact local block
+    rank: int = 64          # r: landmarks per tree level
+    levels: int = 5         # tree depth (leaves = 2**levels)
+    jitter: float = 1e-3
+    tau_cap: float = 16.0   # cosine-logit scale cap (f32 safety)
+
+    def for_seq(self, s: int) -> "HCKAttnConfig":
+        """Clamp levels so the leaf never drops below rank (Eq. 22 spirit)."""
+        levels = self.levels
+        while levels > 0 and s // (1 << levels) < max(self.leaf // 4, self.rank):
+            levels -= 1
+        return dataclasses.replace(self, levels=levels)
+
+
+def _normalize(x: Array) -> Array:
+    return x * jax.lax.rsqrt(
+        jnp.sum(x.astype(jnp.float32) ** 2, -1, keepdims=True) + 1e-6)
+
+
+def _exp_kernel(a: Array, b: Array, tau: float) -> Array:
+    """exp(tau * <a, b>) for unit-norm rows; einsum over the last dim.
+    a: (..., m, d), b: (..., n, d) -> (..., m, n), f32."""
+    return jnp.exp(tau * jnp.einsum(
+        "...md,...nd->...mn", a.astype(jnp.float32), b.astype(jnp.float32)))
+
+
+def default_landmarks(levels: int, rank: int, d: int,
+                      seed: int = 0x4C4D) -> Array:
+    """Deterministic landmark parameters for landmark-free call sites.
+
+    LM models learn these per layer (transformer.py adds them as params);
+    the paper's §4.2 remark licenses landmarks outside the data domain, and
+    *content-independent* landmarks are what make hierarchical attention
+    STRICTLY causal: attention weights can depend only on the query, on
+    past keys, and on these constants (DESIGN.md §3).
+    """
+    return jax.random.normal(jax.random.PRNGKey(seed), (levels, rank, d))
+
+
+def _level_factors(landmarks: Array, levels: int, tau: float, jitter: float):
+    """Per-LEVEL shared factors (one (r,r) set per level, not per node):
+    returns (lm_n (levels,r,d) normalized, sigma (levels,r,r),
+    sigma_inv (levels,r,r), w[l] for l=1..levels-1 (r,r))."""
+    r = landmarks.shape[1]
+    lm = _normalize(landmarks[:levels])
+    eye = jnp.eye(r, dtype=jnp.float32)
+    sigma = jnp.exp(tau * jnp.einsum("lrd,lsd->lrs", lm, lm)) + jitter * eye
+    sigma_inv = jnp.linalg.inv(sigma)
+    w = [jnp.exp(tau * lm[l] @ lm[l - 1].T) @ sigma_inv[l - 1]
+         for l in range(1, levels)]
+    return lm, sigma, sigma_inv, w
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def hck_attention(q: Array, k: Array, v: Array, *, cfg: HCKAttnConfig,
+                  landmarks: Array | None = None) -> Array:
+    """Hierarchical causal attention. q: (B,H,S,D); k,v: (B,Hkv,S,D).
+
+    ``landmarks``: (>=levels, r, D) learned per-level landmark parameters
+    (shared across batch/heads); defaults to fixed pseudo-random ones.
+    Strictly causal: weights depend only on q, past k, and the landmarks.
+    """
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    cfg = cfg.for_seq(s)
+    levels, r = cfg.levels, cfg.rank
+    nl = 1 << levels
+    n0 = s // nl
+    tau = min(d ** 0.5, cfg.tau_cap)
+    if levels == 0:
+        return dense_attention(q, k, v, causal=True, scale=None)
+    if landmarks is None:
+        landmarks = default_landmarks(cfg.levels, r, d)
+    lm, sigma, sigma_inv, w = _level_factors(landmarks, levels, tau,
+                                             cfg.jitter)
+
+    qn = _normalize(q).reshape(b, hkv, g, nl, n0, d)
+    kn = _normalize(k)
+    vv = jnp.concatenate(
+        [v.astype(jnp.float32), jnp.ones((b, hkv, s, 1), jnp.float32)], -1)
+    vl = vv.reshape(b, hkv, nl, n0, d + 1)
+    kl = kn.reshape(b, hkv, nl, n0, d)
+
+    # key-side leaf basis: U = exp(tau k.lm_{L-1}) Sigma_{L-1}^{-1}
+    u = _exp_kernel(kl, lm[levels - 1], tau) @ sigma_inv[levels - 1]
+
+    def pair_sum(x):
+        return x.reshape(*x.shape[:2], x.shape[2] // 2, 2, *x.shape[3:]).sum(3)
+
+    # upward value summaries (Algorithm 1, c pass)
+    c = {levels: jnp.einsum("bkpnr,bkpnv->bkprv", u, vl)}
+    for lvl in range(levels - 1, 0, -1):
+        ssum = pair_sum(c[lvl + 1])
+        c[lvl] = jnp.einsum("ij,bkpiv->bkpjv", w[lvl - 1], ssum)
+
+    # ONE-SIDED sibling exchange (causality): right child <- Sigma @ c_left
+    dacc = {}
+    for lvl in range(1, levels + 1):
+        cl = c[lvl].reshape(b, hkv, (1 << lvl) // 2, 2, r, d + 1)
+        left = cl[:, :, :, 0]
+        push = jnp.einsum("ij,bkpjv->bkpiv", sigma[lvl - 1], left)
+        zeros = jnp.zeros_like(push)
+        dacc[lvl] = jnp.stack([zeros, push], axis=3).reshape(
+            b, hkv, 1 << lvl, r, d + 1)
+
+    # downward accumulation
+    for lvl in range(1, levels):
+        push = jnp.einsum("ij,bkpjv->bkpiv", w[lvl - 1], dacc[lvl])
+        dacc[lvl + 1] = dacc[lvl + 1] + jnp.repeat(push, 2, axis=2)
+
+    # query-side basis and cross contribution
+    uq = _exp_kernel(qn, lm[levels - 1], tau) @ sigma_inv[levels - 1]
+    cross = jnp.einsum("bkgpnr,bkprv->bkgpnv", uq, dacc[levels])
+
+    # exact local block: causal softmax numerator/denominator
+    sloc = tau * jnp.einsum("bkgpnd,bkpmd->bkgpnm", qn, kl)
+    rows = jnp.arange(n0)[:, None]
+    cols = jnp.arange(n0)[None, :]
+    sloc = jnp.where(rows >= cols, sloc, NEG_INF)
+    ploc = jnp.exp(sloc)
+    local = jnp.einsum("bkgpnm,bkpmv->bkgpnv", ploc, vl)
+
+    total = local + cross
+    num, den = total[..., :d], total[..., d:]
+    out = num / jnp.maximum(den, 1e-6)
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# HCK decode: Algorithm 3 over a frozen prefix + exact window
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class HCKDecodeState:
+    """Per-layer decode-attention state (built at prefill, O(n0+r)/token).
+
+    window_k/v: (B, Hkv, n0, D)   exact recent window (ring buffer)
+    lm_k:       (B, Hkv, r, D)    top-level landmark parameters (static)
+    sigma:      (B, Hkv, r, r)    their (jittered) gram (static)
+    summary:    (B, Hkv, r, D+1)  hierarchical value summary of the prefix
+    win_len:    ()                valid entries in the window
+    """
+
+    window_k: Array
+    window_v: Array
+    lm_k: Array
+    sigma: Array
+    summary: Array
+    win_len: Array
+
+    def tree_flatten(self):
+        return (self.window_k, self.window_v, self.lm_k, self.sigma,
+                self.summary, self.win_len), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def build_hck_decode_state(k_cache: Array, v_cache: Array, *,
+                           cfg: HCKAttnConfig,
+                           landmarks: Array | None = None) -> HCKDecodeState:
+    """Collapse the prefix hierarchy into the decode summary (Alg-3 prep).
+
+    The decode query always lives in the rightmost leaf, so Algorithm 3's
+    d-chain telescopes into ONE (r, D+1) matrix per head.  With learned
+    (content-independent) landmarks the Sigma factors are static, so only
+    the summary needs the periodic O(S r) refresh — amortized O(r)/token.
+    """
+    b, hkv, s, d = k_cache.shape
+    cfg = cfg.for_seq(s)
+    levels, r = cfg.levels, cfg.rank
+    nl = 1 << levels
+    n0 = s // nl
+    tau = min(d ** 0.5, cfg.tau_cap)
+    if landmarks is None:
+        landmarks = default_landmarks(cfg.levels, r, d)
+    lm, sigma, sigma_inv, w = _level_factors(landmarks, levels, tau,
+                                             cfg.jitter)
+    kn = _normalize(k_cache)
+    vv = jnp.concatenate(
+        [v_cache.astype(jnp.float32), jnp.ones((b, hkv, s, 1), jnp.float32)],
+        -1)
+    kl = kn.reshape(b, hkv, nl, n0, d)
+    vl = vv.reshape(b, hkv, nl, n0, d + 1)
+
+    u = _exp_kernel(kl, lm[levels - 1], tau) @ sigma_inv[levels - 1]
+
+    def pair_sum(x):
+        return x.reshape(*x.shape[:2], x.shape[2] // 2, 2, *x.shape[3:]).sum(3)
+
+    c = {levels: jnp.einsum("bkpnr,bkpnv->bkprv", u, vl)}
+    for lvl in range(levels - 1, 0, -1):
+        c[lvl] = jnp.einsum("ij,bkpiv->bkpjv", w[lvl - 1],
+                            pair_sum(c[lvl + 1]))
+
+    # d-chain for the RIGHTMOST leaf only (path index = all ones)
+    dlast = jnp.zeros((b, hkv, r, d + 1), jnp.float32)
+    for lvl in range(1, levels + 1):
+        left_idx = (1 << lvl) - 2
+        contrib = jnp.einsum("ij,bkjv->bkiv", sigma[lvl - 1],
+                             c[lvl][:, :, left_idx])
+        if lvl == 1:
+            dlast = contrib
+        else:
+            dlast = contrib + jnp.einsum("ij,bkjv->bkiv", w[lvl - 2], dlast)
+
+    bc = lambda x: jnp.broadcast_to(x, (b, hkv) + x.shape)
+    return HCKDecodeState(
+        window_k=k_cache[:, :, -n0:],
+        window_v=v_cache[:, :, -n0:],
+        lm_k=bc(lm[levels - 1]).astype(k_cache.dtype),
+        sigma=bc(sigma[levels - 1]),
+        summary=dlast,
+        win_len=jnp.array(n0, jnp.int32),
+    )
+
+
+@jax.jit
+def hck_decode_attention(q: Array, state: HCKDecodeState,
+                         tau_cap: float = 16.0) -> Array:
+    """One-token hierarchical decode. q: (B,H,1,D) -> (B,H,1,D).
+
+    exact window softmax + Alg-3 cross term:  O(n0 d + r d + r^2).
+    """
+    b, h, _, d = q.shape
+    hkv = state.window_k.shape[1]
+    g = h // hkv
+    tau = min(d ** 0.5, tau_cap)
+    qn = _normalize(q).reshape(b, hkv, g, d)
+
+    # cross: psi_q Sigma^{-1} summary  (lm_k already unit-norm parameters)
+    kq = jnp.exp(tau * jnp.einsum(
+        "bkgd,bkrd->bkgr", qn.astype(jnp.float32),
+        state.lm_k.astype(jnp.float32)))
+    phi = jnp.einsum("bkgr,bkrv->bkgv", kq,
+                     _spd_solve(state.sigma, state.summary))
+
+    # exact window (masked to valid length)
+    wk = _normalize(state.window_k)
+    sloc = tau * jnp.einsum("bkgd,bkmd->bkgm", qn, wk.astype(jnp.float32))
+    n0 = wk.shape[2]
+    valid = jnp.arange(n0)[None, None, None, :] >= (n0 - state.win_len)
+    ploc = jnp.where(valid, jnp.exp(sloc), 0.0)
+    vv = jnp.concatenate([state.window_v.astype(jnp.float32),
+                          jnp.ones((b, hkv, n0, 1), jnp.float32)], -1)
+    loc = jnp.einsum("bkgm,bkmv->bkgv", ploc, vv)
+
+    total = loc + phi
+    out = total[..., :d] / jnp.maximum(total[..., d:], 1e-6)
+    return out.reshape(b, h, 1, d).astype(q.dtype)
+
+
+def hck_decode_append(state: HCKDecodeState, k_new: Array, v_new: Array
+                      ) -> HCKDecodeState:
+    """Shift the new token into the exact window (summaries refresh lazily
+    via build_hck_decode_state every n0 steps — amortized O(r)/token)."""
+    wk = jnp.concatenate([state.window_k[:, :, 1:], k_new], axis=2)
+    wv = jnp.concatenate([state.window_v[:, :, 1:], v_new], axis=2)
+    win_len = jnp.minimum(state.win_len + 1, state.window_k.shape[2])
+    return dataclasses.replace(state, window_k=wk, window_v=wv,
+                               win_len=win_len)
+
+
+def _spd_solve(mat: Array, rhs: Array) -> Array:
+    """Batched SPD solve (leading dims broadcast)."""
+    return jnp.linalg.solve(mat, rhs)
+
+
+# ---------------------------------------------------------------------------
+# Dense reference of the HCK-approximated attention matrix (test oracle)
+# ---------------------------------------------------------------------------
+
+def hck_attention_reference(q: Array, k: Array, v: Array, *,
+                            cfg: HCKAttnConfig,
+                            landmarks: Array | None = None) -> Array:
+    """Materializes the hierarchically-approximated attention matrix densely
+    (O(S^2)); tests check hck_attention against THIS (same approximation),
+    and separately that both converge to exact attention as rank grows."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    cfg = cfg.for_seq(s)
+    levels, r = cfg.levels, cfg.rank
+    nl = 1 << levels
+    n0 = s // nl
+    tau = min(d ** 0.5, cfg.tau_cap)
+    if levels == 0:
+        return dense_attention(q, k, v, causal=True)
+    if landmarks is None:
+        landmarks = default_landmarks(cfg.levels, r, d)
+    lm, sigma, sigma_inv, w = _level_factors(landmarks, levels, tau,
+                                             cfg.jitter)
+    qn = _normalize(q).reshape(b, hkv, g, s, d)
+    kn = _normalize(k)
+
+    def psi_chain_q(lvl_to: int, leaf: int):
+        """query psi down to internal level lvl_to along leaf's path."""
+        lvl = levels - 1
+        ql = qn[:, :, :, leaf * n0:(leaf + 1) * n0]
+        phi = jnp.exp(tau * jnp.einsum(
+            "bkgnd,rd->bkgnr", ql.astype(jnp.float32), lm[lvl]))
+        while lvl > lvl_to:
+            kup = jnp.exp(tau * lm[lvl] @ lm[lvl - 1].T)
+            phi = phi @ (sigma_inv[lvl] @ kup)
+            lvl -= 1
+        return phi
+
+    def psi_chain_k(lvl_to: int, leaf: int):
+        lvl = levels - 1
+        kb = kn[:, :, leaf * n0:(leaf + 1) * n0]
+        phi = jnp.exp(tau * jnp.einsum(
+            "bknd,rd->bknr", kb.astype(jnp.float32), lm[lvl]))
+        while lvl > lvl_to:
+            kup = jnp.exp(tau * lm[lvl] @ lm[lvl - 1].T)
+            phi = phi @ (sigma_inv[lvl] @ kup)
+            lvl -= 1
+        return phi
+
+    amat = jnp.zeros((b, hkv, g, s, s), jnp.float32)
+    for i in range(nl):
+        ri = slice(i * n0, (i + 1) * n0)
+        ql = qn[:, :, :, ri]
+        sloc = tau * jnp.einsum("bkgnd,bkmd->bkgnm", ql, kn[:, :, ri])
+        msk = jnp.tril(jnp.ones((n0, n0), bool))
+        amat = amat.at[:, :, :, ri, ri].set(jnp.where(msk, jnp.exp(sloc), 0.0))
+        for j in range(i):
+            rj = slice(j * n0, (j + 1) * n0)
+            lca = levels - ((i ^ j).bit_length())
+            phq = psi_chain_q(lca, i)
+            phk = psi_chain_k(lca, j)
+            blockv = jnp.einsum("bkgnr,rs,bkms->bkgnm", phq, sigma_inv[lca],
+                                phk)
+            amat = amat.at[:, :, :, ri, rj].set(blockv)
+    den = amat.sum(-1, keepdims=True)
+    vv = v.astype(jnp.float32)
+    out = jnp.einsum("bkgnm,bkmd->bkgnd", amat / jnp.maximum(den, 1e-6), vv)
+    return out.reshape(b, h, s, d).astype(q.dtype)

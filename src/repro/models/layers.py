@@ -1,0 +1,132 @@
+"""Shared transformer layers + sharding helpers.
+
+Parameters are plain dict pytrees.  Every param-creating helper has a twin
+that emits the PartitionSpec for the production mesh; `init_params` /
+`param_pspecs` in model_zoo build both from one structure so they cannot
+drift.
+
+Sharding conventions (Megatron-minimal TP over the "model" axis, DP over
+("pod","data")):
+  embed   (V, d)        -> P(MODEL, None)        vocab-sharded
+  qkv     (d, H*hd)     -> P(None, MODEL)        head(-dim) column split
+  o_proj  (H*hd, d)     -> P(MODEL, None)        row split (psum after)
+  mlp_in  (d, ff)       -> P(None, MODEL)
+  mlp_out (ff, d)       -> P(MODEL, None)
+  experts (E, d, ff)    -> P(MODEL, None, None)  EP when E%TP==0 else ff split
+Activations are constrained at block boundaries: (B, S, d) -> P(DP, None, None).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Sharding context: constraints are no-ops unless a mesh is active (so the
+# same model code runs in 1-device smoke tests and 512-device dry-runs).
+# ---------------------------------------------------------------------------
+
+_STATE = threading.local()
+
+
+def _axes() -> dict | None:
+    return getattr(_STATE, "axes", None)
+
+
+@contextlib.contextmanager
+def axis_rules(dp_axes: tuple, model_axis: str = "model"):
+    """Activate sharding constraints: dp_axes e.g. ("pod","data")."""
+    prev = _axes()
+    _STATE.axes = {"dp": dp_axes, "model": model_axis}
+    try:
+        yield
+    finally:
+        _STATE.axes = prev
+
+
+def shard(x: Array, *spec) -> Array:
+    """with_sharding_constraint with symbolic axes: 'dp', 'model', None."""
+    ax = _axes()
+    if ax is None:
+        return x
+    resolved = tuple(ax.get(s, s) if isinstance(s, str) else s for s in spec)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+
+def resolve_pspec(spec: tuple, dp_axes: tuple, model_axis: str = "model") -> P:
+    """Turn symbolic ('dp'|'model'|None, ...) into a concrete PartitionSpec."""
+    table = {"dp": dp_axes, "model": model_axis}
+    return P(*(table.get(s, s) if isinstance(s, str) else s for s in spec))
+
+
+# ---------------------------------------------------------------------------
+# Normalization / rotary
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight).astype(dt)
+
+
+def rope_freqs(seq: int, dim: int, theta: float, offset: Array | int = 0) -> tuple:
+    """(cos, sin) of shape (seq, dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    pos = offset + jnp.arange(seq, dtype=jnp.float32)[:, None]
+    ang = pos * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (B, S, H, D); cos/sin: (S, D//2) (broadcast over B, H)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def mrope_freqs(seq: int, dim: int, theta: float, offset: Array | int = 0,
+                sections=(16, 24, 24)) -> tuple:
+    """qwen2-vl M-RoPE: rotary dims split into (temporal, h, w) sections.
+
+    With the vision frontend stubbed, all three position ids coincide with
+    the sequence index (text-only degenerate case — the section structure
+    and thus the weight layout/compiled graph is preserved).
+    """
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    pos = offset + jnp.arange(seq, dtype=jnp.float32)
+    # one position stream per (t, h, w) section (identical for text; the
+    # section structure is preserved so image streams slot in unchanged)
+    ang = pos[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: Array, shape: tuple, dtype, fan_in: int | None = None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array,
+           model_sharded: bool = True) -> Array:
+    """SwiGLU MLP with TP-friendly layout."""
+    g = x @ w_gate
+    u = x @ w_up
+    if model_sharded:
+        g = shard(g, "dp", None, "model")
+        u = shard(u, "dp", None, "model")
+    h = jax.nn.silu(g) * u
+    out = h @ w_down
+    return shard(out, "dp", None, None)

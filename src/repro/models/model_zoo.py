@@ -1,0 +1,132 @@
+"""Model zoo facade: build params / input specs / step functions per
+(architecture x input shape).
+
+``input_specs(cfg, shape, abstract=True)`` returns ShapeDtypeStruct
+stand-ins for every model input (dry-run pattern: weak-type-correct,
+shardable, no allocation); ``abstract=False`` materializes small concrete
+batches for smoke tests.
+
+Modality frontends are stubs per the brief: qwen2-vl gets precomputed patch
+embeddings (B, n_patch, 1176); musicgen gets EnCodec token grids (B, S, 4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MeshConfig, ShapeConfig
+from repro.models import transformer as tf
+
+Array = jax.Array
+
+N_PATCHES = 256          # vlm stub: patches occupying the first positions
+
+
+def _mk(abstract: bool, shape: tuple, dtype, maxval: int | None = None,
+        key: Array | None = None):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jax.random.randint(key if key is not None else jax.random.PRNGKey(0), shape, 0,
+                                  maxval or 2, dtype=dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, *,
+                abstract: bool = True, key: Array | None = None) -> dict:
+    """Model inputs for one cell.  train/prefill: full batch; decode: one
+    token + caches + position."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, s, tf.N_CODEBOOKS) if cfg.family == "audio" else (b, s)
+
+    if shape.kind in ("train", "prefill"):
+        batch: dict[str, Any] = {
+            "tokens": _mk(abstract, tok_shape, jnp.int32, cfg.vocab, key)}
+        if cfg.family == "vlm":
+            batch["patches"] = _mk(
+                abstract, (b, min(N_PATCHES, s), tf.PATCH_DIM), jnp.float32)
+        if shape.kind == "train":
+            batch["labels"] = _mk(abstract, tok_shape, jnp.int32, cfg.vocab, key)
+        return batch
+
+    # decode: single token + caches + position
+    tok1 = (b, 1, tf.N_CODEBOOKS) if cfg.family == "audio" else (b, 1)
+    hck = tf.use_hck(cfg, s)
+    caches = tf.init_decode_caches(cfg, b, s, hck=hck, abstract=abstract)
+    return {
+        "tokens": _mk(abstract, tok1, jnp.int32, cfg.vocab, key),
+        "caches": caches,
+        "pos": (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                else jnp.array(s // 2, jnp.int32)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Step functions (the things the dry-run lowers and the launchers run)
+# ---------------------------------------------------------------------------
+
+def make_forward_step(cfg: ArchConfig, *, remat: bool = True):
+    def fwd(params, batch):
+        logits, aux = tf.forward(params, cfg, batch, mode="train", remat=remat)
+        return logits
+
+    return fwd
+
+
+def make_loss(cfg: ArchConfig, *, remat: bool = True):
+    def loss(params, batch):
+        return tf.loss_fn(params, cfg, batch, remat=remat)
+
+    return loss
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill(params, batch):
+        return tf.forward(params, cfg, batch, mode="prefill", remat=False)
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode(params, batch):
+        return tf.decode_step(params, cfg, batch["caches"],
+                              {"tokens": batch["tokens"]}, batch["pos"])
+
+    return decode
+
+
+def step_for_shape(cfg: ArchConfig, shape: ShapeConfig, *, remat: bool = True):
+    if shape.kind == "train":
+        return make_loss(cfg, remat=remat)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_decode_step(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Smoke-test helper: one forward/train step on a reduced config
+# ---------------------------------------------------------------------------
+
+def smoke_step(cfg: ArchConfig, shape: ShapeConfig, key: Array | None = None):
+    """Instantiate the reduced config, run one step, return outputs.
+
+    Used by tests/test_arch_smoke.py for every assigned architecture.
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    rcfg = cfg.reduced()
+    rshape = shape.reduced()
+    params = tf.init_params(rcfg, key)
+    batch = input_specs(rcfg, rshape, abstract=False, key=key)
+    if rshape.kind == "train":
+        (loss, metrics), grads = jax.value_and_grad(
+            make_loss(rcfg, remat=False), has_aux=True)(params, batch)
+        return {"loss": loss, "metrics": metrics, "grads": grads}
+    if rshape.kind == "prefill":
+        logits, caches = make_prefill_step(rcfg)(params, batch)
+        return {"logits": logits, "caches": caches}
+    logits, caches = make_decode_step(rcfg)(params, batch)
+    return {"logits": logits, "caches": caches}

@@ -1,0 +1,147 @@
+"""Mamba2 / SSD (state-space duality) mixer — chunked parallel training form
+plus the O(1)-state recurrent decode step.
+
+Chunked SSD (Dao & Gu 2024, arXiv:2405.21060): split the sequence into
+chunks of Q tokens; within a chunk the SSM is a masked (Q, Q) quadratic
+form (MXU-friendly); across chunks a first-order scan carries the
+(H, N, P) state.  Equivalent to the linear recurrence
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T ,   y_t = C_t h_t + D x_t.
+
+Decode is the recurrence itself — constant memory, the long_500k path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _segsum(x: Array) -> Array:
+    """x: (..., Q) -> (..., Q, Q) with out[i, j] = sum_{k=j+1..i} x_k (i>=j),
+    -inf above the diagonal (causal decay mask exponent)."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]            # sum_{j+1..i}
+    mask = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "intra_backend"))
+def ssd_chunked(
+    x: Array,      # (B, S, H, P)
+    dt: Array,     # (B, S, H)      (already softplus'd, positive)
+    a: Array,      # (H,)           (negative)
+    bmat: Array,   # (B, S, G, N)
+    cmat: Array,   # (B, S, G, N)
+    *,
+    chunk: int = 256,
+    intra_backend: str = "xla",
+) -> Array:
+    """Chunked SSD scan; S % chunk == 0. Returns (B, S, H, P)."""
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    nc = s // chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    bc = jnp.repeat(bmat.reshape(b, nc, chunk, g, n), rep, axis=3)
+    cc = jnp.repeat(cmat.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    da = dtc * a[None, None, None, :]                     # (B,nc,Q,H)
+    cums = jnp.cumsum(da, axis=2)                          # within-chunk
+
+    # ---- intra-chunk (quadratic, causal) --------------------------------
+    xdt = xc * dtc[..., None]                              # (B,nc,Q,H,P)
+    if intra_backend == "pallas":
+        # fused Pallas kernel (repro.kernels.ssd_chunk): per (head, chunk)
+        from repro.kernels.ssd_chunk.ops import intra_chunk
+
+        fold = lambda t: t.transpose(0, 3, 1, 2, 4).reshape(
+            b * h, nc, chunk, t.shape[-1])
+        y_flat = intra_chunk(fold(cc), fold(bc), fold(xdt),
+                             cums.transpose(0, 3, 1, 2).reshape(
+                                 b * h, nc, chunk))
+        y_intra = y_flat.reshape(b, h, nc, chunk, p).transpose(0, 2, 3, 1, 4)
+    else:
+        lmat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))  # (B,nc,H,Q,Q)
+        scores = jnp.einsum("bzihn,bzjhn->bzhij", cc, bc)  # (B,nc,H,Q,Q)
+        att = scores * lmat
+        y_intra = jnp.einsum("bzhij,bzjhp->bzihp", att, xdt)
+
+    # ---- chunk states -----------------------------------------------------
+    decay_out = jnp.exp(cums[:, :, -1:, :] - cums)         # (B,nc,Q,H)
+    states = jnp.einsum("bzjhn,bzjh,bzjhp->bzhnp", bc, dtc * decay_out, xc)
+
+    # ---- inter-chunk scan -------------------------------------------------
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))             # (B,nc,H)
+
+    def step(carry, inp):
+        st, dec = inp                                      # (B,H,N,P), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                  # emit state BEFORE chunk
+
+    init = jnp.zeros((b, h, n, p), x.dtype)
+    _, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bzihn,bzhnp,bzih->bzihp",
+                         cc, prev_states, jnp.exp(cums))
+    return (y_intra + y_inter).reshape(b, s, h, p)
+
+
+def ssd_decode_step(
+    state: Array,  # (B, H, N, P)
+    x: Array,      # (B, H, P)
+    dt: Array,     # (B, H)
+    a: Array,      # (H,)
+    bvec: Array,   # (B, G, N)
+    cvec: Array,   # (B, G, N)
+) -> tuple[Array, Array]:
+    """One-token recurrent update; returns (new_state, y (B, H, P))."""
+    b, h, n, p = state.shape
+    g = bvec.shape[1]
+    rep = h // g
+    br = jnp.repeat(bvec, rep, axis=1)                     # (B,H,N)
+    cr = jnp.repeat(cvec, rep, axis=1)
+    decay = jnp.exp(dt * a[None, :])                       # (B,H)
+    new = state * decay[..., None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhnp", br, dt, x)
+    y = jnp.einsum("bhn,bhnp->bhp", cr, new)
+    return new, y
+
+
+def causal_conv1d(x: Array, w: Array, cache: Array | None = None
+                  ) -> tuple[Array, Array]:
+    """Depthwise causal conv. x: (B, S, C), w: (K, C).
+    Returns (y (B,S,C), new_cache (B,K-1,C)).  If ``cache`` given, it is
+    prepended (decode: S==1 with cache of K-1 steps)."""
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache
+    xp = jnp.concatenate([pad, x], axis=1)                 # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    return y, xp[:, -(k - 1):]
+
+
+def ssd_reference(x, dt, a, bmat, cmat):
+    """O(S^2) / sequential oracle for tests: direct recurrence."""
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    state = jnp.zeros((b, h, n, p), jnp.float32)
+    ys = []
+    for t in range(s):
+        state, y = ssd_decode_step(
+            state, x[:, t].astype(jnp.float32), dt[:, t], a,
+            bmat[:, t], cmat[:, t])
+        ys.append(y)
+    return jnp.stack(ys, axis=1).astype(x.dtype)

@@ -1,0 +1,770 @@
+"""Decoder-only model assembly for all assigned families.
+
+One parameter table drives init / abstract shapes / PartitionSpecs (so they
+cannot drift); one forward covers train / prefill / decode via a mode flag.
+The layer stack is a lax.scan over stacked block params (O(1) compile time
+in depth — 95-layer deepseek-67b AOT-compiles on one CPU core) with
+optional per-block remat.
+
+Families:
+  dense / vlm / audio : [attn + SwiGLU]
+  moe                 : [attn + MoE (+ dense residual for arctic)]
+  ssm                 : [Mamba2/SSD]
+  hybrid (zamba2)     : [Mamba2] trunk + ONE shared attn+MLP block applied
+                        every cfg.shared_attn_every layers (weight sharing)
+
+Attention backend resolution (DESIGN.md §3): exact chunked-flash for
+train/prefill, exact decode for decode_32k; the paper's HCK hierarchical
+attention whenever cfg.attn_backend == "hck" or seq >= LONG_SEQ (auto) —
+the long_500k path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MeshConfig
+from repro.models import attention_backends as ab
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (apply_rope, dense_init, mrope_freqs,
+                                 rms_norm, rope_freqs, shard, swiglu)
+
+Array = jax.Array
+LONG_SEQ = 131072          # "auto" switches to the HCK backend at/after this
+
+# Cost-probe switch: the dry-run unrolls the layer scan so XLA's
+# cost_analysis (which skips while-loop bodies) sees every layer.  Unrolled
+# full-size compiles are too slow, so probes use reduced depth + linear
+# extrapolation (launch/dryrun.py).
+SCAN_UNROLL = False
+# MoE dispatch algorithm: "cumsum" (collective-light, default) or "sort"
+# (the original baseline; kept for §Perf comparisons).  MOE_DP_GROUPS > 1
+# makes routing group-local over the DP axes (launchers set this to the DP
+# world size; 1 == single-device tests).
+MOE_DISPATCH = "cumsum"
+MOE_DP_GROUPS = 1
+PATCH_DIM = 1176           # qwen2-vl 14*14*2*3 patch flattening
+N_CODEBOOKS = 4            # musicgen EnCodec codebooks
+
+
+def use_hck(cfg: ArchConfig, seq_len: int) -> bool:
+    if not cfg.has_attention:
+        return False
+    return cfg.attn_backend == "hck" or (
+        cfg.attn_backend == "auto" and seq_len >= LONG_SEQ)
+
+
+def hck_cfg(cfg: ArchConfig) -> ab.HCKAttnConfig:
+    return ab.HCKAttnConfig(leaf=cfg.hck_leaf, rank=cfg.hck_rank,
+                            levels=cfg.hck_levels)
+
+
+# ---------------------------------------------------------------------------
+# Parameter table
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PDef:
+    shape: tuple
+    fan_in: int
+    logical: str          # embed|col|row|norm|vec|expert|router|conv|head
+
+
+def _attn_defs(cfg: ArchConfig, prefix_shape: tuple = ()) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    defs = {
+        "ln": PDef(prefix_shape + (d,), d, "norm"),
+        "wq": PDef(prefix_shape + (d, h * hd), d, "col"),
+        "wk": PDef(prefix_shape + (d, kv * hd), d, "col"),
+        "wv": PDef(prefix_shape + (d, kv * hd), d, "col"),
+        "wo": PDef(prefix_shape + (h * hd, d), h * hd, "row"),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = PDef(prefix_shape + (hd,), hd, "norm")
+        defs["k_norm"] = PDef(prefix_shape + (hd,), hd, "norm")
+    # learned per-level HCK landmark parameters (strict causality: content-
+    # independent inducing points — DESIGN.md §3); tiny, replicated
+    defs["hck_lm"] = PDef(
+        prefix_shape + (cfg.hck_levels, cfg.hck_rank, hd), hd, "landmark")
+    return defs
+
+
+def _mlp_defs(cfg: ArchConfig, prefix_shape: tuple = ()) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "ln": PDef(prefix_shape + (d,), d, "norm"),
+        "w_gate": PDef(prefix_shape + (d, ff), d, "col"),
+        "w_up": PDef(prefix_shape + (d, ff), d, "col"),
+        "w_down": PDef(prefix_shape + (ff, d), ff, "row"),
+    }
+
+
+def _moe_defs(cfg: ArchConfig, prefix_shape: tuple = ()) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    defs = {
+        "ln": PDef(prefix_shape + (d,), d, "norm"),
+        "router": PDef(prefix_shape + (d, e), d, "router"),
+        "w_gate": PDef(prefix_shape + (e, d, ff), d, "expert"),
+        "w_up": PDef(prefix_shape + (e, d, ff), d, "expert"),
+        "w_down": PDef(prefix_shape + (e, ff, d), ff, "expert"),
+    }
+    if cfg.dense_residual:
+        for k, v in _mlp_defs(cfg, prefix_shape).items():
+            defs["res_" + k] = v
+    return defs
+
+
+def _mamba_defs(cfg: ArchConfig, prefix_shape: tuple = ()) -> dict:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    nh = din // cfg.ssm_head_dim
+    gn = cfg.ssm_groups * cfg.ssm_state
+    conv_dim = din + 2 * gn
+    return {
+        "ln": PDef(prefix_shape + (d,), d, "norm"),
+        "in_proj": PDef(prefix_shape + (d, 2 * din + 2 * gn + nh), d, "col"),
+        "conv_w": PDef(prefix_shape + (4, conv_dim), 4, "conv"),
+        "dt_bias": PDef(prefix_shape + (nh,), nh, "vec"),
+        "a_log": PDef(prefix_shape + (nh,), nh, "vec"),
+        "d_skip": PDef(prefix_shape + (nh,), nh, "vec"),
+        "gnorm": PDef(prefix_shape + (din,), din, "norm"),
+        "out_proj": PDef(prefix_shape + (din, d), din, "row"),
+    }
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    l = (cfg.n_layers,)
+    d, v = cfg.d_model, cfg.vocab
+    if cfg.family == "audio":
+        embed = {"w": PDef((N_CODEBOOKS, v, d), v, "embed")}
+        head = {"w": PDef((d, N_CODEBOOKS * v), d, "head")}
+    else:
+        embed = {"w": PDef((v, d), v, "embed")}
+        head = {"w": PDef((d, v), d, "head")}
+    if cfg.family == "vlm":
+        embed["patch_proj"] = PDef((PATCH_DIM, d), PATCH_DIM, "col")
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        blocks = {**{"attn_" + k: v for k, v in _attn_defs(cfg, l).items()},
+                  **{"mlp_" + k: v for k, v in _mlp_defs(cfg, l).items()}}
+    elif cfg.family == "moe":
+        blocks = {**{"attn_" + k: v for k, v in _attn_defs(cfg, l).items()},
+                  **{"moe_" + k: v for k, v in _moe_defs(cfg, l).items()}}
+    elif cfg.family == "ssm":
+        blocks = {"mamba_" + k: v for k, v in _mamba_defs(cfg, l).items()}
+    elif cfg.family == "hybrid":
+        blocks = {"mamba_" + k: v for k, v in _mamba_defs(cfg, l).items()}
+    else:
+        raise ValueError(cfg.family)
+
+    defs: dict = {"embed": embed, "blocks": blocks,
+                  "final_norm": {"w": PDef((d,), d, "norm")}, "head": head}
+    if cfg.family == "hybrid":
+        defs["shared"] = {**{"attn_" + k: v for k, v in _attn_defs(cfg).items()},
+                          **{"mlp_" + k: v for k, v in _mlp_defs(cfg).items()}}
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# init / abstract / pspecs from the table
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key: Array) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    flat: list[tuple[tuple, PDef]] = []
+
+    def walk(tree, path):
+        for k, v in tree.items():
+            if isinstance(v, PDef):
+                flat.append((path + (k,), v))
+            else:
+                walk(v, path + (k,))
+
+    defs = param_defs(cfg)
+    walk(defs, ())
+    keys = jax.random.split(key, len(flat))
+    out: dict = {}
+    for (path, pd), kk in zip(flat, keys):
+        if pd.logical in ("norm",):
+            arr = jnp.ones(pd.shape, dtype)
+        elif pd.logical == "landmark":
+            arr = jax.random.normal(kk, pd.shape, jnp.float32).astype(dtype)
+        elif pd.logical == "vec":
+            # dt_bias / a_log / d_skip style small positives
+            arr = jnp.full(pd.shape, 0.1, dtype)
+        else:
+            arr = dense_init(kk, pd.shape, dtype, fan_in=pd.fan_in)
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = arr
+    return out
+
+
+def abstract_params(cfg: ArchConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+
+    def conv(tree):
+        return {k: (jax.ShapeDtypeStruct(v.shape, dtype)
+                    if isinstance(v, PDef) else conv(v))
+                for k, v in tree.items()}
+
+    return conv(param_defs(cfg))
+
+
+def _pspec_for(pd: PDef, mesh: MeshConfig, serving: bool = False) -> tuple:
+    """Sharding rule: biggest matmul dim -> 'model' TP split, second dim ->
+    'dp' FSDP split, both gated on divisibility.  Stacked layer axis (and
+    expert axis when E % TP != 0) stays unsharded unless EP applies.
+
+    ``serving=True`` drops the FSDP ('dp') split on weights: decode has so
+    little arithmetic per token that FSDP's per-layer parameter all-gathers
+    dominate the step (measured 2.2e11 B/dev/token on deepseek-67b decode —
+    EXPERIMENTS.md §Perf); serving keeps weights TP-resident and all-reduces
+    activations instead, the standard inference layout.
+    """
+    dp = mesh.pods * mesh.data
+    tp = mesh.model
+    shape = pd.shape
+    spec: list = [None] * len(shape)
+
+    def ok(sz, ways):
+        return (not serving or ways == tp) and sz % ways == 0 and sz >= ways
+
+    if pd.logical in ("col", "head"):
+        if ok(shape[-1], tp):
+            spec[-1] = "model"
+        if ok(shape[-2], dp):
+            spec[-2] = "dp"
+    elif pd.logical == "row":
+        if ok(shape[-2], tp):
+            spec[-2] = "model"
+        if ok(shape[-1], dp):
+            spec[-1] = "dp"
+    elif pd.logical == "embed":
+        if ok(shape[-2], tp):
+            spec[-2] = "model"
+        if ok(shape[-1], dp):
+            spec[-1] = "dp"
+    elif pd.logical == "expert":
+        e = shape[-3]
+        if ok(e, tp):
+            spec[-3] = "model"           # EP
+        elif ok(shape[-1], tp):
+            spec[-1] = "model"           # fall back to TP on ff
+        if ok(shape[-2], dp):
+            spec[-2] = "dp"
+    elif pd.logical == "router":
+        if ok(shape[-2], dp):
+            spec[-2] = "dp"
+    # norm / vec / conv: replicated
+    return tuple(spec)
+
+
+def param_pspecs(cfg: ArchConfig, mesh: MeshConfig,
+                 serving: bool = False) -> dict:
+    from repro.models.layers import resolve_pspec
+
+    def conv(tree):
+        return {k: (resolve_pspec(_pspec_for(v, mesh, serving), mesh.dp_axes)
+                    if isinstance(v, PDef) else conv(v))
+                for k, v in tree.items()}
+
+    return conv(param_defs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _split_heads(x: Array, n: int, hd: int) -> Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd).transpose(0, 2, 1, 3)    # (B, H, S, D)
+
+
+def _merge_heads(x: Array) -> Array:
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def attn_block(x: Array, p: dict, cfg: ArchConfig, *, mode: str,
+               cos: Array, sin: Array, backend: str,
+               cache: tuple | None = None, pos: Array | None = None,
+               hck_state: ab.HCKDecodeState | None = None,
+               heads: tuple | None = None):
+    """Returns (x_out, new_cache, new_hck_state)."""
+    h, kv = (cfg.n_heads, cfg.n_kv_heads) if heads is None else heads
+    hd = cfg.head_dim
+    xn = rms_norm(x, p["ln"])
+    q = _split_heads(xn @ p["wq"], h, hd)
+    k = _split_heads(xn @ p["wk"], kv, hd)
+    v = _split_heads(xn @ p["wv"], kv, hd)
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q.transpose(0, 2, 1, 3), cos, sin).transpose(0, 2, 1, 3)
+    k = apply_rope(k.transpose(0, 2, 1, 3), cos, sin).transpose(0, 2, 1, 3)
+    q = shard(q, "dp", "model", None, None)
+    k = shard(k, "dp", None, None, None)
+
+    new_cache, new_state = cache, hck_state
+    lm = p.get("hck_lm")
+    if mode in ("train", "prefill"):
+        if backend == "hck":
+            out = ab.hck_attention(q, k, v, cfg=hck_cfg(cfg), landmarks=lm)
+        else:
+            out = ab.chunked_attention(q, k, v, causal=True,
+                                       window=cfg.sliding_window)
+        if mode == "prefill":
+            new_cache = (k, v)
+            if backend == "hck":
+                new_state = ab.build_hck_decode_state(
+                    k, v, cfg=hck_cfg(cfg), landmarks=lm)
+    else:  # decode
+        if backend == "hck":
+            out = ab.hck_decode_attention(q, hck_state)
+            new_state = ab.hck_decode_append(hck_state, k, v)
+        else:
+            ck, cv = cache
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k, pos, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v, pos, axis=2)
+            out = ab.decode_attention(q, ck, cv, window=cfg.sliding_window,
+                                      length=pos + 1)
+            new_cache = (ck, cv)
+    y = _merge_heads(out) @ p["wo"]
+    return shard(x + y, "dp", None, None), new_cache, new_state
+
+
+def mlp_block(x: Array, p: dict) -> Array:
+    xn = rms_norm(x, p["ln"])
+    return x + swiglu(xn, p["w_gate"], p["w_up"], p["w_down"])
+
+
+def moe_block(x: Array, p: dict, cfg: ArchConfig) -> tuple[Array, Array]:
+    xn = rms_norm(x, p["ln"])
+    y, aux = moe_lib.moe_ffn(xn, p["router"], p["w_gate"], p["w_up"],
+                             p["w_down"], top_k=cfg.top_k,
+                             capacity_factor=cfg.capacity_factor,
+                             dispatch=MOE_DISPATCH,
+                             dp_groups=MOE_DP_GROUPS)
+    if cfg.dense_residual:
+        y = y + swiglu(rms_norm(x, p["res_ln"]), p["res_w_gate"],
+                       p["res_w_up"], p["res_w_down"])
+    return x + y, aux
+
+
+def mamba_block(x: Array, p: dict, cfg: ArchConfig, *, mode: str,
+                ssm_state: Array | None = None,
+                conv_cache: Array | None = None):
+    """Returns (x_out, new_ssm_state, new_conv_cache)."""
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    nh = din // cfg.ssm_head_dim
+    ph = cfg.ssm_head_dim
+    gn = cfg.ssm_groups * cfg.ssm_state
+    xn = rms_norm(x, p["ln"])
+    zxbcdt = xn @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * gn], axis=-1)
+    xbc, new_conv = ssm_lib.causal_conv1d(xbc, p["conv_w"], cache=conv_cache)
+    xbc = jax.nn.silu(xbc)
+    xs, bmat, cmat = jnp.split(xbc, [din, din + gn], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    b_, s_ = x.shape[0], x.shape[1]
+    xh = xs.reshape(b_, s_, nh, ph)
+    bm = bmat.reshape(b_, s_, cfg.ssm_groups, cfg.ssm_state)
+    cm = cmat.reshape(b_, s_, cfg.ssm_groups, cfg.ssm_state)
+    if mode == "decode":
+        new_state, yh = ssm_lib.ssd_decode_step(
+            ssm_state, xh[:, 0].astype(jnp.float32), dt[:, 0], a,
+            bm[:, 0].astype(jnp.float32), cm[:, 0].astype(jnp.float32))
+        yh = yh[:, None]
+    else:
+        chunk = min(cfg.ssm_chunk, s_)
+        yh = ssm_lib.ssd_chunked(xh.astype(jnp.float32), dt, a,
+                                 bm.astype(jnp.float32),
+                                 cm.astype(jnp.float32), chunk=chunk)
+        new_state = None
+        if mode == "prefill":
+            # final state for decode continuation: replay decay over chunks
+            # (cheap O(S) reconstruction — reuse the scan by re-running the
+            # last chunk recurrently would be cheaper; kept simple here)
+            new_state = _ssd_final_state(xh, dt, a, bm, cm)
+    yh = yh + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = yh.reshape(b_, s_, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gnorm"])
+    return shard(x + y @ p["out_proj"], "dp", None, None), new_state, new_conv
+
+
+def _ssd_final_state(xh, dt, a, bm, cm):
+    """Final SSM state h_S (B, H, N, P) for prefill->decode handoff."""
+    b, s, h, p = xh.shape
+    g, n = bm.shape[2], bm.shape[3]
+    rep = h // g
+    da = dt * a[None, None, :]
+    cum = jnp.cumsum(da, axis=1)
+    decay = jnp.exp(cum[:, -1:, :] - cum)                  # (B,S,H)
+    br = jnp.repeat(bm, rep, axis=2)                       # (B,S,H,N)
+    return jnp.einsum("bshn,bsh,bshp->bhnp",
+                      br.astype(jnp.float32), dt * decay,
+                      xh.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params: dict, cfg: ArchConfig, batch: dict) -> Array:
+    if cfg.family == "audio":
+        toks = batch["tokens"]                             # (B, S, K)
+        w = params["embed"]["w"]                           # (K, V, d)
+        x = sum(jnp.take(w[i], toks[..., i], axis=0)
+                for i in range(N_CODEBOOKS))
+    else:
+        x = jnp.take(params["embed"]["w"], batch["tokens"], axis=0)
+    if cfg.family == "vlm" and "patches" in batch:
+        proj = batch["patches"].astype(x.dtype) @ params["embed"]["patch_proj"]
+        npatch = proj.shape[1]
+        x = jnp.concatenate([proj, x[:, npatch:]], axis=1)
+    return shard(x.astype(jnp.dtype(cfg.dtype)), "dp", None, None)
+
+
+def lm_head(params: dict, cfg: ArchConfig, x: Array) -> Array:
+    x = rms_norm(x, params["final_norm"]["w"])
+    logits = x @ params["head"]["w"]
+    return shard(logits, "dp", None, "model")
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill) and decode
+# ---------------------------------------------------------------------------
+
+def _freqs(cfg: ArchConfig, seq: int, offset=0):
+    hd = cfg.head_dim if cfg.has_attention else 2
+    if cfg.mrope:
+        return mrope_freqs(seq, hd, cfg.rope_theta, offset=offset)
+    return rope_freqs(seq, hd, cfg.rope_theta, offset=offset)
+
+
+def forward(params: dict, cfg: ArchConfig, batch: dict, *,
+            mode: str = "train", remat: bool = True):
+    """Returns (logits, aux) for train; (logits, caches) for prefill."""
+    x = embed_tokens(params, cfg, batch)
+    seq = x.shape[1]
+    backend = "hck" if use_hck(cfg, seq) else "exact"
+    cos, sin = _freqs(cfg, seq)
+    nl = cfg.n_layers
+
+    collect_cache = mode == "prefill"
+
+    def block_fn(carry, inp):
+        x, aux = carry
+        bp, idx = inp
+        cache_out = ()
+        if cfg.family in ("dense", "vlm", "audio", "moe"):
+            ap = {k[len("attn_"):]: v for k, v in bp.items()
+                  if k.startswith("attn_")}
+            x, cache, state = attn_block(
+                x, ap, cfg, mode=mode, cos=cos, sin=sin, backend=backend)
+            if cfg.family == "moe":
+                mp = {k[len("moe_"):]: v for k, v in bp.items()
+                      if k.startswith("moe_")}
+                x, a = moe_block(x, mp, cfg)
+                aux = aux + a
+            else:
+                mp = {k[len("mlp_"):]: v for k, v in bp.items()
+                      if k.startswith("mlp_")}
+                x = mlp_block(x, mp)
+            if collect_cache:
+                cache_out = (cache[0], cache[1],
+                             _pack_state(state, backend, cfg, x))
+        else:  # ssm / hybrid
+            mp = {k[len("mamba_"):]: v for k, v in bp.items()
+                  if k.startswith("mamba_")}
+            x, sstate, conv = mamba_block(x, mp, cfg, mode=mode)
+            shared_kv = ()
+            if cfg.family == "hybrid" and cfg.shared_attn_every:
+                b_, s_ = x.shape[0], x.shape[1]
+                kvh, hd = cfg.n_kv_heads, cfg.head_dim
+
+                def with_attn(x):
+                    sp = params["shared"]
+                    apx = {k[len("attn_"):]: v for k, v in sp.items()
+                           if k.startswith("attn_")}
+                    # collect raw shared KV during prefill (hck states are
+                    # built post-scan from the selected application slots)
+                    xo, cache, _ = attn_block(
+                        x, apx, cfg,
+                        mode="prefill" if collect_cache else "train",
+                        cos=cos, sin=sin,
+                        backend="exact" if collect_cache else backend)
+                    mpx = {k[len("mlp_"):]: v for k, v in sp.items()
+                           if k.startswith("mlp_")}
+                    xo = mlp_block(xo, mpx)
+                    if collect_cache:
+                        return xo, cache[0], cache[1]
+                    return xo
+
+                def no_attn(x):
+                    if collect_cache:
+                        z = jnp.zeros((b_, kvh, s_, hd), x.dtype)
+                        return x, z, z
+                    return x
+
+                res = jax.lax.cond(idx % cfg.shared_attn_every == 0,
+                                   with_attn, no_attn, x)
+                if collect_cache:
+                    x, sk, sv = res
+                    shared_kv = (sk, sv)
+                else:
+                    x = res
+            if collect_cache:
+                cache_out = (sstate, conv) + shared_kv
+        return (x, aux), cache_out
+
+    body = jax.checkpoint(block_fn) if (remat and mode == "train") else block_fn
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["blocks"], jnp.arange(nl)), unroll=nl if SCAN_UNROLL else 1)
+    logits = lm_head(params, cfg, x)
+    if mode == "prefill":
+        return logits, caches
+    return logits, aux
+
+
+def _pack_state(state, backend, cfg, x):
+    if backend != "hck" or state is None:
+        return 0
+    return state
+
+
+def loss_fn(params: dict, cfg: ArchConfig, batch: dict, *,
+            remat: bool = True) -> tuple[Array, dict]:
+    """Next-token CE, vocab-sharding-safe: the label pick is a one-hot
+    contraction over the (model-sharded) vocab axis — GSPMD lowers it to a
+    local partial-sum + psum instead of an all-gather of the logits."""
+    logits, aux = forward(params, cfg, batch, mode="train", remat=remat)
+    labels = batch["labels"]
+    if cfg.family == "audio":
+        b, s, _ = logits.shape
+        logits = logits.reshape(b, s, N_CODEBOOKS, cfg.vocab)
+    logits = logits.astype(jnp.float32)
+    z = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, cfg.vocab, dtype=jnp.float32)
+    true_logit = jnp.sum(logits * onehot, axis=-1)
+    nll = z - true_logit
+    loss = jnp.mean(nll) + 0.01 * aux
+    return loss, {"nll": jnp.mean(nll), "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def init_decode_caches(cfg: ArchConfig, batch_size: int, max_seq: int,
+                       *, hck: bool, abstract: bool = False):
+    """Cache pytree for decode: per layer KV (+ hck state) or SSM states."""
+    dtype = jnp.dtype(cfg.dtype)
+    l = cfg.n_layers
+    mk = (jax.ShapeDtypeStruct if abstract
+          else lambda s, d: jnp.zeros(s, d))
+
+    def mk_eye(shape, d):
+        # Sigma grams must be invertible even in a fresh (pre-prefill) state
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, d)
+        return jnp.broadcast_to(jnp.eye(shape[-1], dtype=d), shape)
+
+    caches: dict[str, Any] = {}
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+        if hck:
+            hcfg = hck_cfg(cfg).for_seq(max_seq)
+            n0 = max_seq // (1 << hcfg.levels)
+            r = hcfg.rank
+            caches["hck"] = {
+                "window_k": mk((l, batch_size, kv, n0, hd), dtype),
+                "window_v": mk((l, batch_size, kv, n0, hd), dtype),
+                "lm_k": mk((l, batch_size, kv, r, hd), dtype),
+                "sigma": mk_eye((l, batch_size, kv, r, r), jnp.float32),
+                "summary": mk((l, batch_size, kv, r, hd + 1), jnp.float32),
+                "win_len": mk((l,), jnp.int32),
+            }
+        else:
+            caches["k"] = mk((l, batch_size, kv, max_seq, hd), dtype)
+            caches["v"] = mk((l, batch_size, kv, max_seq, hd), dtype)
+    if cfg.ssm:
+        din = cfg.ssm_expand * cfg.d_model
+        nh = din // cfg.ssm_head_dim
+        gn = cfg.ssm_groups * cfg.ssm_state
+        caches["ssm"] = mk((l, batch_size, nh, cfg.ssm_state,
+                            cfg.ssm_head_dim), jnp.float32)
+        caches["conv"] = mk((l, batch_size, 3, din + 2 * gn), dtype)
+        if cfg.family == "hybrid" and cfg.shared_attn_every:
+            napp = (l + cfg.shared_attn_every - 1) // cfg.shared_attn_every
+            hcfg = hck_cfg(cfg).for_seq(max_seq)
+            n0 = max_seq // (1 << hcfg.levels)
+            r = hcfg.rank
+            if use_hck(cfg, max_seq):
+                caches["shared_hck"] = {
+                    "window_k": mk((napp, batch_size, cfg.n_kv_heads, n0, cfg.head_dim), dtype),
+                    "window_v": mk((napp, batch_size, cfg.n_kv_heads, n0, cfg.head_dim), dtype),
+                    "lm_k": mk((napp, batch_size, cfg.n_kv_heads, r, cfg.head_dim), dtype),
+                    "sigma": mk_eye((napp, batch_size, cfg.n_kv_heads, r, r), jnp.float32),
+                    "summary": mk((napp, batch_size, cfg.n_kv_heads, r, cfg.head_dim + 1),
+                                  jnp.float32),
+                    "win_len": mk((napp,), jnp.int32),
+                }
+            else:
+                caches["shared_k"] = mk(
+                    (napp, batch_size, cfg.n_kv_heads, max_seq, cfg.head_dim),
+                    dtype)
+                caches["shared_v"] = mk(
+                    (napp, batch_size, cfg.n_kv_heads, max_seq, cfg.head_dim),
+                    dtype)
+    return caches
+
+
+def decode_step(params: dict, cfg: ArchConfig, caches: dict, batch: dict,
+                pos: Array):
+    """One-token serve step. batch["tokens"]: (B, 1[, K]).  Returns
+    (logits (B, 1, V...), new_caches)."""
+    x = embed_tokens(params, cfg, batch)
+    seq_total = _cache_seq(cfg, caches)
+    backend = "hck" if (use_hck(cfg, seq_total) or "hck" in caches) else "exact"
+    cos, sin = _freqs(cfg, 1, offset=pos)
+    nl = cfg.n_layers
+
+    def block_fn(x, inp):
+        bp, idx, cache_slice = inp
+        new_slice = dict(cache_slice)
+        if cfg.family in ("dense", "vlm", "audio", "moe"):
+            ap = {k[len("attn_"):]: v for k, v in bp.items()
+                  if k.startswith("attn_")}
+            if backend == "hck":
+                st = ab.HCKDecodeState(**cache_slice["hck"])
+                x, _, st = attn_block(x, ap, cfg, mode="decode", cos=cos,
+                                      sin=sin, backend="hck", hck_state=st)
+                new_slice["hck"] = {
+                    "window_k": st.window_k, "window_v": st.window_v,
+                    "lm_k": st.lm_k, "sigma": st.sigma,
+                    "summary": st.summary, "win_len": st.win_len}
+            else:
+                x, cache, _ = attn_block(
+                    x, ap, cfg, mode="decode", cos=cos, sin=sin,
+                    backend="exact",
+                    cache=(cache_slice["k"], cache_slice["v"]), pos=pos)
+                new_slice["k"], new_slice["v"] = cache
+            if cfg.family == "moe":
+                mp = {k[len("moe_"):]: v for k, v in bp.items()
+                      if k.startswith("moe_")}
+                x, _ = moe_block(x, mp, cfg)
+            else:
+                mp = {k[len("mlp_"):]: v for k, v in bp.items()
+                      if k.startswith("mlp_")}
+                x = mlp_block(x, mp)
+        else:
+            mp = {k[len("mamba_"):]: v for k, v in bp.items()
+                  if k.startswith("mamba_")}
+            x, sstate, conv = mamba_block(
+                x, mp, cfg, mode="decode",
+                ssm_state=cache_slice["ssm"], conv_cache=cache_slice["conv"])
+            new_slice["ssm"], new_slice["conv"] = sstate, conv
+            # hybrid shared attention at decode
+            if cfg.family == "hybrid" and cfg.shared_attn_every:
+                def with_attn(operand):
+                    x, sl = operand
+                    sp = params["shared"]
+                    apx = {k[len("attn_"):]: v for k, v in sp.items()
+                           if k.startswith("attn_")}
+                    if "shared_hck" in sl:
+                        st = ab.HCKDecodeState(**sl["shared_hck"])
+                        xo, _, st = attn_block(
+                            x, apx, cfg, mode="decode", cos=cos, sin=sin,
+                            backend="hck", hck_state=st)
+                        sl = dict(sl)
+                        sl["shared_hck"] = {
+                            "window_k": st.window_k, "window_v": st.window_v,
+                            "lm_k": st.lm_k, "sigma": st.sigma,
+                            "summary": st.summary, "win_len": st.win_len}
+                    else:
+                        xo, cache, _ = attn_block(
+                            x, apx, cfg, mode="decode", cos=cos, sin=sin,
+                            backend="exact",
+                            cache=(sl["shared_k"], sl["shared_v"]), pos=pos)
+                        sl = dict(sl)
+                        sl["shared_k"], sl["shared_v"] = cache
+                    mpx = {k[len("mlp_"):]: v for k, v in sp.items()
+                           if k.startswith("mlp_")}
+                    return mlp_block(xo, mpx), sl
+
+                shared_keys = [k for k in new_slice if k.startswith("shared")]
+                sl_in = {k: new_slice[k] for k in shared_keys}
+                x, sl_out = jax.lax.cond(
+                    idx % cfg.shared_attn_every == 0, with_attn,
+                    lambda op: op, (x, sl_in))
+                new_slice.update(sl_out)
+        return x, new_slice
+
+    # scan over layers; caches have leading layer axis (shared_* uses idx//every)
+    per_layer = _caches_per_layer(cfg, caches)
+    x, new_caches = jax.lax.scan(
+        block_fn, x, (params["blocks"], jnp.arange(nl), per_layer),
+        unroll=nl if SCAN_UNROLL else 1)
+    logits = lm_head(params, cfg, x)
+    return logits, _caches_from_layerwise(cfg, caches, new_caches)
+
+
+def _cache_seq(cfg, caches):
+    if "k" in caches:
+        return caches["k"].shape[3]
+    if "hck" in caches:
+        n0 = caches["hck"]["window_k"].shape[3]
+        return max(LONG_SEQ, n0)   # hck caches imply long mode
+    if "shared_k" in caches:
+        return caches["shared_k"].shape[3]
+    return LONG_SEQ if ("shared_hck" in caches or cfg.ssm) else 0
+
+
+def _caches_per_layer(cfg, caches):
+    """Broadcast shared_* caches to per-layer slices for the scan (each layer
+    sees the application-slot it would use; non-applying layers pass through)."""
+    nl = cfg.n_layers
+    out = {}
+    for k, v in caches.items():
+        if k.startswith("shared"):
+            every = cfg.shared_attn_every
+            idx = jnp.arange(nl) // every
+
+            def take(x, idx=idx):
+                return jnp.take(x, jnp.minimum(idx, x.shape[0] - 1), axis=0)
+
+            out[k] = jax.tree.map(take, v)
+        else:
+            out[k] = v
+    return out
+
+
+def _caches_from_layerwise(cfg, caches, new_layerwise):
+    """Invert _caches_per_layer: keep the updated slot from the layer that
+    actually applied the shared block."""
+    out = {}
+    for k, v in new_layerwise.items():
+        if k.startswith("shared"):
+            every = cfg.shared_attn_every
+            napp = jax.tree.leaves(caches[k])[0].shape[0]
+            sel = jnp.arange(napp) * every
+
+            def take(x, sel=sel):
+                return jnp.take(x, sel, axis=0)
+
+            out[k] = jax.tree.map(take, v)
+        else:
+            out[k] = v
+    return out

@@ -1,0 +1,111 @@
+"""Batched serving: prefill + autoregressive decode with continuous cache.
+
+Greedy/temperature sampling over the decode_step of models/transformer.py.
+The HCK long-context path refreshes its Algorithm-3 summaries every
+``refresh_every`` tokens (amortized O(r)/token — DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.models.model_zoo import make_decode_step, make_prefill_step
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ServeSession:
+    cfg: ArchConfig
+    params: dict
+    max_seq: int
+    caches: dict | None = None
+    pos: int = 0
+
+    def prefill(self, batch: dict) -> Array:
+        """Run the prompt; initialize caches; return last-token logits."""
+        logits, layer_caches = make_prefill_step(self.cfg)(self.params, batch)
+        seq = jax.tree.leaves(batch)[0].shape[1]
+        b = jax.tree.leaves(batch)[0].shape[0]
+        hck = tf.use_hck(self.cfg, self.max_seq)
+        self.caches = tf.init_decode_caches(
+            self.cfg, b, self.max_seq, hck=hck, abstract=False)
+        self._absorb_prefill(layer_caches, seq)
+        self.pos = seq
+        return logits[:, -1]
+
+    def _absorb_prefill(self, layer_caches, seq: int):
+        cfg = self.cfg
+        if cfg.family in ("dense", "vlm", "audio", "moe"):
+            k, v = layer_caches[0], layer_caches[1]      # (L,B,kv,S,hd)
+            if "hck" in self.caches:
+                hcfg = tf.hck_cfg(cfg).for_seq(self.max_seq)
+                # per-layer LEARNED landmarks: the decode state must use the
+                # same inducing points the prefill attention used
+                lms = self.params["blocks"]["attn_hck_lm"]   # (L, lvl, r, hd)
+                states = jax.vmap(
+                    lambda kk, vv, lm: jax.tree.flatten(
+                        tf.ab.build_hck_decode_state(kk, vv, cfg=hcfg,
+                                                     landmarks=lm))[0]
+                )(k, v, lms)
+                names = ["window_k", "window_v", "lm_k", "sigma", "summary",
+                         "win_len"]
+                self.caches["hck"] = dict(zip(names, states))
+            else:
+                self.caches["k"] = self.caches["k"].at[:, :, :, :seq].set(k)
+                self.caches["v"] = self.caches["v"].at[:, :, :, :seq].set(v)
+        if cfg.ssm:
+            self.caches["ssm"] = layer_caches[0]
+            self.caches["conv"] = layer_caches[1]
+            if cfg.family == "hybrid" and len(layer_caches) > 2:
+                sk, sv = layer_caches[2], layer_caches[3]
+                every = cfg.shared_attn_every
+                if "shared_k" in self.caches:
+                    napp = self.caches["shared_k"].shape[0]
+                    idx = jnp.arange(napp) * every
+                    self.caches["shared_k"] = self.caches["shared_k"].at[
+                        :, :, :, :seq].set(sk[idx])
+                    self.caches["shared_v"] = self.caches["shared_v"].at[
+                        :, :, :, :seq].set(sv[idx])
+                elif "shared_hck" in self.caches:
+                    hcfg = tf.hck_cfg(cfg).for_seq(self.max_seq)
+                    napp = jax.tree.leaves(
+                        self.caches["shared_hck"])[0].shape[0]
+                    idx = jnp.arange(napp) * every
+                    lm = self.params["shared"]["attn_hck_lm"]
+                    states = jax.vmap(
+                        lambda kk, vv: jax.tree.flatten(
+                            tf.ab.build_hck_decode_state(kk, vv, cfg=hcfg,
+                                                         landmarks=lm))[0]
+                    )(sk[idx], sv[idx])
+                    names = ["window_k", "window_v", "lm_k", "sigma",
+                             "summary", "win_len"]
+                    self.caches["shared_hck"] = dict(zip(names, states))
+
+    def decode(self, tokens: Array, *, steps: int, temperature: float = 0.0,
+               key: Array | None = None) -> Array:
+        """Generate ``steps`` tokens starting from ``tokens`` (B, 1[, K])."""
+        decode_fn = jax.jit(make_decode_step(self.cfg))
+        key = key if key is not None else jax.random.PRNGKey(0)
+        out = [tokens]
+        cur = tokens
+        for i in range(steps):
+            batch = {"tokens": cur, "caches": self.caches,
+                     "pos": jnp.asarray(self.pos, jnp.int32)}
+            logits, self.caches = decode_fn(self.params, batch)
+            if self.cfg.family == "audio":
+                b = logits.shape[0]
+                logits = logits.reshape(b, 1, tf.N_CODEBOOKS, self.cfg.vocab)
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits[:, -1] / temperature)
+            else:
+                nxt = jnp.argmax(logits[:, -1], axis=-1)
+            cur = nxt[:, None] if nxt.ndim == 1 else nxt[:, None, :]
+            out.append(cur)
+            self.pos += 1
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,72 @@
+"""Gradient compression for the DP all-reduce: int8 quantization with error
+feedback.
+
+At 1000+ node scale the data-parallel gradient all-reduce is the dominant
+cross-pod collective.  Per-tensor symmetric int8 quantization cuts its
+bytes 4x (bf16 grads) while error feedback (the residual is carried in the
+optimizer state and re-added next step) keeps convergence unbiased in the
+long run (Seide et al. 2014; Karimireddy et al. 2019).
+
+The quantize/dequantize pair brackets the psum inside shard_map in the
+distributed train step; in the single-process path it still runs (identity
++ quantization noise) so tests exercise the exact deployed code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def quantize_int8(x: Array) -> tuple[Array, Array]:
+    """Symmetric per-tensor int8: returns (q, scale)."""
+    x = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef_state):
+    """Apply error feedback + quantize each leaf.
+
+    Returns (quantized pytree of (q, scale), new_ef_state).
+    new_ef = (g + ef) - dequant(quant(g + ef)).
+    """
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_ef = jax.tree.leaves(ef_state)
+    qs, efs = [], []
+    for g, ef in zip(flat_g, flat_ef):
+        corrected = g.astype(jnp.float32) + ef
+        q, scale = quantize_int8(corrected)
+        qs.append((q, scale))
+        efs.append(corrected - dequantize_int8(q, scale))
+    return jax.tree.unflatten(tdef, qs), jax.tree.unflatten(tdef, efs)
+
+
+def decompress_grads(qtree, like):
+    flat_q, _ = jax.tree.flatten(
+        qtree, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+    flat_l, tdef = jax.tree.flatten(like)
+    out = [dequantize_int8(q, s).astype(jnp.float32) for (q, s) in flat_q]
+    return jax.tree.unflatten(tdef, out)
+
+
+def roundtrip(grads, ef_state):
+    """compress -> decompress (the collective sits between these in the
+    distributed step).  Returns (grads~, new_ef)."""
+    qs, efs = compress_grads(grads, ef_state)
+    return decompress_grads(qs, grads), efs
+
+
+def compressed_bytes(grads) -> int:
+    """Bytes on the wire after compression (int8 + one f32 scale per leaf)."""
+    return sum(x.size + 4 for x in jax.tree.leaves(grads))
+
+
+def raw_bytes(grads) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(grads))

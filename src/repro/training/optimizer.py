@@ -1,0 +1,122 @@
+"""AdamW with ZeRO-1-style sharded state and an fp32 master copy.
+
+Built dependency-free (no optax in the container): the update is a pure
+pytree map, so XLA/GSPMD shards the first/second moments and the master
+copy over the DP axes via the ``opt_pspecs`` returned alongside — the
+ZeRO-1 trick is entirely in the out_shardings, not in the math.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import TrainConfig
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class OptState:
+    step: Array
+    mu: Any                 # first moment, fp32
+    nu: Any                 # second moment, fp32
+    master: Any             # fp32 master params (bf16 training)
+    ef: Any | None          # error-feedback residual (grad compression)
+
+    def tree_flatten(self):
+        return (self.step, self.mu, self.nu, self.master, self.ef), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_opt_state(params, *, compression: bool = False) -> OptState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        ef=jax.tree.map(f32, params) if compression else None,
+    )
+
+
+def abstract_opt_state(params_abs, *, compression: bool = False) -> OptState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree.map(f32, params_abs),
+        nu=jax.tree.map(f32, params_abs),
+        master=jax.tree.map(f32, params_abs),
+        ef=jax.tree.map(f32, params_abs) if compression else None,
+    )
+
+
+def opt_pspecs(param_pspecs_tree, *, mesh_dp_axes, compression: bool = False):
+    """ZeRO-1: moments/master take the param spec and ADDITIONALLY shard the
+    first unsharded, divisible axis over the DP axes.  Here we reuse the
+    param pspec directly (params already FSDP-shard big axes over dp+model,
+    which subsumes ZeRO-1's goal); step is replicated."""
+    same = param_pspecs_tree
+    return OptState(
+        step=P(),
+        mu=same, nu=same, master=same,
+        ef=same if compression else None,
+    )
+
+
+def lr_schedule(cfg: TrainConfig, step: Array) -> Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state: OptState, cfg: TrainConfig):
+    """One AdamW step (fp32 math, bf16 param write-back)."""
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+
+    def upd(g, mu, nu, master):
+        g = g.astype(jnp.float32) * clip
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mu_hat = mu / (1 - cfg.b1 ** step)
+        nu_hat = nu / (1 - cfg.b2 ** step)
+        master = master - lr * (mu_hat / (jnp.sqrt(nu_hat) + 1e-8)
+                                + cfg.weight_decay * master)
+        return mu, nu, master
+
+    mus, nus, masters = [], [], []
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+    flat_ma = jax.tree.leaves(state.master)
+    for g, mu, nu, ma in zip(flat_g, flat_mu, flat_nu, flat_ma):
+        mu, nu, ma = upd(g, mu, nu, ma)
+        mus.append(mu)
+        nus.append(nu)
+        masters.append(ma)
+    params_dtype = jax.tree.leaves(params)[0].dtype
+    new_params = jax.tree.unflatten(
+        tdef, [m.astype(params_dtype) for m in masters])
+    new_state = OptState(step,
+                         jax.tree.unflatten(tdef, mus),
+                         jax.tree.unflatten(tdef, nus),
+                         jax.tree.unflatten(tdef, masters),
+                         state.ef)
+    return new_params, new_state, {"lr": lr, "grad_norm": gn}

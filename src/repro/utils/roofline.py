@@ -1,0 +1,131 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOPs)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+cost_analysis() supplies FLOPs and bytes; collective bytes are NOT in
+cost_analysis, so we parse the (post-SPMD) HLO text and sum the operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Hardware model: TPU v5e — 197 TF/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s per ICI link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# --- hardware constants (TPU v5e) -------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shapes like  f32[16,128]{1,0}  or  bf16[8,1024,128]
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op, by kind.
+
+    Sizes in post-SPMD HLO are PER-PARTICIPANT shapes, so the totals are
+    per-device wire bytes (the roofline denominator is per-chip link bw).
+    ``collective-permute-start``/``done`` pairs are counted once (start).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, rhs = stripped.split("=", 1)
+        rhs = rhs.strip()
+        m = re.match(r"^(?:\(([^)]*)\)|(\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+                     r"([\w-]+)", rhs)
+        if not m:
+            continue
+        opname = m.group(3)
+        kind = next((c for c in _COLLECTIVES if opname == c
+                     or opname == c + "-start"), None)
+        if kind is None:
+            continue
+        shapes_src = m.group(1) if m.group(1) is not None else m.group(2)
+        nbytes = sum(_shape_bytes(dt, dims)
+                     for dt, dims in _SHAPE_RE.findall(shapes_src))
+        out[kind] += nbytes
+        counts[kind] += 1
+    out_counts = {k + "_count": v for k, v in counts.items()}
+    return {**out, **out_counts, "total": sum(out[k] for k in _COLLECTIVES)}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """All inputs are PER-DEVICE quantities.
+
+    jax's compiled.cost_analysis() reports the post-SPMD per-device program,
+    and (calibrated empirically — see EXPERIMENTS.md §Dry-run) counts each
+    while/scan body ONCE, so callers must depth-extrapolate scan-over-layers
+    programs before constructing these terms.
+    """
+
+    flops: float                  # per-device HLO flops
+    hbm_bytes: float              # per-device bytes accessed
+    coll_bytes_per_dev: float     # per-device wire bytes
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_dev / LINK_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bound": self.bound,
+            "step_s": self.step_s,
+        }
+
+
+def model_flops(param_count: int, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6 N D for training, 2 N D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * param_count * tokens

@@ -1,0 +1,27 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on 1 CPU device;
+only launch/dryrun.py (and subprocess-based tests) use placeholder devices.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.kernels_fn import BaseKernel
+from repro.core.hck import build_hck
+
+
+@pytest.fixture(scope="session")
+def f64():
+    """Enable float64 for oracle-grade comparisons (session-wide)."""
+    jax.config.update("jax_enable_x64", True)
+    yield
+    # leave enabled: cheaper than flapping the flag between tests
+
+
+@pytest.fixture(scope="session")
+def small_problem(f64):
+    """(x, kernel, factors) for a 256-point float64 HCK instance."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 5), dtype=jnp.float64)
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-8)
+    f = build_hck(x, levels=3, rank=16, key=jax.random.PRNGKey(1), kernel=ker)
+    return x, ker, f

@@ -1,0 +1,85 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, as a
+REDUCED same-family config, runs one train step and one decode step on CPU
+with finite outputs and correct shapes.  The FULL configs are exercised via
+the dry-run only (see launch/dryrun.py + EXPERIMENTS.md)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch, get_shape, list_archs
+from repro.models.model_zoo import smoke_step
+from repro.models.transformer import N_CODEBOOKS
+
+ARCHS = list_archs()
+
+
+def test_all_ten_archs_registered():
+    assert set(ARCHS) == {
+        "zamba2-7b", "qwen2-vl-7b", "deepseek-67b", "deepseek-7b",
+        "granite-3-2b", "qwen3-32b", "mixtral-8x22b", "arctic-480b",
+        "mamba2-780m", "musicgen-medium"}
+
+
+def test_exact_assigned_hyperparameters():
+    """Full configs carry the assignment-table numbers verbatim."""
+    c = get_arch("deepseek-67b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (95, 8192, 64, 8, 22016, 102400)
+    c = get_arch("mixtral-8x22b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab,
+            c.n_experts, c.top_k) == (56, 6144, 48, 8, 16384, 32768, 8, 2)
+    c = get_arch("arctic-480b")
+    assert (c.n_experts, c.top_k, c.dense_residual) == (128, 2, True)
+    c = get_arch("mamba2-780m")
+    assert (c.n_layers, c.d_model, c.ssm_state, c.n_heads) == (48, 1536, 128, 0)
+    c = get_arch("zamba2-7b")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (81, 3584, 64)
+    c = get_arch("qwen2-vl-7b")
+    assert (c.n_kv_heads, c.mrope, c.vocab) == (4, True, 152064)
+    c = get_arch("qwen3-32b")
+    assert (c.qk_norm, c.d_ff) == (True, 25600)
+    c = get_arch("granite-3-2b")
+    assert (c.n_layers, c.vocab) == (40, 49155)
+    c = get_arch("musicgen-medium")
+    assert (c.n_layers, c.d_model, c.vocab) == (48, 1536, 2048)
+    c = get_arch("deepseek-7b")
+    assert (c.n_layers, c.d_model, c.n_kv_heads) == (30, 4096, 32)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_arch(arch)
+    out = smoke_step(cfg, get_shape("train_4k"))
+    assert jnp.isfinite(out["loss"])
+    # gradients exist and are finite for every parameter
+    import jax
+
+    for g in jax.tree.leaves(out["grads"]):
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_smoke(arch):
+    cfg = get_arch(arch)
+    out = smoke_step(cfg, get_shape("decode_32k"))
+    logits = out["logits"]
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    rcfg = cfg.reduced()
+    want_v = rcfg.vocab * (N_CODEBOOKS if cfg.family == "audio" else 1)
+    assert logits.shape == (2, 1, want_v)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-780m", "zamba2-7b", "deepseek-7b",
+                                  "musicgen-medium"])
+def test_prefill_step_smoke(arch):
+    cfg = get_arch(arch)
+    out = smoke_step(cfg, get_shape("prefill_32k"))
+    assert bool(jnp.all(jnp.isfinite(out["logits"])))
+
+
+@pytest.mark.parametrize("arch", ["mamba2-780m", "zamba2-7b", "granite-3-2b"])
+def test_long_decode_smoke(arch):
+    """long_500k cells (reduced): SSM/hybrid native; attention archs via the
+    paper's HCK backend (DESIGN.md §Arch-applicability)."""
+    cfg = get_arch(arch)
+    out = smoke_step(cfg, get_shape("long_500k"))
+    assert bool(jnp.all(jnp.isfinite(out["logits"])))

@@ -1,0 +1,117 @@
+"""HCK hierarchical attention: structured path == dense reference of the
+same approximation; convergence toward exact with rank; causality; decode
+== train-time last row; exact backends agree with each other."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention_backends import (HCKAttnConfig, _normalize,
+                                             build_hck_decode_state,
+                                             chunked_attention,
+                                             decode_attention,
+                                             dense_attention, hck_attention,
+                                             hck_attention_reference,
+                                             hck_decode_attention)
+
+
+@pytest.fixture(scope="module")
+def qkv():
+    key = jax.random.PRNGKey(0)
+    B, H, Hkv, S, D = 2, 4, 2, 256, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, Hkv, S, D))
+    v = jax.random.normal(ks[2], (B, Hkv, S, D))
+    return q, k, v
+
+
+def test_hck_matches_dense_reference(qkv):
+    q, k, v = qkv
+    cfg = HCKAttnConfig(leaf=32, rank=16, levels=3)
+    got = hck_attention(q, k, v, cfg=cfg)
+    want = hck_attention_reference(q, k, v, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_hck_converges_with_rank(qkv):
+    """Approximation error vs exact cosine attention decreases with rank."""
+    q, k, v = qkv
+    d = q.shape[-1]
+    tau = min(d ** 0.5, 16.0)
+    exact = dense_attention(_normalize(q) * tau * (d ** 0.5), _normalize(k),
+                            v, causal=True)
+    errs = []
+    for r in (4, 16, 32):
+        cfg = HCKAttnConfig(leaf=32, rank=r, levels=3)
+        out = hck_attention(q, k, v, cfg=cfg)
+        errs.append(float(jnp.mean(jnp.abs(out - exact))))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_hck_causality(qkv):
+    """Future tokens cannot influence the past: perturb the tail, early
+    outputs must be bit-identical."""
+    q, k, v = qkv
+    cfg = HCKAttnConfig(leaf=32, rank=8, levels=3)
+    out1 = hck_attention(q, k, v, cfg=cfg)
+    k2 = k.at[:, :, -32:].add(10.0)
+    v2 = v.at[:, :, -32:].add(10.0)
+    q2 = q.at[:, :, -32:].add(10.0)
+    out2 = hck_attention(q2, k2, v2, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(out1[:, :, :192]),
+                               np.asarray(out2[:, :, :192]), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_hck_decode_matches_train_last_row(qkv):
+    q, k, v = qkv
+    cfg = HCKAttnConfig(leaf=32, rank=16, levels=3)
+    train_out = hck_attention(q, k, v, cfg=cfg)
+    state = build_hck_decode_state(k, v, cfg=cfg)
+    dec = hck_decode_attention(q[:, :, -1:], state)
+    np.testing.assert_allclose(np.asarray(dec[:, :, 0]),
+                               np.asarray(train_out[:, :, -1]), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_chunked_matches_dense(qkv):
+    q, k, v = qkv
+    for window in (0, 64):
+        got = chunked_attention(q, k, v, causal=True, window=window, block=64)
+        want = dense_attention(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=1e-5)
+
+
+def test_decode_matches_dense_last_row(qkv):
+    q, k, v = qkv
+    want = dense_attention(q, k, v, causal=True)
+    got = decode_attention(q[:, :, -1:], k, v, length=k.shape[2])
+    np.testing.assert_allclose(np.asarray(got[:, :, 0]),
+                               np.asarray(want[:, :, -1]), rtol=2e-4,
+                               atol=1e-5)
+
+
+def test_decode_length_masking(qkv):
+    """Cache slots beyond `length` must not contribute."""
+    q, k, v = qkv
+    half = k.shape[2] // 2
+    got_full_cache = decode_attention(
+        q[:, :, half - 1:half],
+        k.at[:, :, half:].set(99.0), v.at[:, :, half:].set(99.0),
+        length=half)
+    got_trunc = decode_attention(q[:, :, half - 1:half], k[:, :, :half],
+                                 v[:, :, :half], length=half)
+    np.testing.assert_allclose(np.asarray(got_full_cache),
+                               np.asarray(got_trunc), rtol=1e-5, atol=1e-6)
+
+
+def test_for_seq_clamps_levels():
+    cfg = HCKAttnConfig(leaf=1024, rank=64, levels=5)
+    assert cfg.for_seq(4096).levels <= 4
+    assert cfg.for_seq(524288).levels == 5
+    assert cfg.for_seq(256).levels == 0

@@ -1,0 +1,161 @@
+"""End-to-end behaviour of the paper's system: KRR / classification / GP /
+kernel-PCA with the HCK kernel, against exact and baseline methods."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, gp, hmatrix, kpca, krr
+from repro.core.hck import build_hck, to_dense
+from repro.core.kernels_fn import BaseKernel
+
+
+@pytest.fixture(scope="module")
+def regression_data():
+    key = jax.random.PRNGKey(0)
+    n, d = 1024, 6
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.uniform(k1, (n, d))
+    f = lambda x: jnp.sin(3 * x[:, 0]) + x[:, 1] ** 2 - x[:, 2] * x[:, 3]
+    y = f(x) + 0.05 * jax.random.normal(k2, (n,))
+    xt = jax.random.uniform(k3, (256, d))
+    return x, y, xt, f(xt)
+
+
+def test_hck_krr_beats_mean_predictor(regression_data):
+    x, y, xt, yt = regression_data
+    ker = BaseKernel("gaussian", sigma=1.0)
+    m = krr.fit(x, y, kernel=ker, lam=1e-2, rank=64,
+                key=jax.random.PRNGKey(1))
+    err = float(krr.relative_error(m.predict(xt), yt))
+    base = float(krr.relative_error(jnp.full_like(yt, y.mean()), yt))
+    assert err < 0.5 * base
+
+
+def test_hck_krr_close_to_exact(regression_data):
+    """With generous rank the HCK solution approaches exact KRR."""
+    x, y, xt, yt = regression_data
+    ker = BaseKernel("gaussian", sigma=1.0)
+    exact = baselines.fit_exact(x, y, kernel=ker, lam=1e-2)
+    err_exact = float(krr.relative_error(exact(xt), yt))
+    m = krr.fit(x, y, kernel=ker, lam=1e-2, rank=128,
+                key=jax.random.PRNGKey(2))
+    err_hck = float(krr.relative_error(m.predict(xt), yt))
+    assert err_hck < max(2.0 * err_exact, err_exact + 0.05)
+
+
+def test_binary_and_multiclass_classification(regression_data):
+    x, y, xt, yt = regression_data
+    ker = BaseKernel("gaussian", sigma=1.0)
+    yb = (y > jnp.median(y)).astype(jnp.int32)
+    tb = (yt > jnp.median(y)).astype(jnp.int32)
+    m = krr.fit(x, yb, kernel=ker, lam=1e-2, rank=64,
+                key=jax.random.PRNGKey(3), classification=True)
+    acc = float(krr.accuracy(m.predict_class(xt), tb))
+    assert acc > 0.8
+    # 3-class
+    q = jnp.quantile(y, jnp.array([1 / 3, 2 / 3]))
+    ym = jnp.searchsorted(q, y).astype(jnp.int32)
+    tm = jnp.searchsorted(q, yt).astype(jnp.int32)
+    m3 = krr.fit(x, ym, kernel=ker, lam=1e-2, rank=64,
+                 key=jax.random.PRNGKey(4), classification=True)
+    acc3 = float(krr.accuracy(m3.predict_class(xt), tm))
+    assert acc3 > 0.6
+
+
+def test_padding_path(regression_data):
+    """n not a power-of-two multiple of the leaf: the padded fit works."""
+    x, y, xt, yt = regression_data
+    x, y = x[:1000], y[:1000]         # 1000 = not divisible
+    ker = BaseKernel("gaussian", sigma=1.0)
+    m = krr.fit(x, y, kernel=ker, lam=1e-2, rank=64,
+                key=jax.random.PRNGKey(5))
+    assert float(krr.relative_error(m.predict(xt), yt)) < 0.6
+
+
+def test_gp_posterior_matches_dense(f64):
+    key = jax.random.PRNGKey(6)
+    n, d = 128, 3
+    x = jax.random.normal(key, (n, d), dtype=jnp.float64)
+    y = jnp.sin(x[:, 0]) + 0.01 * jax.random.normal(key, (n,), dtype=jnp.float64)
+    ker = BaseKernel("gaussian", sigma=1.5, jitter=1e-10)
+    noise = 0.1
+    g = gp.fit_gp(x, y, kernel=ker, noise=noise, rank=16, levels=2, key=key)
+    a = to_dense(g.factors)
+    y_sorted = y[g.factors.tree.perm]
+    xq = jax.random.normal(jax.random.PRNGKey(7), (5, d), dtype=jnp.float64)
+
+    # mean via Alg 3 vs dense linear algebra on the SAME approximate kernel
+    from repro.core.oos import oos_vector_reference
+
+    kinv_y = jnp.linalg.solve(a + noise * jnp.eye(n), y_sorted)
+    for i, q in enumerate(xq):
+        v = oos_vector_reference(g.factors, q, ker)
+        want_mean = float(v @ kinv_y)
+        got_mean = float(g.posterior_mean(q[None])[0])
+        assert got_mean == pytest.approx(want_mean, rel=1e-6, abs=1e-8)
+    # variance
+    got_var = g.posterior_var(xq[:2])
+    for i in range(2):
+        v = oos_vector_reference(g.factors, xq[i], ker)
+        want = float(ker.gram(xq[i:i + 1])[0, 0]
+                     - v @ jnp.linalg.solve(a + noise * jnp.eye(n), v))
+        assert float(got_var[i]) == pytest.approx(want, rel=1e-6, abs=1e-8)
+    # log marginal likelihood: quad + logdet against dense
+    lml = float(g.log_marginal_likelihood(y_sorted))
+    sign, ld = jnp.linalg.slogdet(a + noise * jnp.eye(n))
+    want_lml = float(-0.5 * y_sorted @ kinv_y - 0.5 * ld
+                     - 0.5 * n * jnp.log(2 * jnp.pi))
+    assert lml == pytest.approx(want_lml, rel=1e-8)
+
+
+def test_kpca_matches_dense_eig(f64):
+    key = jax.random.PRNGKey(8)
+    x = jax.random.normal(key, (256, 4), dtype=jnp.float64)
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-10)
+    f = build_hck(x, levels=2, rank=32, key=key, kernel=ker)
+    emb, evals = kpca.kpca_embed(f, dim=3, iters=100)
+    kc = kpca.center(to_dense(f))
+    emb_d, evals_d = kpca.kpca_embed_dense(kc, dim=3)
+    np.testing.assert_allclose(np.asarray(evals), np.asarray(evals_d),
+                               rtol=1e-6)
+    # embeddings match up to per-column sign
+    diff = float(kpca.alignment_difference(emb_d, emb))
+    assert diff < 1e-5
+
+
+def test_mle_objective_differentiable():
+    key = jax.random.PRNGKey(9)
+    x = jax.random.uniform(key, (256, 3))
+    y = jnp.sin(4 * x[:, 0]) + 0.1 * jax.random.normal(key, (256,))
+    nll = gp.mle_objective(x, y, levels=2, rank=16, key=key)
+    g0 = jax.grad(nll, argnums=(0, 1))(jnp.zeros(()), jnp.log(jnp.array(0.1)))
+    assert all(bool(jnp.isfinite(gg)) for gg in g0)
+
+
+def test_gp_prior_sampling_chebyshev(f64):
+    """§6 'simulation of random processes': Chebyshev sqrt-matvec sampling
+    converges geometrically and matches the dense matrix square root."""
+    import numpy as np
+
+    from repro.core import sampling
+    from repro.core.hck import build_hck, to_dense
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (128, 3))
+    ker = BaseKernel("gaussian", sigma=1.5, jitter=1e-6)
+    f = build_hck(x, levels=2, rank=16, key=jax.random.PRNGKey(1), kernel=ker)
+    ridge = 0.1
+    a = np.asarray(to_dense(f), dtype=np.float64) + ridge * np.eye(128)
+    w, v = np.linalg.eigh(a)
+    a_half = v @ np.diag(np.sqrt(np.maximum(w, 0))) @ v.T
+    eps = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (128,)))
+    errs = []
+    for deg in (16, 64):
+        got = np.asarray(sampling.sqrt_matvec(
+            f, jnp.asarray(eps, jnp.float32), ridge=ridge, degree=deg),
+            dtype=np.float64)
+        errs.append(np.linalg.norm(got - a_half @ eps)
+                    / np.linalg.norm(a_half @ eps))
+    assert errs[1] < errs[0] / 5        # geometric-ish decay
+    assert errs[1] < 5e-3

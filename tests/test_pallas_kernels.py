@@ -1,0 +1,118 @@
+"""Per-Pallas-kernel validation: shape/dtype sweeps against the ref.py
+pure-jnp oracles, in interpret mode (the kernel body executes on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hck_leaf.ops import leaf_matvec
+from repro.kernels.hck_leaf.ref import hck_leaf_matvec_ref
+from repro.kernels.kernel_tile.ops import pairwise_kernel
+from repro.kernels.kernel_tile.ref import pairwise_kernel_ref
+
+
+@pytest.mark.parametrize("name", ["gaussian", "imq", "laplace"])
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 128, 64),
+                                   (130, 200, 7), (128, 384, 256)])
+def test_kernel_tile_sweep(name, shape):
+    n, m, d = shape
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    y = jax.random.normal(jax.random.PRNGKey(1), (m, d))
+    got = pairwise_kernel(x, y, name=name, sigma=1.3)
+    want = pairwise_kernel_ref(x, y, name=name, sigma=1.3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_tile_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(2), (128, 32), dtype=dtype)
+    y = jax.random.normal(jax.random.PRNGKey(3), (128, 32), dtype=dtype)
+    got = pairwise_kernel(x, y, name="gaussian", sigma=1.0)
+    want = pairwise_kernel_ref(x.astype(jnp.float32),
+                               y.astype(jnp.float32), name="gaussian",
+                               sigma=1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 2e-5,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+@pytest.mark.parametrize("p,n0,r,k", [(2, 32, 8, 1), (4, 64, 16, 3),
+                                      (8, 128, 32, 2), (1, 16, 16, 5)])
+def test_hck_leaf_matvec_sweep(p, n0, r, k):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    a = jax.random.normal(keys[0], (p, n0, n0))
+    u = jax.random.normal(keys[1], (p, n0, r))
+    b = jax.random.normal(keys[2], (p, n0, k))
+    y1, c1 = leaf_matvec(a, u, b)
+    y2, c2 = hck_leaf_matvec_ref(a, u, b)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(B=1, Hq=2, Hkv=2, S=128, D=64, causal=True, bq=128, bk=128),
+    dict(B=2, Hq=4, Hkv=2, S=256, D=64, causal=True, bq=128, bk=128),
+    dict(B=1, Hq=8, Hkv=2, S=256, D=32, causal=True, bq=64, bk=128),
+    dict(B=2, Hq=4, Hkv=4, S=256, D=64, causal=False, bq=128, bk=64),
+])
+def test_flash_attention_sweep(cfg):
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(keys[0], (cfg["B"], cfg["Hq"], cfg["S"], cfg["D"]))
+    k = jax.random.normal(keys[1], (cfg["B"], cfg["Hkv"], cfg["S"], cfg["D"]))
+    v = jax.random.normal(keys[2], (cfg["B"], cfg["Hkv"], cfg["S"], cfg["D"]))
+    got = flash_attention(q, k, v, causal=cfg["causal"], bq=cfg["bq"],
+                          bk=cfg["bk"])
+    want = attention_ref(q, k, v, causal=cfg["causal"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    shape = (1, 2, 128, 64)
+    q = jax.random.normal(keys[0], shape, dtype=jnp.bfloat16)
+    k = jax.random.normal(keys[1], (1, 2, 128, 64), dtype=jnp.bfloat16)
+    v = jax.random.normal(keys[2], (1, 2, 128, 64), dtype=jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True)
+    want = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want), rtol=5e-2, atol=5e-2)
+
+
+def test_pallas_leaf_backend_in_core_matvec(small_problem):
+    """Integration: matvec(leaf_backend='pallas') == xla path."""
+    _, _, f = small_problem
+    from repro.core import hmatrix
+
+    f32 = jax.tree.map(
+        lambda a: a.astype(jnp.float32) if hasattr(a, "dtype")
+        and a.dtype == jnp.float64 else a, f)
+    b = jax.random.normal(jax.random.PRNGKey(5), (f.n, 2), dtype=jnp.float32)
+    y1 = hmatrix.matvec(f32, b)
+    y2 = hmatrix.matvec(f32, b, leaf_backend="pallas")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(2, 2, 32, 16, 8), (4, 1, 64, 32, 16),
+                                   (1, 4, 128, 16, 64)])
+def test_ssd_chunk_sweep(shape):
+    from repro.kernels.ssd_chunk.ops import intra_chunk
+    from repro.kernels.ssd_chunk.ref import ssd_intra_chunk_ref
+
+    bh, nc, q, n, p = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    c = jax.random.normal(ks[0], (bh, nc, q, n)) * 0.3
+    b = jax.random.normal(ks[1], (bh, nc, q, n)) * 0.3
+    xdt = jax.random.normal(ks[2], (bh, nc, q, p))
+    cs = -jnp.cumsum(jax.nn.softplus(jax.random.normal(ks[3], (bh, nc, q))), -1)
+    got = intra_chunk(c, b, xdt, cs)
+    want = ssd_intra_chunk_ref(c, b, xdt, cs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)

@@ -1,0 +1,88 @@
+"""Property-based tests (hypothesis) for the partitioning and base kernels."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kernels_fn import BaseKernel
+from repro.core.partition import auto_levels, build_partition, pad_points, route
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       levels=st.integers(1, 4),
+       d=st.integers(1, 8))
+@settings(**SETTINGS)
+def test_partition_is_balanced_permutation(seed, levels, d):
+    """Median splits keep every leaf exactly n / 2**levels points, and the
+    recorded perm is a true permutation."""
+    n = 16 * (1 << levels)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    xs, tree = build_partition(x, levels, jax.random.PRNGKey(seed + 1))
+    perm = np.asarray(tree.perm)
+    assert sorted(perm.tolist()) == list(range(n))
+    np.testing.assert_allclose(np.asarray(xs), np.asarray(x)[perm], rtol=0,
+                               atol=0)
+
+
+@given(seed=st.integers(0, 2**31 - 1), levels=st.integers(1, 3))
+@settings(**SETTINGS)
+def test_route_maps_training_points_to_their_leaf(seed, levels):
+    """Routing a training point through the recorded hyperplanes returns the
+    leaf that contains it (up to median ties, which the split resolves by
+    order — points strictly off the threshold must match)."""
+    n, d = 32 * (1 << levels), 4
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    xs, tree = build_partition(x, levels, jax.random.PRNGKey(seed + 1))
+    leaf_size = n // (1 << levels)
+    leaves = route(tree, xs)
+    expected = np.repeat(np.arange(1 << levels), leaf_size)
+    # allow median-tie mismatches but require overwhelming agreement
+    agree = float(np.mean(np.asarray(leaves) == expected))
+    assert agree > 0.95
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       n=st.integers(5, 200),
+       levels=st.integers(0, 3))
+@settings(**SETTINGS)
+def test_pad_points_roundtrip(seed, n, levels):
+    leaf = 8
+    cap = leaf * (1 << levels)
+    if n > cap:
+        n = cap
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, 3))
+    y = jax.random.normal(jax.random.PRNGKey(seed + 1), (n,))
+    xp, yp, mask = pad_points(x, y, leaf, levels, jax.random.PRNGKey(2))
+    assert xp.shape[0] == cap and yp.shape[0] == cap
+    assert int(mask.sum()) == n
+    np.testing.assert_allclose(np.asarray(xp[:n]), np.asarray(x))
+    np.testing.assert_allclose(np.asarray(yp[mask]), np.asarray(y))
+    # padded rows duplicate real targets (never fabricate new values)
+    pad_y = np.asarray(yp[~mask])
+    if pad_y.size:
+        assert np.isin(pad_y.round(6), np.asarray(y).round(6)).all()
+
+
+def test_auto_levels_eq22():
+    # paper Eq. 22 sizing: largest L with leaf * 2**L <= n
+    assert auto_levels(1024, 128) == 3
+    assert auto_levels(1023, 128) == 2
+    assert auto_levels(128, 128) == 0
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       name=st.sampled_from(["gaussian", "laplace", "imq"]),
+       sigma=st.floats(0.3, 5.0))
+@settings(**SETTINGS)
+def test_base_kernel_properties(seed, name, sigma):
+    """Symmetry, k(x,x)=1, PSD of the gram (strict PD with jitter)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (24, 3))
+    ker = BaseKernel(name, sigma=sigma, jitter=1e-6)
+    k = ker.cross(x, x)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(k.T), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(jnp.diag(k)), 1.0, rtol=1e-5)
+    ev = jnp.linalg.eigvalsh(ker.gram(x))
+    assert float(ev.min()) > 0
