@@ -1,0 +1,190 @@
+"""Solve-engine benchmark: matvec/invert/solve wall time, achieved GB/s,
+and roofline terms, emitted as machine-readable BENCH_solve.json.
+
+The perf trajectory of the Algorithm 1/2 hot path is tracked from this file
+onward: CI runs ``--smoke`` on a tiny float64 problem, gates the result on
+dense-oracle tolerances (nonzero exit on miss), and uploads the JSON as an
+artifact; full runs chart both backends at production shapes.
+
+Usage:
+  python benchmarks/bench_solve.py                      # default sweep
+  python benchmarks/bench_solve.py --smoke              # CI gate (tiny, f64)
+  python benchmarks/bench_solve.py --n 16384 --rank 64 --backends xla,pallas
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hmatrix
+from repro.core.hck import build_hck, to_dense
+from repro.core.kernels_fn import BaseKernel
+from repro.kernels.registry import SolveConfig
+from repro.utils import roofline
+
+
+def _timeit(fn, *args, repeats: int = 3):
+    out = fn(*args)
+    jax.block_until_ready(out)          # compile outside the timed region
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def _factor_bytes(f) -> int:
+    """HBM traffic model for one matvec: every factor read once."""
+    arrs = [f.adiag, f.u, *f.sigma, *f.w]
+    return sum(a.size * a.dtype.itemsize for a in arrs)
+
+
+def _cost_analysis(fn, *args) -> dict:
+    """flops / bytes accessed from the compiled executable (best effort)."""
+    try:
+        compiled = jax.jit(fn).lower(*args).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):      # some backends return a 1-list
+            cost = cost[0]
+        return {"flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
+    except Exception as e:              # noqa: BLE001 - report, don't crash
+        return {"error": str(e)}
+
+
+def bench_backend(f, b, ridge: float, backend: str, repeats: int) -> dict:
+    cfg = SolveConfig(backend=backend)
+    n, k = b.shape
+
+    t_mv, y = _timeit(lambda v: hmatrix.matvec(f, v, cfg), b, repeats=repeats)
+    t_inv, inv = _timeit(lambda g: hmatrix.invert(g, ridge), f,
+                         repeats=repeats)
+    t_apply, x0 = _timeit(lambda v: hmatrix.apply_inverse(inv, v, cfg), b,
+                          repeats=repeats)
+    t_solve, x = _timeit(
+        lambda v: hmatrix.solve(f, v, ridge=ridge, config=cfg), b,
+        repeats=repeats)
+
+    resid = b - (hmatrix.matvec(f, x, cfg) + ridge * x)
+    rel_resid = float(jnp.linalg.norm(resid) / jnp.linalg.norm(b))
+
+    mv_bytes = _factor_bytes(f) + 2 * n * k * b.dtype.itemsize
+    cost = _cost_analysis(lambda v: hmatrix.matvec(f, v, cfg), b)
+    terms = None
+    if "flops" in cost:
+        terms = roofline.RooflineTerms(
+            flops=cost["flops"], hbm_bytes=cost["bytes_accessed"],
+            coll_bytes_per_dev=0.0, chips=1).as_dict()
+
+    return {
+        "backend": backend,
+        "matvec_s": t_mv,
+        "invert_s": t_inv,
+        "apply_inverse_s": t_apply,
+        "solve_s": t_solve,
+        "solve_rel_residual": rel_resid,
+        "matvec_model_bytes": mv_bytes,
+        "matvec_achieved_gbps": mv_bytes / t_mv / 1e9,
+        "matvec_cost_analysis": cost,
+        "matvec_roofline": terms,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--levels", type=int, default=None)
+    ap.add_argument("--rank", type=int, default=32)
+    ap.add_argument("--k", type=int, default=4, help="number of RHS columns")
+    ap.add_argument("--d", type=int, default=8, help="input dimension")
+    ap.add_argument("--ridge", type=float, default=0.1)
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "float64"])
+    ap.add_argument("--backends", default="xla,pallas")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny float64 problem + dense-oracle tolerance gate")
+    ap.add_argument("--tol", type=float, default=1e-6,
+                    help="smoke-mode tolerance vs the dense oracle")
+    ap.add_argument("--out", default="BENCH_solve.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.n, args.rank, args.k, args.dtype = 256, 16, 3, "float64"
+        args.levels = 3
+
+    if args.dtype == "float64":
+        jax.config.update("jax_enable_x64", True)
+    dtype = jnp.dtype(args.dtype)
+
+    levels = args.levels
+    if levels is None:
+        levels = max(1, (args.n // max(args.rank, 1)).bit_length() - 1)
+    n = (args.n // (1 << levels)) * (1 << levels)
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, args.d), dtype=dtype)
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-8)
+    f = build_hck(x, levels=levels, rank=args.rank,
+                  key=jax.random.PRNGKey(1), kernel=ker)
+    b = jax.random.normal(jax.random.PRNGKey(2), (n, args.k), dtype=dtype)
+
+    report = {
+        "problem": {"n": n, "levels": levels, "rank": args.rank, "k": args.k,
+                    "d": args.d, "ridge": args.ridge, "dtype": args.dtype,
+                    "leaf_size": f.leaf_size, "smoke": args.smoke},
+        "device": str(jax.devices()[0]),
+        "roofline_model": {"peak_flops": roofline.PEAK_FLOPS,
+                           "hbm_bw": roofline.HBM_BW},
+        "results": [],
+        "checks": {},
+    }
+
+    for backend in args.backends.split(","):
+        r = bench_backend(f, b, args.ridge, backend.strip(), args.repeats)
+        report["results"].append(r)
+        print(f"[{r['backend']:>6}] matvec {r['matvec_s']*1e3:8.2f} ms "
+              f"({r['matvec_achieved_gbps']:6.2f} GB/s model)  "
+              f"solve {r['solve_s']*1e3:8.2f} ms  "
+              f"resid {r['solve_rel_residual']:.2e}")
+
+    ok = True
+    if args.smoke:
+        a = to_dense(f)
+        eye = jnp.eye(n, dtype=dtype)
+        for backend in args.backends.split(","):
+            cfg = SolveConfig(backend=backend.strip())
+            mv_err = float(jnp.max(jnp.abs(
+                hmatrix.matvec(f, b, cfg) - a @ b)))
+            want = jnp.linalg.solve(a + args.ridge * eye, b)
+            got = hmatrix.solve(f, b, ridge=args.ridge, config=cfg)
+            sv_err = float(jnp.max(jnp.abs(got - want))
+                           / jnp.max(jnp.abs(want)))
+            passed = mv_err <= args.tol and sv_err <= args.tol
+            ok = ok and passed
+            report["checks"][backend.strip()] = {
+                "matvec_max_err_vs_dense": mv_err,
+                "solve_rel_err_vs_dense": sv_err,
+                "tol": args.tol, "pass": passed,
+            }
+            print(f"[{backend.strip():>6}] smoke: matvec err {mv_err:.2e}  "
+                  f"solve err {sv_err:.2e}  "
+                  f"{'PASS' if passed else 'FAIL'}")
+
+    report["pass"] = ok
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

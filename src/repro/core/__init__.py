@@ -8,6 +8,7 @@ from repro.core.hmatrix import (InverseFactors, apply_inverse, invert, logdet,
                                 matvec, solve)
 from repro.core.oos import OOSPlan, apply_plan, predict, prepare
 from repro.core import baselines, gp, kpca, krr, sampling
+from repro.kernels.registry import DEFAULT_CONFIG, SolveConfig
 
 __all__ = [
     "BaseKernel", "available_kernels", "get_kernel",
@@ -16,4 +17,5 @@ __all__ = [
     "InverseFactors", "apply_inverse", "invert", "logdet", "matvec", "solve",
     "OOSPlan", "apply_plan", "predict", "prepare",
     "baselines", "gp", "kpca", "krr", "sampling",
+    "DEFAULT_CONFIG", "SolveConfig",
 ]

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.core import hmatrix, oos
 from repro.core.hck import HCKFactors, build_hck
 from repro.core.kernels_fn import BaseKernel
+from repro.kernels.registry import SolveConfig
 
 Array = jax.Array
 
@@ -33,6 +34,7 @@ class HCKGaussianProcess:
     alpha: Array               # (n, 1) = (K + noise I)^{-1} y, tree order
     plan: oos.OOSPlan
     noise: float
+    solve_config: SolveConfig | None = None
 
     def posterior_mean(self, queries: Array) -> Array:
         return oos.apply_plan(self.factors, self.plan, queries, self.kernel)[:, 0]
@@ -44,7 +46,8 @@ class HCKGaussianProcess:
         out = []
         for q in queries:
             v = oos_vector_reference(self.factors, q, self.kernel)
-            kinv_v = hmatrix.apply_inverse(self.inv, v[:, None])[:, 0]
+            kinv_v = hmatrix.apply_inverse(
+                self.inv, v[:, None], self.solve_config)[:, 0]
             out.append(self.kernel.gram(q[None])[0, 0] - v @ kinv_v)
         return jnp.stack(out)
 
@@ -57,17 +60,20 @@ class HCKGaussianProcess:
 def fit_gp(
     x: Array, y: Array, *, kernel: BaseKernel, noise: float,
     rank: int, levels: int, key: Array,
+    solve_config: SolveConfig | None = None,
 ) -> HCKGaussianProcess:
     factors = build_hck(x, levels=levels, rank=rank, key=key, kernel=kernel)
     y_sorted = y[factors.tree.perm][:, None]
     inv = hmatrix.invert(factors, ridge=noise)
-    alpha = hmatrix.apply_inverse(inv, y_sorted)
-    plan = oos.prepare(factors, alpha)
-    return HCKGaussianProcess(kernel, factors, inv, alpha, plan, noise)
+    alpha = hmatrix.apply_inverse(inv, y_sorted, solve_config)
+    plan = oos.prepare(factors, alpha, solve_config)
+    return HCKGaussianProcess(kernel, factors, inv, alpha, plan, noise,
+                              solve_config)
 
 
 def mle_objective(
     x: Array, y: Array, *, levels: int, rank: int, key: Array, name: str = "gaussian",
+    solve_config: SolveConfig | None = None,
 ):
     """Returns f(log_sigma, log_noise) -> negative log marginal likelihood.
 
@@ -83,7 +89,7 @@ def mle_objective(
         factors = build_hck(xs, levels=levels, rank=rank, key=key, kernel=kernel)
         y_sorted = y[factors.tree.perm][:, None]
         inv = hmatrix.invert(factors, ridge=jnp.exp(log_noise))
-        alpha = hmatrix.apply_inverse(inv, y_sorted)
+        alpha = hmatrix.apply_inverse(inv, y_sorted, solve_config)
         n = y_sorted.shape[0]
         quad = jnp.sum(y_sorted[:, 0] * alpha[:, 0])
         return 0.5 * quad + 0.5 * inv.logabsdet + 0.5 * n * jnp.log(2 * jnp.pi)

@@ -9,7 +9,15 @@ Implements, in level-synchronous batched form (DESIGN.md §2):
                        (the Chen 2014b extension the paper points to in §6)
 
 The inverse has *the same* hierarchical structure as A (paper §3.2), so it
-is returned as another factor set and applied with the same ``matvec``.
+is returned as another factor set and applied with the same traversal.
+
+Every leaf-stage product routes through the backend registry
+(:mod:`repro.kernels.registry`): the ``xla`` backend keeps dtype-preserving
+einsums (CPU / float64 oracle path), the ``pallas`` backend runs the fused
+VMEM-resident kernels in :mod:`repro.kernels.hck_leaf`.  All entry points
+take one shared :class:`~repro.kernels.registry.SolveConfig` (a static jit
+argument) instead of per-callsite backend flags, and every right-hand side
+may be ``(n,)`` or batched ``(n, k)``.
 
 Index/basis conventions (verified against Eq. 13-16 and the dense oracle):
 ``c_i`` and ``d_i`` for a node i live in the landmark space of i's *parent*;
@@ -25,6 +33,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hck import HCKFactors
+from repro.kernels.registry import (DEFAULT_CONFIG, SolveConfig, get_impl,
+                                    resolve_backend, tile_config)
 
 Array = jax.Array
 
@@ -44,54 +54,77 @@ def _rep2(x: Array) -> Array:
     return jnp.repeat(x, 2, axis=0)
 
 
-# ---------------------------------------------------------------------------
-# Algorithm 1 — matvec
-# ---------------------------------------------------------------------------
+def _as_batch(b: Array) -> tuple[Array, bool]:
+    """(n,) or (n, k) -> ((n, k), squeeze_flag)."""
+    if b.ndim == 1:
+        return b[:, None], True
+    return b, False
 
-@functools.partial(jax.jit, static_argnames=("leaf_backend",))
-def matvec(f: HCKFactors, b: Array, leaf_backend: str = "xla") -> Array:
-    """y = K_hck(X, X) @ b for b of shape (n,) or (n, k).
 
-    ``leaf_backend="pallas"`` routes the fused leaf stage (y_i = A_ii b_i,
-    c_i = U_i^T b_i) through repro.kernels.hck_leaf — the TPU deployment
-    path; "xla" keeps plain einsums (CPU-friendly default).
+def _offdiag_apply(sigma: tuple, w: tuple, u: Array, c_leaf: Array,
+                   levels: int) -> Array:
+    """Upward + sibling-exchange + downward sweeps of Algorithm 1.
+
+    Given the leaf coefficients ``c_leaf = U^T b`` returns the per-leaf
+    off-diagonal contribution ``U d_leaf`` (same for A and A^{-1}: the two
+    share the traversal, only the factor values differ).
     """
-    squeeze = b.ndim == 1
-    if squeeze:
-        b = b[:, None]
-    n, k = b.shape
-    levels, n0 = f.levels, f.leaf_size
-    bb = b.reshape(f.num_leaves, n0, k)
-
-    # leaf work: y_i = A_ii b_i ; c_i = U_i^T b_i (fused on the pallas path)
-    if leaf_backend == "pallas" and levels > 0:
-        from repro.kernels.hck_leaf.ops import leaf_matvec
-
-        y, c_leaf = leaf_matvec(f.adiag, f.u, bb)
-        y = y.astype(bb.dtype)
-        c = {levels: c_leaf.astype(bb.dtype)}
-    else:
-        y = jnp.einsum("pnm,pmk->pnk", f.adiag, bb)
-        c = {levels: jnp.einsum("pnr,pnk->prk", f.u, bb)} if levels else {}
-    if levels == 0:
-        out = y.reshape(n, k)
-        return out[:, 0] if squeeze else out
+    c = {levels: c_leaf}
     # upward: c_i = W_i^T (c_left + c_right) for internal non-root nodes
     for lvl in range(levels - 1, 0, -1):
         s = _pair_sum(c[lvl + 1])                       # (2**lvl, r, k)
-        c[lvl] = jnp.einsum("pab,pak->pbk", f.w[lvl - 1], s)
+        c[lvl] = jnp.einsum("pab,pak->pbk", w[lvl - 1], s)
 
     # sibling exchange at every level: d_l = Sigma_parent c_sibling
     d = {
-        lvl: jnp.einsum("qab,qbk->qak", _rep2(f.sigma[lvl - 1]), _pair_swap(c[lvl]))
+        lvl: jnp.einsum("qab,qbk->qak", _rep2(sigma[lvl - 1]), _pair_swap(c[lvl]))
         for lvl in range(1, levels + 1)
     }
     # downward: d_child += W_parent d_parent
     for lvl in range(1, levels):
-        push = jnp.einsum("pab,pbk->pak", f.w[lvl - 1], d[lvl])
+        push = jnp.einsum("pab,pbk->pak", w[lvl - 1], d[lvl])
         d[lvl + 1] = d[lvl + 1] + _rep2(push)
 
-    y = y + jnp.einsum("pnr,prk->pnk", f.u, d[levels])
+    return jnp.einsum("pnr,prk->pnk", u, d[levels])
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — matvec
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def matvec(f: HCKFactors, b: Array, config: SolveConfig | None = None) -> Array:
+    """y = K_hck(X, X) @ b for b of shape (n,) or (n, k).
+
+    The fused leaf stage (y_i = A_ii b_i, c_i = U_i^T b_i) is selected by
+    ``config`` from the backend registry; ``SolveConfig(backend="pallas")``
+    routes it through repro.kernels.hck_leaf (the TPU deployment path),
+    "xla" keeps plain einsums, and the default "auto" picks per shape.
+    """
+    config = config if config is not None else DEFAULT_CONFIG
+    b, squeeze = _as_batch(b)
+    n, k = b.shape
+    levels, n0, r = f.levels, f.leaf_size, f.rank
+    bb = b.reshape(f.num_leaves, n0, k)
+
+    backend = resolve_backend(config, "leaf_matvec", dtype=b.dtype,
+                              n0=n0, r=r, k=k)
+    if backend == "pallas" and levels > 0:
+        tile = tile_config("leaf_matvec", n0=n0, r=r, k=k,
+                           itemsize=bb.dtype.itemsize,
+                           leaf_block=config.leaf_block)
+        y, c_leaf = get_impl("leaf_matvec", "pallas")(
+            f.adiag, f.u, bb, interpret=config.interpret,
+            block_n0=tile.block_n0)
+        y = y.astype(bb.dtype)
+        c_leaf = c_leaf.astype(bb.dtype)
+    else:
+        y, c_leaf = get_impl("leaf_matvec", "xla")(f.adiag, f.u, bb)
+    if levels == 0:
+        out = y.reshape(n, k)
+        return out[:, 0] if squeeze else out
+
+    y = y + _offdiag_apply(f.sigma, f.w, f.u, c_leaf, levels)
     out = y.reshape(n, k)
     return out[:, 0] if squeeze else out
 
@@ -103,13 +136,20 @@ def matvec(f: HCKFactors, b: Array, leaf_backend: str = "xla") -> Array:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class InverseFactors:
-    """Hierarchical factors of (A + ridge I)^{-1}; same layout as HCKFactors."""
+    """Hierarchical factors of (A + ridge I)^{-1}; same layout as HCKFactors.
+
+    ``linv`` additionally carries the inverse Cholesky factors of the leaf
+    Schur complements (``adiag = linv^T linv + u sigma_self u^T``) so the
+    fused Pallas leaf-solve stage can apply the block-Cholesky pair without
+    re-reading the explicit inverse blocks.
+    """
 
     adiag: Array          # (2**L, n0, n0) — full diagonal blocks of the inverse
     u: Array              # (2**L, n0, r)
     sigma: tuple          # levels 0..L-1: (2**l, r, r) corrected middle factors
     w: tuple              # levels 1..L-1: (2**l, r, r)
     logabsdet: Array      # scalar: log |det(A + ridge I)|
+    linv: Array | None = None   # (2**L, n0, n0) inv Cholesky of leaf Schur
 
     @property
     def levels(self) -> int:
@@ -123,22 +163,17 @@ class InverseFactors:
     def leaf_size(self) -> int:
         return self.adiag.shape[1]
 
+    @property
+    def rank(self) -> int:
+        return self.u.shape[-1]
+
     def tree_flatten(self):
-        return (self.adiag, self.u, self.sigma, self.w, self.logabsdet), None
+        return (self.adiag, self.u, self.sigma, self.w, self.logabsdet,
+                self.linv), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
-
-
-def _apply_inverse_structure(inv: InverseFactors, b: Array) -> Array:
-    """matvec specialised to InverseFactors (same traversal as Algorithm 1)."""
-    shim = HCKFactors(
-        x_sorted=jnp.zeros((inv.adiag.shape[0] * inv.adiag.shape[1], 1)),
-        tree=None, landmarks=(None,) * inv.levels, sigma=inv.sigma,
-        sigma_cho=(None,) * inv.levels, w=inv.w, u=inv.u, adiag=inv.adiag,
-    )
-    return matvec(shim, b)
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -163,9 +198,14 @@ def invert(f: HCKFactors, ridge: Array | float = 0.0) -> InverseFactors:
     # ---- upward, leaf level ------------------------------------------------
     sig_p = _rep2(f.sigma[levels - 1])                       # (2**L, r, r)
     dleaf = adiag - jnp.einsum("pnr,prs,pms->pnm", f.u, sig_p, f.u)
-    # D is SPD (leaf Schur complement + ridge): batched Cholesky inverse
+    # D is SPD (leaf Schur complement + ridge): batched Cholesky inverse.
+    # linv = L^{-1} is kept so the leaf-solve stage can apply D^{-1} as the
+    # triangular pair L^{-T} L^{-1} (the fused Pallas kernel's layout);
+    # the explicit inverse diagonal blocks are one extra syrk away.
     lo = jnp.linalg.cholesky(dleaf)
-    adiag_t = jax.vmap(lambda l: jax.scipy.linalg.cho_solve((l, True), eye_n0))(lo)
+    linv = jax.vmap(lambda l: jax.scipy.linalg.solve_triangular(
+        l, eye_n0, lower=True))(lo)
+    adiag_t = jnp.einsum("pmn,pmk->pnk", linv, linv)
     logdet_acc = 2.0 * jnp.sum(jnp.log(jnp.abs(
         jnp.diagonal(lo, axis1=-2, axis2=-1))))
     u_t = jnp.einsum("pnm,pmr->pnr", adiag_t, f.u)
@@ -217,34 +257,69 @@ def invert(f: HCKFactors, ridge: Array | float = 0.0) -> InverseFactors:
         sigma=tuple(sigma_t[lvl] for lvl in range(levels)),
         w=tuple(w_t[lvl] for lvl in range(1, levels)),
         logabsdet=logdet_acc,
+        linv=linv,
     )
 
 
-def apply_inverse(inv: InverseFactors, b: Array) -> Array:
-    """x = (A + ridge I)^{-1} b via the hierarchical structure (O(n r))."""
-    return _apply_inverse_structure(inv, b)
+@functools.partial(jax.jit, static_argnames=("config",))
+def apply_inverse(inv: InverseFactors, b: Array,
+                  config: SolveConfig | None = None) -> Array:
+    """x = (A + ridge I)^{-1} b via the hierarchical structure (O(n r)).
+
+    The leaf stage either multiplies the explicit inverse diagonal blocks
+    (xla — deliberately ONE GEMM per leaf via leaf_matvec, cheaper than the
+    registered leaf_solve oracle's triangular pair) or runs the fused
+    block-Cholesky apply ``Linv^T Linv b`` plus the self low-rank
+    correction (pallas leaf_solve), fused with the upward projection; the
+    off-diagonal sweeps are shared with :func:`matvec`.
+    """
+    config = config if config is not None else DEFAULT_CONFIG
+    b, squeeze = _as_batch(b)
+    n, k = b.shape
+    levels, n0, r = inv.levels, inv.leaf_size, inv.rank
+    bb = b.reshape(inv.num_leaves, n0, k)
+
+    backend = resolve_backend(config, "leaf_solve", dtype=b.dtype,
+                              n0=n0, r=r, k=k)
+    if backend == "pallas" and levels > 0 and inv.linv is not None:
+        sig_self = _rep2(inv.sigma[levels - 1])
+        x, c_leaf = get_impl("leaf_solve", "pallas")(
+            inv.linv, inv.u, sig_self, bb, interpret=config.interpret)
+        x = x.astype(bb.dtype)
+        c_leaf = c_leaf.astype(bb.dtype)
+    else:
+        x, c_leaf = get_impl("leaf_matvec", "xla")(inv.adiag, inv.u, bb)
+    if levels == 0:
+        out = x.reshape(n, k)
+        return out[:, 0] if squeeze else out
+
+    x = x + _offdiag_apply(inv.sigma, inv.w, inv.u, c_leaf, levels)
+    out = x.reshape(n, k)
+    return out[:, 0] if squeeze else out
 
 
-@functools.partial(jax.jit, static_argnames=("refine_steps",))
+@functools.partial(jax.jit, static_argnames=("config",))
 def solve(f: HCKFactors, b: Array, ridge: Array | float = 0.0,
-          refine_steps: int = 2) -> Array:
+          config: SolveConfig | None = None) -> Array:
     """x = (K_hck + ridge I)^{-1} b, O(n r^2) once + O(n r) per rhs.
 
     fp32 loses digits through the level-telescoped SMW on deep trees, so the
-    structured inverse is polished with ``refine_steps`` rounds of iterative
-    refinement (x += A~^{-1}(b - A x)) — each round is one O(n r) matvec +
-    one O(n r) inverse apply and typically recovers ~3 digits of residual.
+    structured inverse is polished with ``config.refine_steps`` rounds of
+    iterative refinement (x += A~^{-1}(b - A x)) — each round is one O(n r)
+    matvec + one O(n r) inverse apply and typically recovers ~3 digits of
+    residual.
     """
+    config = config if config is not None else DEFAULT_CONFIG
     inv = invert(f, ridge)
-    x = apply_inverse(inv, b)
+    x = apply_inverse(inv, b, config)
 
     def norm(v):
         return jnp.linalg.norm(v.reshape(-1))
 
-    resid = b - (matvec(f, x) + ridge * x)
-    for _ in range(refine_steps):
-        x_new = x + apply_inverse(inv, resid)
-        resid_new = b - (matvec(f, x_new) + ridge * x_new)
+    resid = b - (matvec(f, x, config) + ridge * x)
+    for _ in range(config.refine_steps):
+        x_new = x + apply_inverse(inv, resid, config)
+        resid_new = b - (matvec(f, x_new, config) + ridge * x_new)
         # monotone safeguard: never accept a step that grows the residual
         # (a badly-conditioned structured inverse would otherwise diverge)
         better = norm(resid_new) < norm(resid)

@@ -19,22 +19,27 @@ import jax.numpy as jnp
 
 from repro.core import hmatrix
 from repro.core.hck import HCKFactors
+from repro.kernels.registry import SolveConfig
 
 Array = jax.Array
 
 
-def _centered_matvec(f: HCKFactors, b: Array) -> Array:
+def _centered_matvec(f: HCKFactors, b: Array,
+                     config: SolveConfig | None = None) -> Array:
     b = b - jnp.mean(b, axis=0, keepdims=True)
-    y = hmatrix.matvec(f, b)
+    y = hmatrix.matvec(f, b, config)
     return y - jnp.mean(y, axis=0, keepdims=True)
 
 
 def kpca_embed(
-    f: HCKFactors, dim: int, *, iters: int = 50, key: Array | None = None
+    f: HCKFactors, dim: int, *, iters: int = 50, key: Array | None = None,
+    solve_config: SolveConfig | None = None,
 ) -> tuple[Array, Array]:
     """Top-``dim`` kernel-PCA embedding via subspace iteration.
 
-    Returns (embedding (n, dim) = eigvecs * sqrt(eigvals), eigvals).
+    Every sweep is one batched (n, q) hierarchical matvec through the solve
+    engine selected by ``solve_config``.  Returns (embedding (n, dim) =
+    eigvecs * sqrt(eigvals), eigvals).
     """
     key = key if key is not None else jax.random.PRNGKey(0)
     n = f.n
@@ -43,13 +48,13 @@ def kpca_embed(
     v, _ = jnp.linalg.qr(v)
 
     def body(_, v):
-        v = _centered_matvec(f, v)
+        v = _centered_matvec(f, v, solve_config)
         v, _ = jnp.linalg.qr(v)
         return v
 
     v = jax.lax.fori_loop(0, iters, body, v)
     # Rayleigh-Ritz on the converged subspace
-    av = _centered_matvec(f, v)
+    av = _centered_matvec(f, v, solve_config)
     t = v.T @ av
     evals, evecs = jnp.linalg.eigh(0.5 * (t + t.T))
     order = jnp.argsort(evals)[::-1][:dim]

@@ -18,6 +18,7 @@ from repro.core import hmatrix, oos
 from repro.core.hck import HCKFactors, build_hck
 from repro.core.kernels_fn import BaseKernel
 from repro.core.partition import auto_levels_ceil, pad_points
+from repro.kernels.registry import SolveConfig
 
 Array = jax.Array
 
@@ -58,8 +59,14 @@ def fit(
     method: str = "rp",
     classification: bool = False,
     shared_landmarks: bool = False,
+    solve_config: SolveConfig | None = None,
 ) -> HCKRegressor:
-    """Fit KRR with the paper's sizing rule (Eq. 22) unless levels given."""
+    """Fit KRR with the paper's sizing rule (Eq. 22) unless levels given.
+
+    ``solve_config`` selects the solve-engine backend (xla/pallas/auto) for
+    the multi-RHS Algorithm-2 solve; one-vs-all classification shares the
+    factorization across all class columns.
+    """
     key = key if key is not None else jax.random.PRNGKey(0)
     n = x.shape[0]
     leaf_size = leaf_size if leaf_size is not None else rank
@@ -85,8 +92,8 @@ def fit(
         method=method, shared_landmarks=shared_landmarks,
     )
     y_sorted = targets[factors.tree.perm]
-    alpha = hmatrix.solve(factors, y_sorted, ridge=lam)
-    plan = oos.prepare(factors, alpha)
+    alpha = hmatrix.solve(factors, y_sorted, ridge=lam, config=solve_config)
+    plan = oos.prepare(factors, alpha, solve_config)
     return HCKRegressor(kernel, factors, plan, alpha, classes)
 
 

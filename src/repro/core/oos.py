@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from repro.core.hck import HCKFactors
 from repro.core.kernels_fn import BaseKernel
 from repro.core.partition import route
+from repro.kernels.registry import (DEFAULT_CONFIG, SolveConfig, get_impl,
+                                    resolve_backend)
 
 Array = jax.Array
 
@@ -63,9 +65,15 @@ def _rep2(x: Array) -> Array:
     return jnp.repeat(x, 2, axis=0)
 
 
-@jax.jit
-def prepare(f: HCKFactors, w: Array) -> OOSPlan:
-    """Phase 1: COMMON-UPWARD over w (w given in tree order), O(n r)."""
+@functools.partial(jax.jit, static_argnames=("config",))
+def prepare(f: HCKFactors, w: Array,
+            config: SolveConfig | None = None) -> OOSPlan:
+    """Phase 1: COMMON-UPWARD over w (w given in tree order), O(n r).
+
+    The leaf projection e_L = U^T w is the only O(n r) product in the plan
+    and routes through the solve-engine registry ("leaf_project" stage).
+    """
+    config = config if config is not None else DEFAULT_CONFIG
     squeeze = w.ndim == 1
     if squeeze:
         w = w[:, None]
@@ -73,7 +81,11 @@ def prepare(f: HCKFactors, w: Array) -> OOSPlan:
     wl = w.reshape(f.num_leaves, n0, k)
     if levels == 0:
         return OOSPlan((), wl)
-    e = {levels: jnp.einsum("pnr,pnk->prk", f.u, wl)}
+    backend = resolve_backend(config, "leaf_project", dtype=w.dtype,
+                              n0=n0, r=f.rank)
+    e_leaf = get_impl("leaf_project", backend)(
+        f.u, wl, interpret=config.interpret).astype(wl.dtype)
+    e = {levels: e_leaf}
     for lvl in range(levels - 1, 0, -1):
         s = _pair_sum(e[lvl + 1])
         e[lvl] = jnp.einsum("pab,pak->pbk", f.w[lvl - 1], s)
@@ -120,11 +132,12 @@ def apply_plan(
 
 
 def predict(
-    f: HCKFactors, w: Array, queries: Array, kernel: BaseKernel
+    f: HCKFactors, w: Array, queries: Array, kernel: BaseKernel,
+    config: SolveConfig | None = None,
 ) -> Array:
     """Convenience: prepare + apply.  w in tree order, shape (n,) or (n, k)."""
     squeeze = w.ndim == 1
-    plan = prepare(f, w if w.ndim > 1 else w[:, None])
+    plan = prepare(f, w if w.ndim > 1 else w[:, None], config)
     z = apply_plan(f, plan, queries, kernel)
     return z[:, 0] if squeeze else z
 

@@ -25,12 +25,14 @@ import numpy as np
 
 from repro.core import hmatrix
 from repro.core.hck import HCKFactors
+from repro.kernels.registry import SolveConfig
 
 Array = jax.Array
 
 
 def estimate_spectral_range(f: HCKFactors, ridge: float, *, iters: int = 30,
-                            key: Array | None = None) -> tuple[float, float]:
+                            key: Array | None = None,
+                            config: SolveConfig | None = None) -> tuple[float, float]:
     """(lo, hi) bounds for eig(K_hck + ridge I): hi via power iteration
     (with 10% headroom), lo = ridge (K_hck is PSD)."""
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -38,11 +40,11 @@ def estimate_spectral_range(f: HCKFactors, ridge: float, *, iters: int = 30,
     v = v / jnp.linalg.norm(v)
 
     def body(_, v):
-        w = hmatrix.matvec(f, v) + ridge * v
+        w = hmatrix.matvec(f, v, config) + ridge * v
         return w / jnp.linalg.norm(w)
 
     v = jax.lax.fori_loop(0, iters, body, v)
-    hi = float(v @ (hmatrix.matvec(f, v) + ridge * v))
+    hi = float(v @ (hmatrix.matvec(f, v, config) + ridge * v))
     return float(ridge) * 0.99, hi * 1.1
 
 
@@ -60,16 +62,17 @@ def chebyshev_coeffs(fn, lo: float, hi: float, degree: int) -> np.ndarray:
     return coeffs
 
 
-@functools.partial(jax.jit, static_argnames=("degree",))
+@functools.partial(jax.jit, static_argnames=("degree", "config"))
 def _cheb_apply(f: HCKFactors, ridge, eps: Array, coeffs: Array,
-                lo, hi, degree: int) -> Array:
+                lo, hi, degree: int,
+                config: SolveConfig | None = None) -> Array:
     """sum_k c_k T_k(A~) eps with the three-term recurrence; A~ maps
     [lo, hi] -> [-1, 1]."""
     alpha = 2.0 / (hi - lo)
     beta = -(hi + lo) / (hi - lo)
 
     def amv(v):
-        return alpha * (hmatrix.matvec(f, v) + ridge * v) + beta * v
+        return alpha * (hmatrix.matvec(f, v, config) + ridge * v) + beta * v
 
     t_prev = eps                      # T_0 eps
     t_cur = amv(eps)                  # T_1 eps
@@ -86,20 +89,24 @@ def _cheb_apply(f: HCKFactors, ridge, eps: Array, coeffs: Array,
 
 
 def sample_prior(f: HCKFactors, *, ridge: float, key: Array,
-                 num_samples: int = 1, degree: int = 64) -> Array:
+                 num_samples: int = 1, degree: int = 64,
+                 config: SolveConfig | None = None) -> Array:
     """Draw ``num_samples`` ~ N(0, K_hck + ridge I): (num_samples, n)."""
-    lo, hi = estimate_spectral_range(f, ridge)
+    lo, hi = estimate_spectral_range(f, ridge, config=config)
     dt = f.adiag.dtype
     coeffs = jnp.asarray(chebyshev_coeffs(np.sqrt, lo, hi, degree), dtype=dt)
     eps = jax.random.normal(key, (num_samples, f.n), dtype=dt)
-    draw = jax.vmap(lambda e: _cheb_apply(f, ridge, e, coeffs, lo, hi, degree))
+    draw = jax.vmap(lambda e: _cheb_apply(f, ridge, e, coeffs, lo, hi, degree,
+                                          config))
     return draw(eps)
 
 
 def sqrt_matvec(f: HCKFactors, eps: Array, *, ridge: float,
-                degree: int = 64) -> Array:
+                degree: int = 64,
+                config: SolveConfig | None = None) -> Array:
     """(K_hck + ridge I)^{1/2} @ eps via the Chebyshev expansion."""
-    lo, hi = estimate_spectral_range(f, ridge)
+    lo, hi = estimate_spectral_range(f, ridge, config=config)
     dt = f.adiag.dtype
     coeffs = jnp.asarray(chebyshev_coeffs(np.sqrt, lo, hi, degree), dtype=dt)
-    return _cheb_apply(f, ridge, eps.astype(dt), coeffs, lo, hi, degree)
+    return _cheb_apply(f, ridge, eps.astype(dt), coeffs, lo, hi, degree,
+                       config)

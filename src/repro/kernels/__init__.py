@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Custom-kernel layer.  Each hot spot ships <name>.py (the Pallas body),
+# ops.py (jit'd wrapper) and ref.py (pure-jnp oracle); every stage is
+# registered with repro.kernels.registry so repro.core selects backends
+# through one SolveConfig instead of per-callsite flags.
+from repro.kernels.registry import (DEFAULT_CONFIG, SolveConfig, get_impl,
+                                    register, registered, resolve_backend,
+                                    tile_config)
+
+__all__ = [
+    "DEFAULT_CONFIG", "SolveConfig", "get_impl", "register", "registered",
+    "resolve_backend", "tile_config",
+]

@@ -1,4 +1,10 @@
-"""Jit'd wrapper for the fused HCK leaf matvec."""
+"""Jit'd wrappers for the fused HCK leaf stages.
+
+These are the "pallas" backend entries of :mod:`repro.kernels.registry`
+(the registry lazily imports the kernel module so XLA-only users never
+trace a Pallas call).  Inputs at or below 32-bit are computed on the f32
+MXU path; float64 inputs stay float64 (interpret-mode oracle parity).
+"""
 from __future__ import annotations
 
 import functools
@@ -6,22 +12,59 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.hck_leaf.hck_leaf import hck_leaf_matvec
-from repro.kernels.hck_leaf.ref import hck_leaf_matvec_ref
+from repro.kernels.hck_leaf.hck_leaf import (hck_leaf_matvec, hck_leaf_project,
+                                             hck_leaf_solve)
+from repro.kernels.hck_leaf.ref import (hck_leaf_matvec_ref,
+                                        hck_leaf_project_ref,
+                                        hck_leaf_solve_ref)
 
 Array = jax.Array
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def _compute_dtype(*arrays: Array):
+    if any(a.dtype == jnp.float64 for a in arrays):
+        return jnp.float64
+    return jnp.float32
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas",
+                                             "block_n0"))
 def leaf_matvec(
     adiag: Array, u: Array, b: Array, *,
     interpret: bool = True, use_pallas: bool = True,
+    block_n0: int | None = None,
 ) -> tuple[Array, Array]:
     """Fused leaf stage; falls back to the oracle when use_pallas=False
     (the CPU-containerized default in repro.core keeps XLA fusion; the
     Pallas path is the TPU deployment path)."""
     if not use_pallas:
         return hck_leaf_matvec_ref(adiag, u, b)
+    ct = _compute_dtype(adiag, u, b)
     return hck_leaf_matvec(
-        adiag.astype(jnp.float32), u.astype(jnp.float32),
-        b.astype(jnp.float32), interpret=interpret)
+        adiag.astype(ct), u.astype(ct), b.astype(ct),
+        interpret=interpret, block_n0=block_n0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def leaf_solve(
+    linv: Array, u: Array, sig: Array, b: Array, *,
+    interpret: bool = True, use_pallas: bool = True,
+) -> tuple[Array, Array]:
+    """Fused block-Cholesky apply + self correction + upward projection."""
+    if not use_pallas:
+        return hck_leaf_solve_ref(linv, u, sig, b)
+    ct = _compute_dtype(linv, u, sig, b)
+    return hck_leaf_solve(
+        linv.astype(ct), u.astype(ct), sig.astype(ct), b.astype(ct),
+        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def leaf_project(
+    u: Array, b: Array, *, interpret: bool = True, use_pallas: bool = True,
+) -> Array:
+    """Upward Nyström projection c = U^T b (OOS / distributed pass)."""
+    if not use_pallas:
+        return hck_leaf_project_ref(u, b)
+    ct = _compute_dtype(u, b)
+    return hck_leaf_project(u.astype(ct), b.astype(ct), interpret=interpret)

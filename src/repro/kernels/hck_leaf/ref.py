@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused HCK leaf matvec."""
+"""Pure-jnp oracles for the fused HCK leaf stages."""
 from __future__ import annotations
 
 import jax
@@ -7,9 +7,27 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
+def _f(a: Array) -> Array:
+    """Promote to at least float32 (bf16 inputs), preserve float64."""
+    return a if a.dtype == jnp.float64 else a.astype(jnp.float32)
+
+
 def hck_leaf_matvec_ref(adiag: Array, u: Array, b: Array) -> tuple[Array, Array]:
-    y = jnp.einsum("pnm,pmk->pnk", adiag.astype(jnp.float32),
-                   b.astype(jnp.float32))
-    c = jnp.einsum("pnr,pnk->prk", u.astype(jnp.float32),
-                   b.astype(jnp.float32))
+    y = jnp.einsum("pnm,pmk->pnk", _f(adiag), _f(b))
+    c = jnp.einsum("pnr,pnk->prk", _f(u), _f(b))
     return y, c
+
+
+def hck_leaf_solve_ref(
+    linv: Array, u: Array, sig: Array, b: Array
+) -> tuple[Array, Array]:
+    linv, u, sig, b = _f(linv), _f(u), _f(sig), _f(b)
+    t = jnp.einsum("pnm,pmk->pnk", linv, b)
+    x = jnp.einsum("pmn,pmk->pnk", linv, t)
+    c = jnp.einsum("pnr,pnk->prk", u, b)
+    x = x + jnp.einsum("pnr,prs,psk->pnk", u, sig, c)
+    return x, c
+
+
+def hck_leaf_project_ref(u: Array, b: Array) -> Array:
+    return jnp.einsum("pnr,pnk->prk", _f(u), _f(b))

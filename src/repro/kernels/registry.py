@@ -1,0 +1,320 @@
+"""Backend registry for the HCK solve engine (DESIGN.md §5).
+
+Every compute *stage* of the Algorithm 1/2 hot path (and of the other
+custom-kernel hot spots in this package) is registered here under a
+``(stage, backend)`` key.  ``repro.core.hmatrix`` asks the registry for an
+implementation instead of hard-coding einsums or threading ad-hoc
+``leaf_backend`` strings through every caller:
+
+    impl = get_impl("leaf_matvec", resolve_backend(cfg, "leaf_matvec",
+                                                   dtype=b.dtype, n0=n0, r=r))
+    y, c = impl(adiag, u, b, interpret=cfg.interpret)
+
+Backends:
+  * ``xla``    — dtype-preserving batched einsums; the oracle-grade path
+                 (float64 capable) and the CPU default.
+  * ``pallas`` — fused Pallas TPU kernels (interpret mode on CPU).  Keeps
+                 the leaf working set in VMEM; the deployment path.
+
+``SolveConfig`` is the single, hashable knob object shared by all solver
+consumers (krr/gp/kpca/oos/launch); it is a static jit argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+BACKENDS = ("xla", "pallas")
+
+#: stages of the hierarchical solve engine (plus the other kernel packages'
+#: hot spots, so one registry covers every custom kernel in the repo).
+STAGES = (
+    "leaf_matvec",     # y_i = A_ii b_i            ; c_i = U_i^T b_i
+    "leaf_solve",      # x_i = A_ii^{-1} b_i (+lr) ; c_i = U_i^T b_i
+    "leaf_project",    # c_i = U_i^T b_i           (OOS common-upward)
+    "pairwise_kernel",  # K(X, Y) tiles            (kernel_tile)
+    "attention",        # flash attention          (flash_attention)
+    "ssd_intra_chunk",  # SSD intra-chunk scan     (ssd_chunk)
+)
+
+
+# ---------------------------------------------------------------------------
+# SolveConfig — the one shared knob object
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SolveConfig:
+    """Hashable solve-engine configuration (static under jit).
+
+    backend         "auto" picks per stage from dtype/shape (float32 +
+                    tile-friendly leaves -> pallas, else xla); "xla"/"pallas"
+                    force a backend for every stage.
+    interpret       run Pallas bodies in interpret mode (CPU containers);
+                    flip to False on a real TPU.
+    refine_steps    iterative-refinement rounds in :func:`repro.core.
+                    hmatrix.solve` (each is one matvec + one inverse apply).
+    leaf_block      override the leaf tile size (None = whole leaf per
+                    program; see :func:`tile_config`).
+    min_pallas_leaf leaf sizes must be a multiple of this for "auto" to
+                    pick pallas (float32 sublane granularity).
+    """
+
+    backend: str = "auto"
+    interpret: bool = True
+    refine_steps: int = 2
+    leaf_block: int | None = None
+    min_pallas_leaf: int = 8
+
+    def __post_init__(self):
+        if self.backend not in ("auto",) + BACKENDS:
+            raise ValueError(
+                f"backend {self.backend!r} not in {('auto',) + BACKENDS}")
+
+    def with_backend(self, backend: str) -> "SolveConfig":
+        return dataclasses.replace(self, backend=backend)
+
+
+DEFAULT_CONFIG = SolveConfig()
+
+# VMEM working-set budget per program instance (bytes); half of a 16 MB
+# TPU core VMEM, leaving headroom for double buffering.
+_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """Per-shape tile choice for a leaf-stage Pallas launch."""
+
+    block_n0: int          # rows of the leaf block each program handles
+    vmem_bytes: int        # working-set estimate at that tile size
+
+    @property
+    def fits(self) -> bool:
+        return self.vmem_bytes <= _VMEM_BUDGET
+
+
+def tile_config(stage: str, *, n0: int, r: int, k: int,
+                itemsize: int = 4, leaf_block: int | None = None) -> TileConfig:
+    """Pick the leaf tile for ``stage`` at shape (n0, r, k).
+
+    The leaf working set is A-tile (block_n0 * n0) + U tile (block_n0 * r)
+    + b (n0 * k) + outputs; shrink block_n0 by powers of two until it fits
+    the VMEM budget.  ``leaf_block`` (from SolveConfig) overrides.  The
+    returned block always divides n0 (snapped down to the nearest divisor),
+    so the kernel launch never silently falls back to whole-leaf tiles.
+    """
+
+    def usage(bn: int) -> int:
+        a_tile = bn * n0                       # A_ii or Linv row-block
+        u_tile = bn * r
+        io = n0 * k + bn * k + r * k
+        extra = r * r if stage == "leaf_solve" else 0
+        return (a_tile + u_tile + io + extra) * itemsize
+
+    def snap(bn: int) -> int:
+        bn = max(1, min(bn, n0))
+        while n0 % bn != 0:
+            bn -= 1
+        return bn
+
+    if leaf_block is not None:
+        bn = snap(leaf_block)
+        return TileConfig(bn, usage(bn))
+    bn = n0
+    while bn > 8 and usage(bn) > _VMEM_BUDGET:
+        bn = snap(bn // 2)
+    return TileConfig(bn, usage(bn))
+
+
+# ---------------------------------------------------------------------------
+# Registry proper
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[tuple[str, str], Callable] = {}
+
+
+def register(stage: str, backend: str):
+    """Decorator: register ``fn`` as the ``backend`` implementation of
+    ``stage``.  Later registrations override earlier ones (tests use this
+    to inject counting shims)."""
+    if stage not in STAGES:
+        raise ValueError(f"unknown stage {stage!r}; stages: {STAGES}")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; backends: {BACKENDS}")
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[(stage, backend)] = fn
+        return fn
+
+    return deco
+
+
+def get_impl(stage: str, backend: str) -> Callable:
+    try:
+        return _REGISTRY[(stage, backend)]
+    except KeyError:
+        have = sorted(k for k in _REGISTRY if k[0] == stage)
+        raise KeyError(
+            f"no implementation registered for stage={stage!r} "
+            f"backend={backend!r}; registered: {have}") from None
+
+
+def registered(stage: str | None = None) -> list[tuple[str, str]]:
+    keys = sorted(_REGISTRY)
+    return [k for k in keys if stage is None or k[0] == stage]
+
+
+def resolve_backend(config: SolveConfig | None, stage: str, *,
+                    dtype, n0: int, r: int, k: int = 1) -> str:
+    """Map ``config.backend`` ("auto" included) to a concrete backend for
+    one stage at one shape.
+
+    "auto" picks pallas only where the fused kernels win and stay exact
+    enough: compiled execution (``interpret=False`` — interpret mode is CPU
+    emulation, an order of magnitude slower than the XLA einsums, so it is
+    never chosen automatically), float32 data (the MXU path; float64
+    oracles stay on xla unless forced), tile-friendly leaves, a real
+    hierarchy (r > 0), and — for the stages that cannot row-tile
+    (leaf_solve chains two n0 x n0 products over the whole leaf) — a
+    working set inside the VMEM budget.
+    """
+    config = config or DEFAULT_CONFIG
+    if config.backend != "auto":
+        return config.backend
+    if config.interpret:
+        return "xla"
+    if r <= 0:
+        return "xla"
+    if jnp.dtype(dtype) != jnp.float32:
+        return "xla"
+    if n0 % config.min_pallas_leaf != 0:
+        return "xla"
+    if stage == "leaf_solve":
+        whole = tile_config(stage, n0=n0, r=r, k=k,
+                            itemsize=jnp.dtype(dtype).itemsize,
+                            leaf_block=n0)
+        if not whole.fits:
+            return "xla"
+    return "pallas"
+
+
+# ---------------------------------------------------------------------------
+# XLA implementations of the solve-engine leaf stages: the single source of
+# the leaf math is repro.kernels.hck_leaf.ref (the same oracles the kernel
+# tests compare against); outputs are restored to the rhs dtype so sub-f32
+# inputs keep their API dtype while accumulating in at least f32.
+# ---------------------------------------------------------------------------
+
+@register("leaf_matvec", "xla")
+def _leaf_matvec_xla(adiag, u, b, *, interpret: bool = True):
+    """(P,n0,n0),(P,n0,r),(P,n0,k) -> y (P,n0,k), c (P,r,k)."""
+    del interpret
+    from repro.kernels.hck_leaf.ref import hck_leaf_matvec_ref
+
+    y, c = hck_leaf_matvec_ref(adiag, u, b)
+    return y.astype(b.dtype), c.astype(b.dtype)
+
+
+@register("leaf_solve", "xla")
+def _leaf_solve_xla(linv, u, sig, b, *, interpret: bool = True):
+    """Fused leaf stage of the structured-inverse apply (oracle form).
+
+    x_i = Linv_i^T (Linv_i b_i) + U_i (Sig_i (U_i^T b_i)),  c_i = U_i^T b_i
+    with Linv the inverse Cholesky factor of the leaf Schur complement and
+    Sig the parent-level corrected middle factor (self term of A~_ii).
+
+    Note: ``hmatrix.apply_inverse`` does NOT call this on its xla path — it
+    multiplies the explicit inverse diagonal blocks via leaf_matvec instead
+    (one GEMM per leaf vs the two triangular GEMMs here); this entry is the
+    parity oracle for the fused pallas kernel.
+    """
+    del interpret
+    from repro.kernels.hck_leaf.ref import hck_leaf_solve_ref
+
+    x, c = hck_leaf_solve_ref(linv, u, sig, b)
+    return x.astype(b.dtype), c.astype(b.dtype)
+
+
+@register("leaf_project", "xla")
+def _leaf_project_xla(u, b, *, interpret: bool = True):
+    """(P,n0,r),(P,n0,k) -> c (P,r,k)."""
+    del interpret
+    from repro.kernels.hck_leaf.ref import hck_leaf_project_ref
+
+    return hck_leaf_project_ref(u, b).astype(b.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pallas implementations — lazy imports so plain-XLA users never pay the
+# pallas import, and so this module has no import cycle with the kernel
+# packages.
+# ---------------------------------------------------------------------------
+
+@register("leaf_matvec", "pallas")
+def _leaf_matvec_pallas(adiag, u, b, *, interpret: bool = True,
+                        block_n0: int | None = None):
+    from repro.kernels.hck_leaf.ops import leaf_matvec
+
+    return leaf_matvec(adiag, u, b, interpret=interpret, block_n0=block_n0)
+
+
+@register("leaf_solve", "pallas")
+def _leaf_solve_pallas(linv, u, sig, b, *, interpret: bool = True):
+    from repro.kernels.hck_leaf.ops import leaf_solve
+
+    return leaf_solve(linv, u, sig, b, interpret=interpret)
+
+
+@register("leaf_project", "pallas")
+def _leaf_project_pallas(u, b, *, interpret: bool = True):
+    from repro.kernels.hck_leaf.ops import leaf_project
+
+    return leaf_project(u, b, interpret=interpret)
+
+
+@register("pairwise_kernel", "xla")
+def _pairwise_xla(x, y, *, name="gaussian", sigma=1.0, interpret: bool = True):
+    del interpret
+    from repro.kernels.kernel_tile.ref import pairwise_kernel_ref
+
+    return pairwise_kernel_ref(x, y, name=name, sigma=sigma)
+
+
+@register("pairwise_kernel", "pallas")
+def _pairwise_pallas(x, y, *, name="gaussian", sigma=1.0,
+                     interpret: bool = True):
+    from repro.kernels.kernel_tile.ops import pairwise_kernel
+
+    return pairwise_kernel(x, y, name=name, sigma=sigma, interpret=interpret)
+
+
+@register("attention", "xla")
+def _attention_xla(q, k, v, *, causal=True, interpret: bool = True):
+    del interpret
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    return attention_ref(q, k, v, causal=causal)
+
+
+@register("attention", "pallas")
+def _attention_pallas(q, k, v, *, causal=True, interpret: bool = True):
+    from repro.kernels.flash_attention.flash_attention import flash_attention
+
+    return flash_attention(q, k, v, causal=causal, interpret=interpret)
+
+
+@register("ssd_intra_chunk", "xla")
+def _ssd_xla(c, b, xdt, cs, *, interpret: bool = True):
+    del interpret
+    from repro.kernels.ssd_chunk.ref import ssd_intra_chunk_ref
+
+    return ssd_intra_chunk_ref(c, b, xdt, cs)
+
+
+@register("ssd_intra_chunk", "pallas")
+def _ssd_pallas(c, b, xdt, cs, *, interpret: bool = True):
+    from repro.kernels.ssd_chunk.ssd_chunk import ssd_intra_chunk
+
+    return ssd_intra_chunk(c, b, xdt, cs, interpret=interpret)

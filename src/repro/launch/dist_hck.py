@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from repro.core import hmatrix
 from repro.core.hck import HCKFactors, build_hck
 from repro.core.kernels_fn import BaseKernel
+from repro.kernels.registry import (DEFAULT_CONFIG, SolveConfig, get_impl,
+                                    resolve_backend)
 
 Array = jax.Array
 
@@ -120,14 +122,22 @@ def build_top_factors(local_root_landmarks: Array, *, kernel: BaseKernel,
 # Distributed Algorithm 1
 # ---------------------------------------------------------------------------
 
-def local_root_coeff(f: HCKFactors, b: Array) -> Array:
+def local_root_coeff(f: HCKFactors, b: Array,
+                     config: SolveConfig | None = None) -> Array:
     """Upward pass to the local subtree root: returns (r, k) in the local
-    root's landmark basis (the device-level W is applied by the caller)."""
+    root's landmark basis (the device-level W is applied by the caller).
+
+    The leaf projection routes through the solve-engine registry so the
+    distributed path shares backends with the single-device engine."""
+    config = config if config is not None else DEFAULT_CONFIG
     if b.ndim == 1:
         b = b[:, None]
     n0 = f.leaf_size
     bb = b.reshape(f.num_leaves, n0, -1)
-    c = jnp.einsum("pnr,pnk->prk", f.u, bb)
+    backend = resolve_backend(config, "leaf_project", dtype=b.dtype,
+                              n0=n0, r=f.rank)
+    c = get_impl("leaf_project", backend)(
+        f.u, bb, interpret=config.interpret).astype(bb.dtype)
     for lvl in range(f.levels - 1, 0, -1):
         s = c.reshape(c.shape[0] // 2, 2, *c.shape[1:]).sum(1)
         c = jnp.einsum("pab,pak->pbk", f.w[lvl - 1], s)
@@ -173,14 +183,17 @@ def top_tree_exchange(c_all: Array, top: TopFactors, my_idx: Array) -> Array:
     return d_dev[my_idx]
 
 
-def make_dist_matvec(axis: str):
-    """shard_map body: (local_factors, top, b_local) -> y_local."""
+def make_dist_matvec(axis: str, config: SolveConfig | None = None):
+    """shard_map body: (local_factors, top, b_local) -> y_local.
+
+    ``config`` is the shared SolveConfig applied to the purely-local stages
+    (the top-tree exchange is O(P r k) and stays as tiny einsums)."""
 
     def matvec(local_f: HCKFactors, top: TopFactors, b_local: Array):
         squeeze = b_local.ndim == 1
         bl = b_local[:, None] if squeeze else b_local
-        y = hmatrix.matvec(local_f, bl)
-        c_dev = local_root_coeff(local_f, bl)                  # (r, k)
+        y = hmatrix.matvec(local_f, bl, config)
+        c_dev = local_root_coeff(local_f, bl, config)          # (r, k)
         c_all = jax.lax.all_gather(c_dev, axis)                # (P, r, k)
         d_dev = top_tree_exchange(c_all, top, jax.lax.axis_index(axis))
         y = y + apply_root_d(local_f, d_dev)

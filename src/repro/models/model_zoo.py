@@ -11,7 +11,6 @@ embeddings (B, n_patch, 1176); musicgen gets EnCodec token grids (B, S, 4).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

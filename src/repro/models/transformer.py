@@ -21,7 +21,6 @@ the long_500k path.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

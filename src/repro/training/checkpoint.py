@@ -24,7 +24,6 @@ import os
 import shutil
 import signal
 import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp

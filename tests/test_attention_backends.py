@@ -1,7 +1,6 @@
 """HCK hierarchical attention: structured path == dense reference of the
 same approximation; convergence toward exact with rank; causality; decode
 == train-time last row; exact backends agree with each other."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

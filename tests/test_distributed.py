@@ -1,6 +1,5 @@
 """Distributed paths that need multiple (placeholder) devices run in a
 subprocess so the 1-device main test session stays clean."""
-import json
 import os
 import subprocess
 import sys
@@ -47,8 +46,9 @@ stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *local_fs)
 def body(local_f, top, b_local):
     local_f = jax.tree.map(lambda a: a[0], local_f)
     return mv(local_f, top, b_local[0])[None]
-sm = jax.shard_map(body, mesh=mesh, in_specs=(P("dev"), P(), P("dev")),
-                   out_specs=P("dev"))
+from jax.experimental.shard_map import shard_map
+sm = shard_map(body, mesh=mesh, in_specs=(P("dev"), P(), P("dev")),
+               out_specs=P("dev"))
 y = jax.jit(sm)(stacked, top, b.reshape(P_DEV, n_local, 1))
 err = float(jnp.max(jnp.abs(y.reshape(-1, 1) - A @ b)))
 assert err < 1e-3, err

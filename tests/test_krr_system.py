@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import baselines, gp, hmatrix, kpca, krr
+from repro.core import baselines, gp, kpca, krr
 from repro.core.hck import build_hck, to_dense
 from repro.core.kernels_fn import BaseKernel
 

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models.moe import moe_ffn
 from repro.models.ssm import (causal_conv1d, ssd_chunked, ssd_decode_step,

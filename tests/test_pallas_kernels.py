@@ -7,10 +7,13 @@ import pytest
 
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.hck_leaf.ops import leaf_matvec
-from repro.kernels.hck_leaf.ref import hck_leaf_matvec_ref
+from repro.kernels.hck_leaf.ops import leaf_matvec, leaf_project, leaf_solve
+from repro.kernels.hck_leaf.ref import (hck_leaf_matvec_ref,
+                                        hck_leaf_project_ref,
+                                        hck_leaf_solve_ref)
 from repro.kernels.kernel_tile.ops import pairwise_kernel
 from repro.kernels.kernel_tile.ref import pairwise_kernel_ref
+from repro.kernels.registry import SolveConfig, get_impl, registered
 
 
 @pytest.mark.parametrize("name", ["gaussian", "imq", "laplace"])
@@ -85,8 +88,59 @@ def test_flash_attention_bf16():
                                np.asarray(want), rtol=5e-2, atol=5e-2)
 
 
-def test_pallas_leaf_backend_in_core_matvec(small_problem):
-    """Integration: matvec(leaf_backend='pallas') == xla path."""
+@pytest.mark.parametrize("p,n0,r,k", [(2, 32, 8, 1), (4, 64, 16, 3),
+                                      (8, 40, 8, 2), (1, 16, 16, 5)])
+def test_hck_leaf_solve_sweep(p, n0, r, k):
+    keys = jax.random.split(jax.random.PRNGKey(4), 4)
+    linv = jnp.tril(jax.random.normal(keys[0], (p, n0, n0)))
+    u = jax.random.normal(keys[1], (p, n0, r))
+    sig = jax.random.normal(keys[2], (p, r, r))
+    b = jax.random.normal(keys[3], (p, n0, k))
+    x1, c1 = leaf_solve(linv, u, sig, b)
+    x2, c2 = hck_leaf_solve_ref(linv, u, sig, b)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_hck_leaf_project():
+    keys = jax.random.split(jax.random.PRNGKey(5), 2)
+    u = jax.random.normal(keys[0], (4, 48, 16))
+    b = jax.random.normal(keys[1], (4, 48, 3))
+    got = leaf_project(u, b)
+    want = hck_leaf_project_ref(u, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_hck_leaf_matvec_row_tiling():
+    """block_n0 < n0 exercises the revisited-accumulator grid path."""
+    keys = jax.random.split(jax.random.PRNGKey(6), 3)
+    p, n0, r, k = 3, 64, 8, 2
+    a = jax.random.normal(keys[0], (p, n0, n0))
+    u = jax.random.normal(keys[1], (p, n0, r))
+    b = jax.random.normal(keys[2], (p, n0, k))
+    y1, c1 = leaf_matvec(a, u, b, block_n0=16)
+    y2, c2 = hck_leaf_matvec_ref(a, u, b)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_registry_covers_all_stages():
+    """Every solve-engine stage has both an xla and a pallas entry."""
+    for stage in ("leaf_matvec", "leaf_solve", "leaf_project",
+                  "pairwise_kernel", "attention", "ssd_intra_chunk"):
+        backends = [b for (s, b) in registered(stage)]
+        assert backends == ["pallas", "xla"], (stage, backends)
+        for b in backends:
+            assert callable(get_impl(stage, b))
+
+
+def test_pallas_backend_in_core_matvec(small_problem):
+    """Integration: matvec(SolveConfig(backend='pallas')) == xla path."""
     _, _, f = small_problem
     from repro.core import hmatrix
 
@@ -94,8 +148,8 @@ def test_pallas_leaf_backend_in_core_matvec(small_problem):
         lambda a: a.astype(jnp.float32) if hasattr(a, "dtype")
         and a.dtype == jnp.float64 else a, f)
     b = jax.random.normal(jax.random.PRNGKey(5), (f.n, 2), dtype=jnp.float32)
-    y1 = hmatrix.matvec(f32, b)
-    y2 = hmatrix.matvec(f32, b, leaf_backend="pallas")
+    y1 = hmatrix.matvec(f32, b, SolveConfig(backend="xla"))
+    y2 = hmatrix.matvec(f32, b, SolveConfig(backend="pallas"))
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
                                atol=1e-5)
 

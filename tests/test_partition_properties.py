@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.kernels_fn import BaseKernel
 from repro.core.partition import auto_levels, build_partition, pad_points, route

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import TrainConfig, get_arch
 from repro.data.pipeline import TokenPipeline
@@ -50,12 +50,17 @@ def test_compression_wire_savings():
 
 
 def test_compressed_training_still_converges():
-    cfg = get_arch("granite-3-2b").reduced()
-    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=32, global_batch=4)
-    tcfg = TrainConfig(lr=3e-3, warmup_steps=2, total_steps=25,
-                       grad_compression="int8")
-    _, _, hist = train_loop(cfg, tcfg, pipe, steps=15, log_every=0)
-    assert hist[-1][1]["loss"] < hist[0][1]["loss"]
+    # pin the float32 training semantics: other test files enable x64
+    # session-wide, which changes RNG draws and drowns 15-step convergence
+    from jax.experimental import disable_x64
+
+    with disable_x64():
+        cfg = get_arch("granite-3-2b").reduced()
+        pipe = TokenPipeline(vocab=cfg.vocab, seq_len=32, global_batch=4)
+        tcfg = TrainConfig(lr=3e-3, warmup_steps=2, total_steps=25,
+                           grad_compression="int8")
+        _, _, hist = train_loop(cfg, tcfg, pipe, steps=15, log_every=0)
+        assert hist[-1][1]["loss"] < hist[0][1]["loss"]
 
 
 def test_checkpoint_roundtrip_and_gc():
