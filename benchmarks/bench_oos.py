@@ -1,0 +1,201 @@
+"""Prediction-engine benchmark: Algorithm-3 queries/sec, latency
+percentiles, speedup over the pre-refactor walk path, and oracle error,
+emitted as machine-readable BENCH_oos.json.
+
+The perf trajectory of the serving hot path is tracked from this file
+onward: CI runs ``--smoke`` on a tiny float64 problem, gates the engine's
+prediction error against the dense OOS oracle (``oos_vector_reference``)
+at 1e-6 (nonzero exit on miss), and uploads the JSON as an artifact; full
+runs chart the engine against the legacy per-level walk at production
+shapes (default n=65536, r=256, q=4096) and run the float64 oracle check
+on a query subsample.
+
+Usage:
+  python benchmarks/bench_oos.py                       # default sweep
+  python benchmarks/bench_oos.py --smoke               # CI gate (tiny, f64)
+  python benchmarks/bench_oos.py --n 16384 --rank 64 --backends xla,pallas
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import oos
+from repro.core.hck import build_hck
+from repro.core.kernels_fn import BaseKernel
+from repro.core.partition import auto_levels_ceil
+from repro.kernels.registry import SolveConfig
+from repro.serving.predict_service import PredictEngine, bucket_size
+
+
+def _timeit(fn, *args, repeats: int = 3):
+    out = fn(*args)
+    jax.block_until_ready(out)          # compile outside the timed region
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def _problem(n: int, rank: int, d: int, k: int, dtype, *, sigma: float = 2.0):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d), dtype=dtype)
+    ker = BaseKernel("gaussian", sigma=sigma, jitter=1e-8)
+    levels = auto_levels_ceil(n, rank)
+    f = build_hck(x, levels=levels, rank=rank, key=jax.random.PRNGKey(1),
+                  kernel=ker)
+    w = jax.random.normal(jax.random.PRNGKey(2), (n, k), dtype=dtype)
+    return f, ker, w
+
+
+def bench_backend(f, ker, plan, queries, backend: str, *, repeats: int,
+                  micro: int) -> dict:
+    cfg = SolveConfig(backend=backend)
+    q = queries.shape[0]
+    k = plan.w_leaf.shape[-1]
+
+    # full-batch engine throughput (the bucket is the next power of two
+    # over q, so padding overhead is part of the measurement — as served)
+    engine = PredictEngine(f, plan, ker, config=cfg, min_bucket=64,
+                           max_bucket=bucket_size(q, 64, 1 << 20))
+    t_apply, z = _timeit(engine.apply, queries, repeats=repeats)
+
+    # micro-batched serving latency through the shape buckets
+    engine.apply(queries[:micro])       # compile the micro bucket
+    lat = []
+    for i in range(0, q, micro):
+        t0 = time.perf_counter()
+        jax.block_until_ready(engine.apply(queries[i:i + micro]))
+        lat.append(time.perf_counter() - t0)
+    lat.sort()
+
+    return {
+        "backend": backend,
+        "apply_s": t_apply,
+        "queries_per_s": q / t_apply,
+        "micro_batch": micro,
+        "micro_p50_s": lat[len(lat) // 2],
+        "micro_p99_s": lat[min(len(lat) - 1, int(len(lat) * 0.99))],
+        "micro_queries_per_s": q / sum(lat),
+        "engine_stats": engine.stats,
+        "k": k,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=65536)
+    ap.add_argument("--rank", type=int, default=256)
+    ap.add_argument("--q", type=int, default=4096, help="query batch size")
+    ap.add_argument("--k", type=int, default=1, help="number of RHS columns")
+    ap.add_argument("--d", type=int, default=8, help="input dimension")
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "float64"])
+    ap.add_argument("--backends", default="xla")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--micro-batch", type=int, default=256)
+    ap.add_argument("--oracle-queries", type=int, default=8,
+                    help="queries checked against the dense OOS oracle "
+                         "(always in float64); 0 disables")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny float64 problem + dense-oracle tolerance gate")
+    ap.add_argument("--tol", type=float, default=1e-6,
+                    help="max abs error vs oos_vector_reference (float64)")
+    ap.add_argument("--out", default="BENCH_oos.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.n, args.rank, args.q, args.d, args.k = 512, 16, 53, 4, 2
+        args.dtype = "float64"
+        args.backends = "xla,pallas"
+        args.oracle_queries = args.q
+        args.micro_batch = 16
+
+    jax.config.update("jax_enable_x64", True)   # oracle checks run in f64
+    dtype = jnp.dtype(args.dtype)
+
+    f, ker, w = _problem(args.n, args.rank, args.d, args.k, dtype)
+    queries = jax.random.normal(jax.random.PRNGKey(3), (args.q, args.d),
+                                dtype=dtype)
+    t_prep, plan = _timeit(lambda: oos.prepare(f, w), repeats=1)
+
+    report = {
+        "problem": {"n": f.n, "levels": f.levels, "rank": args.rank,
+                    "q": args.q, "k": args.k, "d": args.d,
+                    "dtype": args.dtype, "leaf_size": f.leaf_size,
+                    "smoke": args.smoke},
+        "device": str(jax.devices()[0]),
+        "prepare_s": t_prep,
+        "results": [],
+        "checks": {},
+    }
+
+    # pre-refactor baseline: per-query gathers + per-level walk-up loop
+    t_walk, z_walk = _timeit(
+        lambda qs: oos.apply_plan_walk(f, plan, qs, ker), queries,
+        repeats=args.repeats)
+    report["walk"] = {"apply_s": t_walk, "queries_per_s": args.q / t_walk}
+    print(f"[  walk] apply {t_walk*1e3:9.2f} ms "
+          f"({args.q / t_walk:10,.0f} q/s)   <- pre-refactor baseline")
+
+    for backend in args.backends.split(","):
+        r = bench_backend(f, ker, plan, queries, backend.strip(),
+                          repeats=args.repeats, micro=args.micro_batch)
+        r["speedup_vs_walk"] = t_walk / r["apply_s"]
+        report["results"].append(r)
+        print(f"[{r['backend']:>6}] apply {r['apply_s']*1e3:9.2f} ms "
+              f"({r['queries_per_s']:10,.0f} q/s)  "
+              f"{r['speedup_vs_walk']:5.1f}x vs walk  "
+              f"micro p50 {r['micro_p50_s']*1e3:7.2f} ms "
+              f"p99 {r['micro_p99_s']*1e3:7.2f} ms")
+
+    ok = True
+    if args.oracle_queries > 0:
+        # oracle gate, always float64: engine prediction vs the explicit
+        # k_hck(X, x) row vectors of Eq. 13-16
+        oq = min(args.oracle_queries, args.q)
+        if dtype == jnp.float64:
+            f64, ker64, w64, q64 = f, ker, w, queries[:oq]
+        else:
+            f64, ker64, w64 = _problem(args.n, args.rank, args.d, args.k,
+                                       jnp.float64)
+            q64 = jax.random.normal(jax.random.PRNGKey(3), (oq, args.d),
+                                    dtype=jnp.float64)
+        want = oos.oos_reference_batch(f64, q64, ker64) @ w64
+        plan64 = oos.prepare(f64, w64)
+        for backend in args.backends.split(","):
+            cfg = SolveConfig(backend=backend.strip())
+            got = oos.apply_plan(f64, plan64, q64, ker64, cfg)
+            err = float(jnp.max(jnp.abs(got - want)))
+            walk_err = float(jnp.max(jnp.abs(
+                oos.apply_plan_walk(f64, plan64, q64, ker64) - want)))
+            passed = err <= args.tol
+            ok = ok and passed
+            report["checks"][backend.strip()] = {
+                "oracle_queries": oq,
+                "engine_max_abs_err_vs_oracle": err,
+                "walk_max_abs_err_vs_oracle": walk_err,
+                "tol": args.tol, "pass": passed,
+            }
+            print(f"[{backend.strip():>6}] oracle ({oq} q, f64): "
+                  f"engine err {err:.2e}  walk err {walk_err:.2e}  "
+                  f"{'PASS' if passed else 'FAIL'}")
+
+    report["pass"] = ok
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

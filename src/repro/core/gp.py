@@ -36,20 +36,30 @@ class HCKGaussianProcess:
     noise: float
     solve_config: SolveConfig | None = None
 
+    def __post_init__(self):
+        self._engine = None
+
+    @property
+    def engine(self):
+        """Shape-bucketed prediction service for the posterior mean."""
+        from repro.serving.predict_service import PredictEngine
+
+        return PredictEngine.attach(self)
+
     def posterior_mean(self, queries: Array) -> Array:
-        return oos.apply_plan(self.factors, self.plan, queries, self.kernel)[:, 0]
+        return self.engine(queries)[:, 0]
 
     def posterior_var(self, queries: Array) -> Array:
-        """diag of Eq. 4.  O(n) per query — uses the explicit k_hck vector."""
-        from repro.core.oos import oos_vector_reference
+        """diag of Eq. 4.  Still O(n) per query (explicit k_hck vectors),
+        but the (K + noise I)^{-1} applies are batched: one multi-RHS
+        structured-inverse apply for the whole query batch instead of a
+        solve per query."""
+        from repro.core.oos import oos_reference_batch
 
-        out = []
-        for q in queries:
-            v = oos_vector_reference(self.factors, q, self.kernel)
-            kinv_v = hmatrix.apply_inverse(
-                self.inv, v[:, None], self.solve_config)[:, 0]
-            out.append(self.kernel.gram(q[None])[0, 0] - v @ kinv_v)
-        return jnp.stack(out)
+        vs = oos_reference_batch(self.factors, queries, self.kernel).T  # (n, q)
+        kinv_vs = hmatrix.apply_inverse(self.inv, vs, self.solve_config)
+        kxx = jax.vmap(lambda q: self.kernel.gram(q[None])[0, 0])(queries)
+        return kxx - jnp.sum(vs * kinv_vs, axis=0)
 
     def log_marginal_likelihood(self, y_sorted: Array) -> Array:
         n = y_sorted.shape[0]

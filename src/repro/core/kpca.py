@@ -11,14 +11,23 @@ come from subspace (block power) iteration — O(n r q) per sweep.
 
 Also provides the embedding-alignment metric of Fig. 8:
 ``min_M ||U - U~ M||_F / ||U||_F`` via the orthogonal Procrustes solution.
+Out-of-sample extension: :func:`kpca_fit` wraps the embedding into a
+:class:`KPCAModel` whose ``transform`` maps new points into the same
+principal subspace through the Algorithm-3 prediction engine — the
+centered projection ``psi(x) = Lambda^{-1/2} V^T H (k(X,x) - K 1/n)``
+needs only ``w^T k_hck(X, x)`` products with ``w = [V, 1/n]``, so a query
+costs O((n0 + r) d) like any other prediction, never O(n).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import hmatrix
 from repro.core.hck import HCKFactors
+from repro.core.kernels_fn import BaseKernel
 from repro.kernels.registry import SolveConfig
 
 Array = jax.Array
@@ -61,6 +70,69 @@ def kpca_embed(
     evals = evals[order]
     u = (v @ evecs)[:, order]
     return u * jnp.sqrt(jnp.maximum(evals, 0.0)), evals
+
+
+@dataclasses.dataclass
+class KPCAModel:
+    """Kernel-PCA embedding plus its out-of-sample transform.
+
+    ``embedding`` rows are in tree order (aligned with ``factors.x_sorted``).
+    ``transform`` projects new points with the same eigenbasis:
+
+        psi(x) = Lambda^{-1/2} (V^T k_vec - (1^T k_vec / n) V^T 1 - V^T g),
+        g = H K 1 / n,
+
+    where every query-dependent term is a ``w^T k_hck(X, x)`` product
+    served by the shape-bucketed prediction engine with the stacked
+    weights ``w = [V, 1/n]`` (dim + 1 RHS sharing one plan).
+    """
+
+    kernel: BaseKernel
+    factors: HCKFactors
+    embedding: Array           # (n, dim) = V sqrt(Lambda), tree order
+    evals: Array               # (dim,)
+    v1: Array                  # (dim,)  V^T 1
+    a0: Array                  # (dim,)  V^T (H K 1 / n)
+    solve_config: SolveConfig | None = None
+
+    def __post_init__(self):
+        self._engine = None
+
+    @property
+    def engine(self):
+        from repro.serving.predict_service import PredictEngine
+
+        if self._engine is None:
+            n, _ = self.embedding.shape
+            scale = jnp.sqrt(jnp.maximum(self.evals, 1e-30))
+            v = self.embedding / scale                       # (n, dim) eigvecs
+            w = jnp.concatenate(
+                [v, jnp.full((n, 1), 1.0 / n, v.dtype)], axis=1)
+            PredictEngine.attach(self, weights=w)
+        return self._engine
+
+    def transform(self, queries: Array) -> Array:
+        """(q, d) -> (q, dim) coordinates in the principal subspace."""
+        dim = self.embedding.shape[1]
+        z = self.engine(queries)                             # (q, dim + 1)
+        proj = z[:, :dim] - z[:, dim:] * self.v1[None] - self.a0[None]
+        return proj / jnp.sqrt(jnp.maximum(self.evals, 1e-30))[None]
+
+
+def kpca_fit(
+    f: HCKFactors, kernel: BaseKernel, dim: int, *, iters: int = 50,
+    key: Array | None = None, solve_config: SolveConfig | None = None,
+) -> KPCAModel:
+    """Embed the training set and package the out-of-sample transform."""
+    emb, evals = kpca_embed(f, dim, iters=iters, key=key,
+                            solve_config=solve_config)
+    scale = jnp.sqrt(jnp.maximum(evals, 1e-30))
+    v = emb / scale
+    k1 = hmatrix.matvec(f, jnp.full((f.n,), 1.0 / f.n, emb.dtype),
+                        solve_config)                        # K 1 / n
+    g = k1 - jnp.mean(k1)                                    # H K 1 / n
+    return KPCAModel(kernel, f, emb, evals, v1=jnp.sum(v, axis=0),
+                     a0=v.T @ g, solve_config=solve_config)
 
 
 def kpca_embed_dense(k_centered: Array, dim: int) -> tuple[Array, Array]:

@@ -25,22 +25,42 @@ Array = jax.Array
 
 @dataclasses.dataclass
 class HCKRegressor:
-    """Fitted HCK kernel ridge model."""
+    """Fitted HCK kernel ridge model.
+
+    ``squeeze`` is recorded at fit time (caller passed 1-D regression
+    targets) so predict's output shape is consistent regardless of how many
+    RHS columns the internal solve used: 1-D ``y`` -> ``(q,)``, 2-D ``y``
+    (even with one column) -> ``(q, k)``; classification scores are always
+    ``(q, n_scores)``.
+    """
 
     kernel: BaseKernel
     factors: HCKFactors
     plan: oos.OOSPlan          # Algorithm-3 precomputation over alpha
     alpha: Array               # (n, k) dual coefficients, tree order
     classes: Array | None = None
+    squeeze: bool = False
+    solve_config: SolveConfig | None = None
+
+    def __post_init__(self):
+        self._engine = None
+
+    @property
+    def engine(self):
+        """Shape-bucketed prediction service over the fitted plan (built
+        lazily; see repro.serving.predict_service)."""
+        from repro.serving.predict_service import PredictEngine
+
+        return PredictEngine.attach(self)
 
     def predict(self, queries: Array) -> Array:
-        z = oos.apply_plan(self.factors, self.plan, queries, self.kernel)
-        return z[:, 0] if z.shape[1] == 1 and self.classes is None else z
+        z = self.engine(queries)
+        return z[:, 0] if self.squeeze else z
 
     def predict_class(self, queries: Array) -> Array:
-        z = oos.apply_plan(self.factors, self.plan, queries, self.kernel)
         if self.classes is None:
             raise ValueError("model was fit for regression")
+        z = self.engine(queries)
         if z.shape[1] == 1:  # binary ±1
             return jnp.where(z[:, 0] > 0, self.classes[1], self.classes[0])
         return self.classes[jnp.argmax(z, axis=1)]
@@ -94,7 +114,9 @@ def fit(
     y_sorted = targets[factors.tree.perm]
     alpha = hmatrix.solve(factors, y_sorted, ridge=lam, config=solve_config)
     plan = oos.prepare(factors, alpha, solve_config)
-    return HCKRegressor(kernel, factors, plan, alpha, classes)
+    squeeze = not classification and y.ndim == 1
+    return HCKRegressor(kernel, factors, plan, alpha, classes,
+                        squeeze=squeeze, solve_config=solve_config)
 
 
 def relative_error(pred: Array, truth: Array) -> Array:

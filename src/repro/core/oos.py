@@ -1,20 +1,34 @@
-"""Out-of-sample extension — Algorithm 3 (paper §3.3).
+"""Out-of-sample extension — Algorithm 3 (paper §3.3), batched engine form.
 
 Computes ``z = w^T k_hck(X, x)`` for a batch of query points without ever
 materializing the n-vector ``k_hck(X, x)``:
 
   phase 1 (query independent, O(n r)):  the COMMON-UPWARD pass over ``w``
-  produces per-node coefficients ``c_l = Sigma_p^T (upward c of sibling)``.
+  produces per-node coefficients ``c_l = Sigma_p^T (upward c of sibling)``;
+  a second, downward sweep then *pushes the root path into the leaves*:
 
-  phase 2 (per query, O(r^2 log(n/r) + (n0 + r) d)):  route x to its leaf,
-  evaluate k(Xl_p, x) at the leaf's parent, then walk the root path
-  ``d <- W^T d`` accumulating ``c^T d``, plus the exact local term
-  ``w_leaf^T k(X_leaf, x)``.
+      c~_j = Sigma_p^{-1} [ c_L[j] + W_{L-1} c_{L-1} + W_{L-1} W_{L-2} c_{L-2}
+                            + ... ]   (chain along leaf j's root path)
 
-TPU adaptation: queries are batched; the "walk" is a gather of each query's
-per-level node factors (W, c) followed by tiny batched matmuls — no
-recursion, no host control flow.  Decode-time hierarchical attention
-(models/attention_backends.py) reuses exactly this routine.
+  Because the walk matrices ``W`` and the middle-factor inverse only depend
+  on the leaf a query routes to — never on the query itself — the entire
+  per-level walk-up loop of Algorithm 3 (L-1 batched (q, r, r) gathers, a
+  per-query Cholesky solve, L-1 tiny matmuls) collapses into ONE per-leaf
+  coefficient block ``c~ (2**L, r, k)`` computed once per plan.  This is
+  the flattened root-path contraction the ISSUE's (q, L, r, r) pre-gather
+  reduces to after the query-independent factors are hoisted.
+
+  phase 2 (per query, O((n0 + r)(d + k))):  route x to its leaf j, then
+
+      z = w_leaf[j]^T k(X_j, x)  +  c~_j^T k(Xl_parent(j), x)
+
+  two fused cross-kernel contractions (registry stages ``oos_local`` and
+  ``oos_walk``).  Queries are sorted/segmented by leaf first
+  (:func:`repro.core.partition.group_by_leaf`) so the leaf-block and
+  landmark gathers are coalesced per segment instead of scattered.
+
+``apply_plan_walk`` keeps the pre-refactor per-level walk as the
+benchmark baseline and a second oracle for the engine path.
 """
 from __future__ import annotations
 
@@ -26,7 +40,7 @@ import jax.numpy as jnp
 
 from repro.core.hck import HCKFactors
 from repro.core.kernels_fn import BaseKernel
-from repro.core.partition import route
+from repro.core.partition import group_by_leaf, route
 from repro.kernels.registry import (DEFAULT_CONFIG, SolveConfig, get_impl,
                                     resolve_backend)
 
@@ -38,15 +52,20 @@ Array = jax.Array
 class OOSPlan:
     """Query-independent precomputation (phase 1) for a weight matrix w.
 
-    ``c[l]``: (2**l, r, k) — the exchange coefficients per node and RHS.
+    ``c[l]``: (2**l, r, k) — the exchange coefficients per node and RHS
+              (kept for the legacy walk path / parity tests).
     ``w_leaf``: (2**L, n0, k) — w in tree order, per leaf.
+    ``c_tilde``: (2**L, r, k) — pushed-down root-path coefficients with the
+              leaf-parent ``Sigma^{-1}`` folded in; the whole walk term is
+              ``c_tilde[leaf]^T k(Xl_parent, x)``.  ``None`` for L = 0.
     """
 
     c: tuple
     w_leaf: Array
+    c_tilde: Array | None
 
     def tree_flatten(self):
-        return (self.c, self.w_leaf), None
+        return (self.c, self.w_leaf, self.c_tilde), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -68,7 +87,8 @@ def _rep2(x: Array) -> Array:
 @functools.partial(jax.jit, static_argnames=("config",))
 def prepare(f: HCKFactors, w: Array,
             config: SolveConfig | None = None) -> OOSPlan:
-    """Phase 1: COMMON-UPWARD over w (w given in tree order), O(n r).
+    """Phase 1: COMMON-UPWARD over w (w given in tree order) plus the
+    downward root-path pushdown, O(n r) total.
 
     The leaf projection e_L = U^T w is the only O(n r) product in the plan
     and routes through the solve-engine registry ("leaf_project" stage).
@@ -80,7 +100,7 @@ def prepare(f: HCKFactors, w: Array,
     levels, n0, k = f.levels, f.leaf_size, w.shape[1]
     wl = w.reshape(f.num_leaves, n0, k)
     if levels == 0:
-        return OOSPlan((), wl)
+        return OOSPlan((), wl, None)
     backend = resolve_backend(config, "leaf_project", dtype=w.dtype,
                               n0=n0, r=f.rank)
     e_leaf = get_impl("leaf_project", backend)(
@@ -94,14 +114,79 @@ def prepare(f: HCKFactors, w: Array,
         jnp.einsum("qba,qbk->qak", _rep2(f.sigma[lvl - 1]), _pair_swap(e[lvl]))
         for lvl in range(1, levels + 1)
     )
-    return OOSPlan(c, wl)
+
+    # --- downward pushdown of the root path ------------------------------
+    # h_{lvl}[node] = c_{lvl}[node] + W_{lvl-1}[parent] h_{lvl-1}[parent];
+    # at the leaves h equals  c_L + W_{L-1} c_{L-1} + W_{L-1} W_{L-2} c_{L-2}
+    # + ...  so  c~^T d  reproduces the entire walk-up accumulation
+    # sum_l c_l^T (W^T ... W^T d)  by transposing the chain onto the c's.
+    h = c[0]                                             # level 1: (2, r, k)
+    for lvl in range(1, levels):
+        h = c[lvl] + jnp.einsum("pab,pbk->pak", _rep2(f.w[lvl - 1]), _rep2(h))
+    # fold the leaf-parent Sigma^{-1} (d = Sigma^{-1} k(Xl_p, x); Sigma is
+    # SPD so  h^T Sigma^{-1} kx = (Sigma^{-1} h)^T kx)
+    cho = _rep2(f.sigma_cho[levels - 1])                 # (2**L, r, r)
+    c_tilde = jax.vmap(
+        lambda l, b: jax.scipy.linalg.cho_solve((l, True), b))(cho, h)
+    return OOSPlan(c, wl, c_tilde.astype(wl.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "config"))
+def apply_plan(
+    f: HCKFactors, plan: OOSPlan, queries: Array, kernel: BaseKernel,
+    config: SolveConfig | None = None,
+) -> Array:
+    """Phase 2, batched engine: (q, d) -> (q, k) values of w^T k_hck(X, .).
+
+    Route -> sort/segment by leaf -> two fused per-leaf contractions
+    (``oos_local`` + ``oos_walk`` registry stages) -> unsort.
+    """
+    config = config if config is not None else DEFAULT_CONFIG
+    levels, n0, r = f.levels, f.leaf_size, f.rank
+    q = queries.shape[0]
+    k = plan.w_leaf.shape[-1]
+    if levels == 0:
+        kv = kernel.cross(f.x_sorted, queries)           # (n, q)
+        return jnp.einsum("nk,nq->qk", plan.w_leaf[0], kv)
+
+    leaf = route(f.tree, queries)
+    order, _, _ = group_by_leaf(leaf, f.num_leaves)
+    qs = queries[order]                                  # leaf-sorted queries
+    ls = leaf[order]
+
+    # exact local term: one batched per-leaf contraction over the sorted
+    # segments (the gathers below are coalesced: equal indices are adjacent)
+    xl = f.x_sorted.reshape(f.num_leaves, n0, -1)[ls]    # (q, n0, d)
+    wl = plan.w_leaf[ls]                                 # (q, n0, k)
+    backend = resolve_backend(config, "oos_local", dtype=queries.dtype,
+                              n0=n0, r=r, k=k)
+    z = get_impl("oos_local", backend)(
+        xl, wl, qs, name=kernel.name, sigma=kernel.sigma,
+        interpret=config.interpret).astype(plan.w_leaf.dtype)
+
+    # flattened root path: the plan's pushed-down c~ already contains the
+    # whole W-chain and Sigma^{-1}, so the walk is one more contraction
+    # against the leaf parent's landmark kernel values.
+    lm = f.landmarks[levels - 1][ls >> 1]                # (q, r, d)
+    ct = plan.c_tilde[ls]                                # (q, r, k)
+    backend = resolve_backend(config, "oos_walk", dtype=queries.dtype,
+                              n0=r, r=r, k=k)
+    z = z + get_impl("oos_walk", backend)(
+        lm, ct, qs, name=kernel.name, sigma=kernel.sigma,
+        interpret=config.interpret).astype(z.dtype)
+
+    return jnp.zeros((q, k), z.dtype).at[order].set(z)   # unsort
 
 
 @functools.partial(jax.jit, static_argnames=("kernel",))
-def apply_plan(
+def apply_plan_walk(
     f: HCKFactors, plan: OOSPlan, queries: Array, kernel: BaseKernel
 ) -> Array:
-    """Phase 2 for a batch of queries: (q, d) -> (q, k) values of w^T k_hck(X, .)."""
+    """Pre-refactor phase 2 (per-query gathers + per-level walk-up loop).
+
+    Kept as the benchmark baseline (bench_oos.py measures the engine's
+    speedup against it) and as a second oracle for the engine path.
+    """
     levels, n0 = f.levels, f.leaf_size
     q = queries.shape[0]
     leaf = route(f.tree, queries) if levels > 0 else jnp.zeros((q,), jnp.int32)
@@ -138,7 +223,7 @@ def predict(
     """Convenience: prepare + apply.  w in tree order, shape (n,) or (n, k)."""
     squeeze = w.ndim == 1
     plan = prepare(f, w if w.ndim > 1 else w[:, None], config)
-    z = apply_plan(f, plan, queries, kernel)
+    z = apply_plan(f, plan, queries, kernel, config)
     return z[:, 0] if squeeze else z
 
 
@@ -146,8 +231,22 @@ def predict(
 # Reference path: build k_hck(X, x) densely via the kernel definition.
 # ---------------------------------------------------------------------------
 
+def _effective_bases(f: HCKFactors) -> dict:
+    """Query-independent effective bases (same construction as to_dense);
+    hoisted so batched reference evaluation amortizes the O(n r^2) build."""
+    levels = f.levels
+    ubig = {levels: [f.u[i] for i in range(f.num_leaves)]}
+    for l2 in range(levels - 1, 0, -1):
+        ubig[l2] = []
+        for p in range(1 << l2):
+            stacked = jnp.concatenate(
+                [ubig[l2 + 1][2 * p], ubig[l2 + 1][2 * p + 1]], axis=0)
+            ubig[l2].append(stacked @ f.w[l2 - 1][p])
+    return ubig
+
+
 def oos_vector_reference(
-    f: HCKFactors, query: Array, kernel: BaseKernel
+    f: HCKFactors, query: Array, kernel: BaseKernel, *, _ubig: dict | None = None
 ) -> Array:
     """k_hck(X, x) as an explicit n-vector (Eq. 13-16 with x routed to its
     leaf).  Host-loop oracle used by tests."""
@@ -168,13 +267,7 @@ def oos_vector_reference(
     # phi now = K(Xl,Xl)^{-1} k(Xl, x) in the leaf-parent basis
 
     # effective bases (same construction as to_dense)
-    ubig = {levels: [f.u[i] for i in range(f.num_leaves)]}
-    for l2 in range(levels - 1, 0, -1):
-        ubig[l2] = []
-        for p in range(1 << l2):
-            stacked = jnp.concatenate(
-                [ubig[l2 + 1][2 * p], ubig[l2 + 1][2 * p + 1]], axis=0)
-            ubig[l2].append(stacked @ f.w[l2 - 1][p])
+    ubig = _ubig if _ubig is not None else _effective_bases(f)
 
     cur_node, cur_lvl = leaf, levels
     d = phi
@@ -188,3 +281,13 @@ def oos_vector_reference(
         if cur_lvl > 0:
             d = f.w[cur_lvl - 1][cur_node].T @ d
     return out
+
+
+def oos_reference_batch(
+    f: HCKFactors, queries: Array, kernel: BaseKernel
+) -> Array:
+    """Stacked :func:`oos_vector_reference` rows (q, n) with the effective
+    bases built once — the oracle for the prediction benchmark."""
+    ubig = _effective_bases(f) if f.levels > 0 else None
+    return jnp.stack([
+        oos_vector_reference(f, q, kernel, _ubig=ubig) for q in queries])

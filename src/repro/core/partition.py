@@ -154,6 +154,23 @@ def route(tree: PartitionTree, queries: Array) -> Array:
     return node
 
 
+def group_by_leaf(leaf: Array, num_leaves: int) -> tuple[Array, Array, Array]:
+    """Segment a routed query batch by leaf: (q,) int32 -> (order, counts,
+    starts).
+
+    ``order`` is a stable sort permutation putting queries of the same leaf
+    contiguously (so the prediction engine's gathers of leaf blocks and
+    landmark blocks are coalesced and per-leaf work is one batched
+    contraction over a contiguous segment); ``counts[p]`` is the number of
+    queries routed to leaf ``p``; ``starts[p]`` the segment offset of leaf
+    ``p`` in the sorted order (``starts = cumsum(counts) - counts``).
+    """
+    order = jnp.argsort(leaf)          # jnp.argsort is stable
+    counts = jnp.zeros((num_leaves,), jnp.int32).at[leaf].add(1)
+    starts = jnp.cumsum(counts) - counts
+    return order, counts, starts
+
+
 def pad_points(x: Array, y: Array | None, leaf_size: int, levels: int, key: Array):
     """Pad (x, y) so n == leaf_size * 2**levels.
 

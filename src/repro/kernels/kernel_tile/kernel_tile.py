@@ -68,7 +68,12 @@ def _l1_body(x_ref, y_ref, o_ref, *, nd: int, epilogue):
         o_ref[...] = epilogue(o_ref[...])
 
 
-def _epilogue(name: str, sigma: float):
+def kernel_epilogue(name: str, sigma: float):
+    """Distance -> kernel-value nonlinearity applied as a tile epilogue.
+
+    Shared with the fused OOS stages (repro.kernels.oos_stage), which reuse
+    this body so every Pallas kernel evaluates the base kernels identically.
+    """
     if name == "gaussian":
         return lambda d2: jnp.exp(d2 * (-0.5 / (sigma * sigma)))
     if name == "imq":
@@ -76,6 +81,9 @@ def _epilogue(name: str, sigma: float):
     if name == "laplace":
         return lambda d1: jnp.exp(-d1 / sigma)
     raise ValueError(f"unsupported kernel {name!r}")
+
+
+_epilogue = kernel_epilogue
 
 
 @functools.partial(

@@ -1,0 +1,54 @@
+"""Jit'd public wrapper for the fused OOS contraction stages.
+
+These are the "pallas" backend entries of :mod:`repro.kernels.registry`
+for the ``oos_local`` / ``oos_walk`` stages (the registry lazily imports
+this module so XLA-only users never trace a Pallas call).  The query batch
+is padded to a multiple of the query block; following the hck_leaf
+precedent the middle/feature dims stay unpadded (Mosaic masks unaligned
+trailing dims; interpret mode — the CPU container — does not care).
+
+Inputs at or below 32-bit are computed on the f32 MXU path; float64 inputs
+stay float64 (interpret-mode oracle parity).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.oos_stage.oos_stage import _acc_dtype, oos_contract_kernel
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("name", "sigma", "interpret",
+                                             "block_q"))
+def oos_contract(
+    points: Array, weights: Array, queries: Array, *,
+    name: str = "gaussian", sigma: float = 1.0,
+    interpret: bool = True, block_q: int | None = None,
+) -> Array:
+    """Fused ``z_i = W_i^T k(P_i, x_i)`` over a query batch.
+
+    (q, m, d), (q, m, k), (q, d) -> (q, k); q is padded up to the query
+    block picked by :func:`repro.kernels.registry.tile_config` (or the
+    explicit ``block_q`` override) and the pad rows are sliced off.
+    """
+    from repro.kernels.registry import tile_config
+
+    q, m, d = points.shape
+    k = weights.shape[-1]
+    ct = _acc_dtype(points, weights, queries)
+    if block_q is None:
+        block_q = tile_config("oos_local", n0=m, r=0, k=k, d=d,
+                              itemsize=jnp.dtype(ct).itemsize).block_n0
+    bq = max(1, min(block_q, 1024))
+    pad = (-q) % bq
+    widths3 = ((0, pad), (0, 0), (0, 0))
+    pts = jnp.pad(points.astype(ct), widths3)
+    w = jnp.pad(weights.astype(ct), widths3)
+    qs = jnp.pad(queries.astype(ct), ((0, pad), (0, 0)))
+    out = oos_contract_kernel(pts, w, qs, name=name, sigma=sigma, bq=bq,
+                              interpret=interpret)
+    return out[:q]

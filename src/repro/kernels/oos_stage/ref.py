@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused OOS query-batch contraction.
+
+Both ``oos_local`` and ``oos_walk`` (registry stages of Algorithm-3
+prediction) are instances of the same contraction at different middle
+sizes: each query carries its own point set (its leaf block, or its leaf
+parent's landmarks) and weight block, and the stage fuses the cross-kernel
+evaluation with the weight contraction:
+
+    z_i = W_i^T k(P_i, x_i)     P_i (m, d), W_i (m, k), x_i (d,) -> z_i (k,)
+
+The oracle evaluates the base kernel through ``repro.core.kernels_fn`` so
+it agrees bit-for-bit with the unfused reference path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels_fn import get_kernel
+
+Array = jax.Array
+
+
+def oos_contract_ref(
+    points: Array, weights: Array, queries: Array, *,
+    name: str = "gaussian", sigma: float = 1.0,
+) -> Array:
+    """(q, m, d), (q, m, k), (q, d) -> z (q, k) = W_i^T k(P_i, x_i)."""
+    fn = get_kernel(name)
+    kv = jax.vmap(lambda p, x: fn(p, x[None], sigma=sigma)[:, 0])(
+        points, queries)                                   # (q, m)
+    return jnp.einsum("qm,qmk->qk", kv, weights)

@@ -34,10 +34,16 @@ STAGES = (
     "leaf_matvec",     # y_i = A_ii b_i            ; c_i = U_i^T b_i
     "leaf_solve",      # x_i = A_ii^{-1} b_i (+lr) ; c_i = U_i^T b_i
     "leaf_project",    # c_i = U_i^T b_i           (OOS common-upward)
+    "oos_local",       # z_i = w_i^T k(Xleaf_i, x_i)   (Algorithm-3 exact term)
+    "oos_walk",        # z_i = c~_i^T k(Xl_i, x_i)     (flattened root path)
     "pairwise_kernel",  # K(X, Y) tiles            (kernel_tile)
     "attention",        # flash attention          (flash_attention)
     "ssd_intra_chunk",  # SSD intra-chunk scan     (ssd_chunk)
 )
+
+#: prediction-engine stages: per-query point/weight blocks, tiled over the
+#: query batch instead of over leaf rows.
+OOS_STAGES = ("oos_local", "oos_walk")
 
 
 # ---------------------------------------------------------------------------
@@ -95,16 +101,34 @@ class TileConfig:
         return self.vmem_bytes <= _VMEM_BUDGET
 
 
-def tile_config(stage: str, *, n0: int, r: int, k: int,
+def tile_config(stage: str, *, n0: int, r: int, k: int, d: int = 0,
                 itemsize: int = 4, leaf_block: int | None = None) -> TileConfig:
-    """Pick the leaf tile for ``stage`` at shape (n0, r, k).
+    """Pick the leaf tile for ``stage`` at shape (n0, r, k[, d]).
 
-    The leaf working set is A-tile (block_n0 * n0) + U tile (block_n0 * r)
-    + b (n0 * k) + outputs; shrink block_n0 by powers of two until it fits
-    the VMEM budget.  ``leaf_block`` (from SolveConfig) overrides.  The
-    returned block always divides n0 (snapped down to the nearest divisor),
-    so the kernel launch never silently falls back to whole-leaf tiles.
+    Leaf stages: the working set is A-tile (block_n0 * n0) + U tile
+    (block_n0 * r) + b (n0 * k) + outputs; shrink block_n0 by powers of two
+    until it fits the VMEM budget.  ``leaf_block`` (from SolveConfig)
+    overrides.  The returned block always divides n0 (snapped down to the
+    nearest divisor), so the kernel launch never silently falls back to
+    whole-leaf tiles.
+
+    OOS stages (``oos_local`` / ``oos_walk``): ``block_n0`` is the *query*
+    block of the fused contraction — every query carries its own (n0, d)
+    point block and (n0, k) weight block (n0 here is the contraction size:
+    the leaf size for oos_local, the rank for oos_walk).  The query batch
+    is padded to a block multiple by the ops wrapper, so no divisor snap.
     """
+
+    if stage in OOS_STAGES:
+        def usage(bq: int) -> int:
+            per_query = n0 * (d + k + 1) + d + k   # points + weights + kv + io
+            return bq * per_query * itemsize
+
+        bq = leaf_block if leaf_block is not None else 128
+        bq = max(8, bq)
+        while bq > 8 and usage(bq) > _VMEM_BUDGET:
+            bq = max(8, bq // 2)    # floor at f32 sublane granularity
+        return TileConfig(bq, usage(bq))
 
     def usage(bn: int) -> int:
         a_tile = bn * n0                       # A_ii or Linv row-block
@@ -179,6 +203,12 @@ def resolve_backend(config: SolveConfig | None, stage: str, *,
     hierarchy (r > 0), and — for the stages that cannot row-tile
     (leaf_solve chains two n0 x n0 products over the whole leaf) — a
     working set inside the VMEM budget.
+
+    The OOS prediction stages (``oos_local`` / ``oos_walk``) follow the
+    same rules with ``n0`` meaning the per-query contraction size (the
+    leaf size for oos_local, the rank for oos_walk): the fused kernel
+    row-tiles over the query batch, so any contraction size that meets the
+    sublane granularity qualifies.
     """
     config = config or DEFAULT_CONFIG
     if config.backend != "auto":
@@ -272,6 +302,52 @@ def _leaf_project_pallas(u, b, *, interpret: bool = True):
     from repro.kernels.hck_leaf.ops import leaf_project
 
     return leaf_project(u, b, interpret=interpret)
+
+
+@register("oos_local", "xla")
+def _oos_local_xla(points, weights, queries, *, name="gaussian", sigma=1.0,
+                   interpret: bool = True):
+    """(q,n0,d),(q,n0,k),(q,d) -> z (q,k) = w_i^T k(Xleaf_i, x_i)."""
+    del interpret
+    from repro.kernels.oos_stage.ref import oos_contract_ref
+
+    return oos_contract_ref(points, weights, queries, name=name,
+                            sigma=sigma).astype(weights.dtype)
+
+
+@register("oos_walk", "xla")
+def _oos_walk_xla(points, weights, queries, *, name="gaussian", sigma=1.0,
+                  interpret: bool = True):
+    """(q,r,d),(q,r,k),(q,d) -> z (q,k) = c~_i^T k(Xl_i, x_i).
+
+    The weights are the plan's pushed-down root-path coefficients, so this
+    single contraction replaces the per-level walk-up loop of Algorithm 3.
+    """
+    del interpret
+    from repro.kernels.oos_stage.ref import oos_contract_ref
+
+    return oos_contract_ref(points, weights, queries, name=name,
+                            sigma=sigma).astype(weights.dtype)
+
+
+@register("oos_local", "pallas")
+def _oos_local_pallas(points, weights, queries, *, name="gaussian",
+                      sigma=1.0, interpret: bool = True,
+                      block_q: int | None = None):
+    from repro.kernels.oos_stage.ops import oos_contract
+
+    return oos_contract(points, weights, queries, name=name, sigma=sigma,
+                        interpret=interpret, block_q=block_q)
+
+
+@register("oos_walk", "pallas")
+def _oos_walk_pallas(points, weights, queries, *, name="gaussian",
+                     sigma=1.0, interpret: bool = True,
+                     block_q: int | None = None):
+    from repro.kernels.oos_stage.ops import oos_contract
+
+    return oos_contract(points, weights, queries, name=name, sigma=sigma,
+                        interpret=interpret, block_q=block_q)
 
 
 @register("pairwise_kernel", "xla")

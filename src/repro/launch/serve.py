@@ -1,8 +1,18 @@
-"""Serving launcher: prefill a batch of prompts, decode with the
+"""Serving launcher.
+
+``--task lm`` (default): prefill a batch of prompts, decode with the
 arch-appropriate cache (exact KV or the paper's HCK Algorithm-3 state).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
-      --prompt-len 64 --gen 32 --batch 2
+  PYTHONPATH=src python -m repro.launch.serve --task lm --arch granite-3-2b \
+      --reduced --prompt-len 64 --gen 32 --batch 2
+
+``--task krr``: fit an HCK kernel ridge model and serve a stream of query
+micro-batches through the shape-bucketed prediction engine
+(repro.serving.predict_service), reporting queries/sec and latency
+percentiles.
+
+  PYTHONPATH=src python -m repro.launch.serve --task krr --n 16384 \
+      --rank 64 --queries 4096
 """
 from __future__ import annotations
 
@@ -12,23 +22,13 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_arch
-from repro.models.model_zoo import input_specs
-from repro.models.transformer import N_CODEBOOKS, init_params
-from repro.configs.base import ShapeConfig
-from repro.serving.serve_loop import ServeSession
 
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--max-seq", type=int, default=None)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+def run_lm(args):
+    from repro.configs import get_arch
+    from repro.configs.base import ShapeConfig
+    from repro.models.model_zoo import input_specs
+    from repro.models.transformer import N_CODEBOOKS, init_params
+    from repro.serving.serve_loop import ServeSession
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -59,6 +59,73 @@ def main():
           f"decode {args.gen} tok: {t_decode*1e3:.1f} ms "
           f"({t_decode/args.gen*1e3:.2f} ms/tok)")
     print("generated token ids (first row):", out[0, :16].tolist())
+
+
+def run_krr(args):
+    from repro.core import krr
+    from repro.core.kernels_fn import BaseKernel
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (args.n, args.d))
+    y = jnp.sin(x[:, 0]) + 0.25 * jnp.cos(x[:, 1] * 2.0)
+    ker = BaseKernel("gaussian", sigma=2.0)
+
+    t0 = time.perf_counter()
+    model = krr.fit(x, y, kernel=ker, lam=1e-2, rank=args.rank,
+                    key=jax.random.PRNGKey(1))
+    jax.block_until_ready(model.alpha)
+    t_fit = time.perf_counter() - t0
+
+    engine = model.engine
+    t0 = time.perf_counter()
+    engine.warmup()
+    t_warm = time.perf_counter() - t0
+
+    qkey = jax.random.PRNGKey(2)
+    queries = jax.random.normal(qkey, (args.queries, args.d))
+    lat = []
+    t0 = time.perf_counter()
+    for i in range(0, args.queries, args.micro_batch):
+        t1 = time.perf_counter()
+        jax.block_until_ready(engine(queries[i:i + args.micro_batch]))
+        lat.append(time.perf_counter() - t1)
+    total = time.perf_counter() - t0
+    lat.sort()
+    p50 = lat[len(lat) // 2]
+    p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))]
+    print(f"krr n={args.n} rank={args.rank} d={args.d}: "
+          f"fit {t_fit:.2f} s, warmup {t_warm:.2f} s "
+          f"(buckets {sorted(engine.stats['bucket_hits'])})")
+    print(f"served {args.queries} queries in micro-batches of "
+          f"{args.micro_batch}: {args.queries / total:,.0f} queries/s, "
+          f"latency p50 {p50*1e3:.2f} ms  p99 {p99*1e3:.2f} ms")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", choices=["lm", "krr"], default="lm")
+    # lm task
+    ap.add_argument("--arch")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--max-seq", type=int, default=None)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    # krr task
+    ap.add_argument("--n", type=int, default=16384)
+    ap.add_argument("--rank", type=int, default=64)
+    ap.add_argument("--d", type=int, default=8)
+    ap.add_argument("--queries", type=int, default=4096)
+    ap.add_argument("--micro-batch", type=int, default=256)
+    args = ap.parse_args()
+
+    if args.task == "lm":
+        if not args.arch:
+            raise SystemExit("--arch is required for --task lm")
+        run_lm(args)
+    else:
+        run_krr(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,140 @@
+"""Shape-bucketed Algorithm-3 prediction service (DESIGN.md §7).
+
+``repro.core.oos.apply_plan`` is jit-compiled per query-batch shape; a
+serving frontend that forwards raw request batches recompiles on every new
+batch size.  :class:`PredictEngine` kills those recompiles by padding every
+batch up to a power-of-two *shape bucket*, so at most ``log2(max_bucket /
+min_bucket) + 1`` programs are ever compiled per feature dim, and exposes:
+
+  * ``apply(queries)`` / ``__call__`` — synchronous prediction; batches
+    larger than ``max_bucket`` are transparently micro-batched.
+  * ``warmup(d)`` — precompile every bucket ahead of traffic.
+  * ``stats`` — calls, queries served, pad waste, per-bucket hit counts.
+
+The engine is the single prediction frontend: ``HCKRegressor.predict``,
+the GP posterior mean, the KPCA out-of-sample transform and
+``launch/serve.py --task krr`` all route through it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import oos
+from repro.core.hck import HCKFactors
+from repro.core.kernels_fn import BaseKernel
+from repro.kernels.registry import SolveConfig
+
+Array = jax.Array
+
+
+def bucket_size(q: int, min_bucket: int, max_bucket: int) -> int:
+    """Smallest power-of-two bucket >= q (floored at min_bucket, capped at
+    max_bucket; q above the cap is the caller's micro-batching problem)."""
+    if q < 1:
+        raise ValueError(f"bucket_size needs q >= 1, got {q}")
+    b = min_bucket
+    while b < q:
+        b <<= 1
+    return min(b, max_bucket)
+
+
+@dataclasses.dataclass
+class PredictEngine:
+    """Precompiled, bucketed Algorithm-3 inference over one fitted plan."""
+
+    factors: HCKFactors
+    plan: oos.OOSPlan
+    kernel: BaseKernel
+    config: SolveConfig | None = None
+    min_bucket: int = 64
+    max_bucket: int = 4096
+
+    def __post_init__(self):
+        if self.min_bucket < 1 or self.max_bucket < self.min_bucket:
+            raise ValueError(
+                f"bad bucket range [{self.min_bucket}, {self.max_bucket}]")
+        self._bucket_hits: dict[int, int] = {}
+        self._calls = 0
+        self._queries = 0
+        self._padded = 0
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def from_weights(
+        cls, factors: HCKFactors, w: Array, kernel: BaseKernel, *,
+        config: SolveConfig | None = None, **kwargs,
+    ) -> "PredictEngine":
+        """Build the phase-1 plan for ``w`` (tree order) and wrap it."""
+        plan = oos.prepare(factors, w if w.ndim > 1 else w[:, None], config)
+        return cls(factors, plan, kernel, config=config, **kwargs)
+
+    @classmethod
+    def attach(cls, model, *, weights: Array | None = None,
+               **kwargs) -> "PredictEngine":
+        """Build-or-return the engine cached on ``model._engine`` — the one
+        lazy ``.engine`` implementation shared by HCKRegressor,
+        HCKGaussianProcess and KPCAModel (factors/kernel/solve_config are
+        read off the model; pass ``weights`` to go through from_weights
+        instead of the model's existing plan)."""
+        if model._engine is None:
+            if weights is None:
+                model._engine = cls(model.factors, model.plan, model.kernel,
+                                    config=model.solve_config, **kwargs)
+            else:
+                model._engine = cls.from_weights(
+                    model.factors, weights, model.kernel,
+                    config=model.solve_config, **kwargs)
+        return model._engine
+
+    # -- serving ----------------------------------------------------------
+    def apply(self, queries: Array) -> Array:
+        """(q, d) -> (q, k).  Pads to the shape bucket (edge-replicated
+        rows route like real queries and are sliced off), micro-batching
+        anything beyond ``max_bucket``; empty batches short-circuit to an
+        empty result (a serving frontend may forward them)."""
+        q = queries.shape[0]
+        if q == 0:
+            k = self.plan.w_leaf.shape[-1]
+            return jnp.zeros((0, k), self.plan.w_leaf.dtype)
+        if q > self.max_bucket:
+            return jnp.concatenate(
+                [self.apply(queries[i:i + self.max_bucket])
+                 for i in range(0, q, self.max_bucket)], axis=0)
+        b = bucket_size(q, self.min_bucket, self.max_bucket)
+        padded = jnp.pad(queries, ((0, b - q), (0, 0)), mode="edge")
+        z = oos.apply_plan(self.factors, self.plan, padded, self.kernel,
+                           self.config)
+        self._calls += 1
+        self._queries += q
+        self._padded += b - q
+        self._bucket_hits[b] = self._bucket_hits.get(b, 0) + 1
+        return z[:q]
+
+    __call__ = apply
+
+    def warmup(self) -> list[int]:
+        """Compile every bucket up front (queries must match the training
+        feature dim, so there is nothing else to warm); returns the bucket
+        sizes touched."""
+        d = self.factors.x_sorted.shape[1]
+        buckets, b = [], self.min_bucket
+        while b <= self.max_bucket:
+            buckets.append(b)
+            b <<= 1
+        dummy = jnp.zeros((1, d), self.factors.x_sorted.dtype)
+        for b in buckets:
+            jax.block_until_ready(self.apply(jnp.broadcast_to(dummy, (b, d))))
+        return buckets
+
+    @property
+    def stats(self) -> dict:
+        """Serving counters (calls, queries, pad waste, bucket hits)."""
+        return {
+            "calls": self._calls,
+            "queries": self._queries,
+            "padded_queries": self._padded,
+            "bucket_hits": dict(sorted(self._bucket_hits.items())),
+        }

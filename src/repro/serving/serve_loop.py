@@ -25,6 +25,10 @@ class ServeSession:
     max_seq: int
     caches: dict | None = None
     pos: int = 0
+    # compiled decode step, built once per session: make_decode_step returns
+    # a fresh closure every call, so re-wrapping it in jax.jit on each
+    # decode() retraced the whole model per generation request
+    _decode_fn: object = dataclasses.field(default=None, repr=False)
 
     def prefill(self, batch: dict) -> Array:
         """Run the prompt; initialize caches; return last-token logits."""
@@ -89,7 +93,9 @@ class ServeSession:
     def decode(self, tokens: Array, *, steps: int, temperature: float = 0.0,
                key: Array | None = None) -> Array:
         """Generate ``steps`` tokens starting from ``tokens`` (B, 1[, K])."""
-        decode_fn = jax.jit(make_decode_step(self.cfg))
+        if self._decode_fn is None:
+            self._decode_fn = jax.jit(make_decode_step(self.cfg))
+        decode_fn = self._decode_fn
         key = key if key is not None else jax.random.PRNGKey(0)
         out = [tokens]
         cur = tokens

@@ -5,7 +5,8 @@ import numpy as np
 from _hypothesis_compat import given, settings, st
 
 from repro.core.kernels_fn import BaseKernel
-from repro.core.partition import auto_levels, build_partition, pad_points, route
+from repro.core.partition import (PartitionTree, auto_levels, build_partition,
+                                  pad_points, route)
 
 SETTINGS = dict(max_examples=8, deadline=None)
 
@@ -41,6 +42,66 @@ def test_route_maps_training_points_to_their_leaf(seed, levels):
     # allow median-tie mismatches but require overwhelming agreement
     agree = float(np.mean(np.asarray(leaves) == expected))
     assert agree > 0.95
+
+
+@given(seed=st.integers(0, 2**31 - 1), levels=st.integers(1, 3))
+@settings(**SETTINGS)
+def test_route_training_points_exact_off_threshold(seed, levels):
+    """Training points whose projections are strictly off every ancestor
+    threshold route EXACTLY to the leaf that contains them (the 0.95 bound
+    of the agreement test above is only about median ties)."""
+    n, d = 32 * (1 << levels), 4
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    xs, tree = build_partition(x, levels, jax.random.PRNGKey(seed + 1))
+    leaf_size = n // (1 << levels)
+    expected = np.repeat(np.arange(1 << levels), leaf_size)
+    # walk each point's recorded path; flag points near any threshold
+    node = np.zeros((n,), np.int64)
+    clear = np.ones((n,), bool)
+    for lvl in range(levels):
+        dirs = np.asarray(tree.directions[lvl])[node]
+        thr = np.asarray(tree.thresholds[lvl])[node]
+        t = np.einsum("qd,qd->q", np.asarray(xs), dirs)
+        clear &= np.abs(t - thr) > 1e-5
+        node = 2 * node + (t > thr)
+    leaves = np.asarray(route(tree, xs))
+    assert clear.any()
+    np.testing.assert_array_equal(leaves[clear], expected[clear])
+
+
+def test_route_on_threshold_breaks_left():
+    """A query exactly on a split hyperplane goes LEFT (t > thr is false) —
+    the deterministic tie rule callers can rely on."""
+    dirs = (jnp.array([[1.0, 0.0]]),
+            jnp.array([[0.0, 1.0], [0.0, 1.0]]))
+    thrs = (jnp.array([0.5]), jnp.array([-1.0, 2.0]))
+    tree = PartitionTree(jnp.arange(4, dtype=jnp.int32), dirs, thrs)
+    q = jnp.array([
+        [0.5, 99.0],     # on the root threshold -> left; above thr[1,0] -> 01
+        [0.5, -1.0],     # on BOTH thresholds -> leaf 00
+        [0.50001, 2.0],  # just right of root, on node-1 threshold -> 10
+        [0.49999, -2.0], # strictly left, strictly below -> 00
+    ])
+    np.testing.assert_array_equal(np.asarray(route(tree, q)), [1, 0, 2, 0])
+
+
+def test_route_far_outside_training_hull():
+    """Queries far outside the hull still land in a valid leaf, on the side
+    their projection dictates (no NaN/overflow surprises at 1e6 scale)."""
+    n, levels, d = 128, 3, 4
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    _, tree = build_partition(x, levels, jax.random.PRNGKey(1))
+    root_dir = tree.directions[0][0]
+    far = jnp.stack([1e6 * root_dir, -1e6 * root_dir,
+                     jnp.full((d,), 1e6), jnp.full((d,), -1e6)])
+    leaves = np.asarray(route(tree, far))
+    assert ((0 <= leaves) & (leaves < 1 << levels)).all()
+    # +1e6 along the root direction projects far above the root median
+    # (its threshold is an order-statistic of unit-normal projections)
+    assert leaves[0] >= (1 << levels) // 2
+    assert leaves[1] < (1 << levels) // 2
+    # routing is a pure function of the recorded hyperplanes
+    np.testing.assert_array_equal(leaves, np.asarray(route(tree, far)))
 
 
 @given(seed=st.integers(0, 2**31 - 1),

@@ -112,3 +112,26 @@ def test_serve_session_end_to_end(arch):
         nxt = nxt[..., None].repeat(tf.N_CODEBOOKS, -1)
     out = sess.decode(nxt, steps=3)
     assert out.shape[1] == 4
+
+
+def test_serve_session_caches_compiled_decode_step():
+    """decode() must build the jitted step once per session — re-wrapping
+    make_decode_step in jax.jit on every call retraced the whole model per
+    generation request."""
+    from repro.models.model_zoo import input_specs
+    from repro.configs.base import ShapeConfig
+    from repro.serving.serve_loop import ServeSession
+
+    cfg = get_arch("granite-3-2b").reduced()
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    shape = ShapeConfig("serve", 16, 1, "prefill")
+    batch = input_specs(cfg, shape, abstract=False, key=jax.random.PRNGKey(1))
+    sess = ServeSession(cfg, params, max_seq=32)
+    last = sess.prefill(batch)
+    nxt = jnp.argmax(last, axis=-1)[:, None]
+    assert sess._decode_fn is None
+    sess.decode(nxt, steps=1)
+    fn = sess._decode_fn
+    assert fn is not None
+    sess.decode(nxt, steps=1)
+    assert sess._decode_fn is fn
