@@ -1,0 +1,274 @@
+"""Build-engine benchmark: Algorithm-2 construction throughput
+(points/sec, per-level stage breakdown), peak memory, speedup over the
+per-node reference path, and a float64 factor-parity gate, emitted as
+machine-readable BENCH_build.json.
+
+The perf trajectory of the fit hot path is tracked from this file onward:
+CI runs ``--smoke`` on a tiny float64 problem, gates every engine backend's
+factors against ``build_hck_reference`` (the per-node transcription of the
+paper's Algorithm 2) at 1e-6 max abs difference (nonzero exit on miss),
+checks the streaming ingestion path the same way, and uploads the JSON as
+an artifact; full runs chart the batched engine against the per-node
+reference at production shapes (default n=65536, r=256: ~7x on CPU/xla).
+
+Usage:
+  python benchmarks/bench_build.py                      # default sweep
+  python benchmarks/bench_build.py --smoke              # CI gate (tiny, f64)
+  python benchmarks/bench_build.py --n 16384 --rank 64 --backends xla,pallas
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import resource
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hck import (_sample_landmarks, _stage_build_gram,
+                            _stage_build_cross, build_hck,
+                            build_hck_reference, build_hck_streaming,
+                            sigma_linv)
+from repro.core.kernels_fn import BaseKernel
+from repro.core.partition import auto_levels_ceil, build_partition
+from repro.kernels.registry import DEFAULT_CONFIG, SolveConfig
+
+
+def _timeit(fn, *args, repeats: int = 3):
+    out = fn(*args)
+    jax.block_until_ready(out)          # compile outside the timed region
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def _max_factor_diff(fa, fb) -> float:
+    """Max abs difference across every stacked factor of two HCKFactors."""
+    diffs = [jnp.max(jnp.abs(fa.u - fb.u)),
+             jnp.max(jnp.abs(fa.adiag - fb.adiag))]
+    for a, b in zip(fa.sigma, fb.sigma):
+        diffs.append(jnp.max(jnp.abs(a - b)))
+    for a, b in zip(fa.sigma_cho, fb.sigma_cho):
+        diffs.append(jnp.max(jnp.abs(a - b)))
+    for a, b in zip(fa.w, fb.w):
+        diffs.append(jnp.max(jnp.abs(a - b)))
+    return float(jnp.max(jnp.stack(diffs)))
+
+
+def per_level_breakdown(x, levels: int, rank: int, key, kernel,
+                        config: SolveConfig, repeats: int) -> list[dict]:
+    """Time each level's stage launches separately (points/sec per level).
+
+    Mirrors the engine's level loop outside one big jit so every stage can
+    be fenced with block_until_ready: per level the Sigma+Cholesky
+    build_gram launch (and the W build_cross launch for levels >= 1), for
+    the leaf level the Adiag build_gram + U build_cross pair.  "points" is
+    the number of node-block rows the level touches.
+    """
+    n, d = x.shape
+    kpart, key = jax.random.split(key)
+    x_sorted, _ = build_partition(x, levels, kpart)
+    landmarks = []
+    for lvl in range(levels):
+        key, sub = jax.random.split(key)
+        blocks = x_sorted.reshape(1 << lvl, n // (1 << lvl), d)
+        landmarks.append(_sample_landmarks(sub, blocks, rank))
+
+    rows = []
+    inv_by_level = []
+    for lvl in range(levels):
+        t_gram, (_, cho) = _timeit(
+            lambda lm=landmarks[lvl]: _stage_build_gram(lm, kernel, config),
+            repeats=repeats)
+        t_inv, inv = _timeit(lambda c=cho: sigma_linv(c), repeats=repeats)
+        inv_by_level.append(inv)
+        entry = {"level": lvl, "nodes": 1 << lvl,
+                 "points": (1 << lvl) * rank, "gram_s": t_gram,
+                 "inv_s": t_inv}
+        if lvl >= 1:
+            lm_p = jnp.repeat(landmarks[lvl - 1], 2, axis=0)
+            inv_p = jnp.repeat(inv_by_level[lvl - 1], 2, axis=0)
+            t_w, _ = _timeit(
+                lambda a=landmarks[lvl], b=lm_p, c=inv_p:
+                _stage_build_cross(a, b, c, kernel, config),
+                repeats=repeats)
+            entry["cross_s"] = t_w
+        total = entry["gram_s"] + entry["inv_s"] + entry.get("cross_s", 0.0)
+        entry["points_per_s"] = entry["points"] / total
+        rows.append(entry)
+
+    n_leaves = 1 << levels
+    leaves = x_sorted.reshape(n_leaves, n // n_leaves, d)
+    t_adiag, _ = _timeit(
+        lambda: _stage_build_gram(leaves, kernel, config, want_chol=False),
+        repeats=repeats)
+    lm_p = jnp.repeat(landmarks[-1], 2, axis=0)
+    inv_p = jnp.repeat(inv_by_level[-1], 2, axis=0)
+    t_u, _ = _timeit(
+        lambda: _stage_build_cross(leaves, lm_p, inv_p, kernel, config),
+        repeats=repeats)
+    rows.append({"level": levels, "nodes": n_leaves, "points": n,
+                 "gram_s": t_adiag, "cross_s": t_u,
+                 "points_per_s": n / (t_adiag + t_u)})
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=65536)
+    ap.add_argument("--rank", type=int, default=256)
+    ap.add_argument("--d", type=int, default=8, help="input dimension")
+    ap.add_argument("--levels", type=int, default=None,
+                    help="tree depth (default: paper Eq. 22 sizing)")
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "float64"])
+    ap.add_argument("--backends", default="xla")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--leaf-batch", type=int, default=64,
+                    help="leaves per launch for the streaming check")
+    ap.add_argument("--no-reference", action="store_true",
+                    help="skip the per-node reference baseline timing "
+                         "(the parity gate still runs at the gate size)")
+    ap.add_argument("--gate-n", type=int, default=1024,
+                    help="problem size for the float64 parity gate when "
+                         "the main run is too big to rebuild in f64")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny float64 problem + factor-parity gate")
+    ap.add_argument("--tol", type=float, default=1e-6,
+                    help="max abs factor difference vs build_hck_reference")
+    ap.add_argument("--out", default="BENCH_build.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.n, args.rank, args.d = 512, 16, 4
+        args.dtype = "float64"
+        args.backends = "xla,pallas"
+        args.leaf_batch = 5          # force uneven leaf groups
+        args.gate_n = args.n
+
+    jax.config.update("jax_enable_x64", True)   # parity gate runs in f64
+    dtype = jnp.dtype(args.dtype)
+    kernel = BaseKernel("gaussian", sigma=2.0, jitter=1e-8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (args.n, args.d),
+                          dtype=dtype)
+    levels = (args.levels if args.levels is not None
+              else auto_levels_ceil(args.n, args.rank))
+    key = jax.random.PRNGKey(1)
+
+    report = {
+        "problem": {"n": args.n, "levels": levels, "rank": args.rank,
+                    "d": args.d, "dtype": args.dtype, "smoke": args.smoke},
+        "device": str(jax.devices()[0]),
+        "results": [],
+        "checks": {},
+    }
+
+    # per-node reference baseline (the pre-engine Algorithm-2 host loop);
+    # same median-of-repeats protocol as the engine timings
+    t_ref = None
+    if not args.no_reference:
+        t_ref, _ = _timeit(
+            lambda: build_hck_reference(x, levels=levels, rank=args.rank,
+                                        key=key, kernel=kernel),
+            repeats=args.repeats)
+        report["reference"] = {"build_s": t_ref,
+                               "points_per_s": args.n / t_ref}
+        print(f"[   ref] build {t_ref:8.2f} s ({args.n / t_ref:10,.0f} pts/s)"
+              f"   <- per-node Algorithm-2 baseline")
+
+    for backend in args.backends.split(","):
+        backend = backend.strip()
+        cfg = SolveConfig(backend=backend)
+        t_build, _ = _timeit(
+            lambda: build_hck(x, levels=levels, rank=args.rank, key=key,
+                              kernel=kernel, config=cfg),
+            repeats=args.repeats)
+        entry = {"backend": backend, "build_s": t_build,
+                 "points_per_s": args.n / t_build,
+                 "levels": per_level_breakdown(
+                     x, levels, args.rank, key, kernel, cfg, args.repeats)}
+        if t_ref is not None:
+            entry["speedup_vs_reference"] = t_ref / t_build
+        report["results"].append(entry)
+        extra = (f"  {entry['speedup_vs_reference']:5.1f}x vs ref"
+                 if t_ref is not None else "")
+        print(f"[{backend:>6}] build {t_build:8.2f} s "
+              f"({args.n / t_build:10,.0f} pts/s){extra}")
+
+    # peak memory: host RSS high-water mark + factor footprint estimate
+    n0 = args.n >> levels
+    factor_bytes = (args.n * (n0 + args.rank + args.d)
+                    + sum((1 << lvl) * args.rank
+                          * (2 * args.rank + args.d + 1)
+                          for lvl in range(levels))) * dtype.itemsize
+    mem = {"peak_rss_mb": resource.getrusage(
+        resource.RUSAGE_SELF).ru_maxrss / 1024.0,
+        "factor_bytes_mb": factor_bytes / 2**20}
+    stats = jax.devices()[0].memory_stats() or {}
+    if "peak_bytes_in_use" in stats:
+        mem["device_peak_mb"] = stats["peak_bytes_in_use"] / 2**20
+    report["memory"] = mem
+    print(f"[   mem] host peak RSS {mem['peak_rss_mb']:,.0f} MB, "
+          f"factors ≈ {mem['factor_bytes_mb']:,.0f} MB")
+
+    # --- float64 factor-parity gate vs the per-node reference ------------
+    ok = True
+    gn = min(args.gate_n, args.n)
+    g_levels = min(levels, auto_levels_ceil(gn, args.rank))
+    x64 = jax.random.normal(jax.random.PRNGKey(0), (gn, args.d),
+                            dtype=jnp.float64)
+    f_ref = build_hck_reference(x64, levels=g_levels, rank=args.rank,
+                                key=key, kernel=kernel)
+    for backend in args.backends.split(","):
+        backend = backend.strip()
+        f_eng = build_hck(x64, levels=g_levels, rank=args.rank, key=key,
+                          kernel=kernel, config=SolveConfig(backend=backend))
+        err = _max_factor_diff(f_eng, f_ref)
+        passed = err <= args.tol
+        ok = ok and passed
+        report["checks"][backend] = {
+            "gate_n": gn, "levels": g_levels,
+            "max_factor_diff_vs_reference": err,
+            "tol": args.tol, "pass": passed,
+        }
+        print(f"[{backend:>6}] parity ({gn} pts, f64): max factor diff "
+              f"{err:.2e}  {'PASS' if passed else 'FAIL'}")
+
+    # streaming ingestion must reproduce the in-memory engine
+    if g_levels >= 1:
+        import numpy as np
+
+        from repro.data.pipeline import ArraySource
+
+        f_mem = build_hck(x64, levels=g_levels, rank=args.rank, key=key,
+                          kernel=kernel, config=DEFAULT_CONFIG)
+        f_str = build_hck_streaming(
+            ArraySource(np.asarray(x64)), levels=g_levels, rank=args.rank,
+            key=key, kernel=kernel, leaf_batch=args.leaf_batch)
+        err = _max_factor_diff(f_mem, f_str)
+        passed = err <= args.tol
+        ok = ok and passed
+        report["checks"]["streaming"] = {
+            "gate_n": gn, "leaf_batch": args.leaf_batch,
+            "max_factor_diff_vs_in_memory": err,
+            "tol": args.tol, "pass": passed,
+        }
+        print(f"[stream] ingestion ({gn} pts, f64): max factor diff "
+              f"{err:.2e}  {'PASS' if passed else 'FAIL'}")
+
+    report["pass"] = ok
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

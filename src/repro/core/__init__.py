@@ -1,9 +1,11 @@
-# The paper's primary contribution: the Hierarchically Compositional Kernel
-# (HCK) and its O(nr)/O(nr^2) matrix algebra, in level-batched JAX.
+"""The paper's primary contribution: the Hierarchically Compositional Kernel
+(HCK) and its O(nr)/O(nr^2) matrix algebra, in level-batched JAX."""
 from repro.core.kernels_fn import BaseKernel, available_kernels, get_kernel
 from repro.core.partition import (PartitionTree, auto_levels, build_partition,
-                                  pad_points, route)
-from repro.core.hck import HCKFactors, build_hck, to_dense
+                                  build_partition_sequential, pad_points,
+                                  route)
+from repro.core.hck import (HCKFactors, build_hck, build_hck_reference,
+                            build_hck_streaming, to_dense)
 from repro.core.hmatrix import (InverseFactors, apply_inverse, invert, logdet,
                                 matvec, solve)
 from repro.core.oos import OOSPlan, apply_plan, predict, prepare
@@ -12,8 +14,10 @@ from repro.kernels.registry import DEFAULT_CONFIG, SolveConfig
 
 __all__ = [
     "BaseKernel", "available_kernels", "get_kernel",
-    "PartitionTree", "auto_levels", "build_partition", "pad_points", "route",
-    "HCKFactors", "build_hck", "to_dense",
+    "PartitionTree", "auto_levels", "build_partition",
+    "build_partition_sequential", "pad_points", "route",
+    "HCKFactors", "build_hck", "build_hck_reference", "build_hck_streaming",
+    "to_dense",
     "InverseFactors", "apply_inverse", "invert", "logdet", "matvec", "solve",
     "OOSPlan", "apply_plan", "predict", "prepare",
     "baselines", "gp", "kpca", "krr", "sampling",

@@ -27,11 +27,14 @@ Array = jax.Array
 
 @dataclasses.dataclass
 class NystromModel:
+    """Fitted Nystrom regressor (Eq. 6): explicit landmark feature map."""
+
     kernel: BaseKernel
     landmarks: Array           # (r, d)
     beta: Array                # (r, k): predict = k(x, Xl) @ beta
 
     def predict(self, queries: Array) -> Array:
+        """(q, d) -> (q, k) predictions via the landmark cross kernel."""
         return self.kernel.cross(queries, self.landmarks) @ self.beta
 
 
@@ -67,15 +70,19 @@ def fit_nystrom(
 
 @dataclasses.dataclass
 class RFFModel:
+    """Fitted random-Fourier-features regressor (Eq. 7)."""
+
     omega: Array               # (d, r)
     bias: Array                # (r,)
     beta: Array                # (r, k)
 
     def features(self, x: Array) -> Array:
+        """(n, d) -> (n, r) cosine feature map sqrt(2/r) cos(x w + b)."""
         r = self.omega.shape[1]
         return jnp.sqrt(2.0 / r) * jnp.cos(x @ self.omega + self.bias)
 
     def predict(self, queries: Array) -> Array:
+        """(q, d) -> (q, k) predictions in feature space."""
         return self.features(queries) @ self.beta
 
 
@@ -93,6 +100,7 @@ def _sample_spectral(key: Array, name: str, sigma: float, d: int, r: int) -> Arr
 def fit_rff(
     x: Array, y: Array, *, kernel: BaseKernel, lam: float, rank: int, key: Array
 ) -> RFFModel:
+    """Ridge regression on r random Fourier features (paper's RF baseline)."""
     k1, k2 = jax.random.split(key)
     omega = _sample_spectral(k1, kernel.name, kernel.sigma, x.shape[1], rank)
     bias = jax.random.uniform(k2, (rank,), minval=0.0, maxval=2.0 * jnp.pi)
@@ -110,12 +118,15 @@ def fit_rff(
 
 @dataclasses.dataclass
 class IndependentModel:
+    """Block-diagonal ('independent') kernel baseline: one KRR per leaf."""
+
     kernel: BaseKernel
     tree: PartitionTree
     x_sorted: Array            # (n, d)
     alpha: Array               # (2**L, n0, k) per-block dual coefficients
 
     def predict(self, queries: Array) -> Array:
+        """Route each query to its leaf and apply that block's KRR."""
         leaf = route(self.tree, queries)
         n0 = self.alpha.shape[1]
         xl = self.x_sorted.reshape(-1, n0, self.x_sorted.shape[-1])[leaf]
@@ -147,6 +158,7 @@ def fit_independent(
 def fit_exact(
     x: Array, y: Array, *, kernel: BaseKernel, lam: float
 ) -> Callable[[Array], Array]:
+    """Dense-kernel KRR (O(n^3) oracle); returns a predict closure."""
     kxx = kernel.gram(x) + lam * jnp.eye(x.shape[0], dtype=x.dtype)
     yk = y if y.ndim > 1 else y[:, None]
     alpha = jnp.linalg.solve(kxx, yk)

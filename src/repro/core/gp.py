@@ -28,6 +28,14 @@ Array = jax.Array
 
 @dataclasses.dataclass
 class HCKGaussianProcess:
+    """Fitted HCK GP: structured inverse, dual coefficients, OOS plan.
+
+    ``alpha`` and ``plan`` are in tree order; ``posterior_mean`` serves
+    (q, d) query batches through the shape-bucketed prediction engine and
+    ``posterior_var``/``log_marginal_likelihood`` reuse the structured
+    inverse (``solve_config`` selects backends for all of them).
+    """
+
     kernel: BaseKernel
     factors: HCKFactors
     inv: hmatrix.InverseFactors
@@ -47,6 +55,7 @@ class HCKGaussianProcess:
         return PredictEngine.attach(self)
 
     def posterior_mean(self, queries: Array) -> Array:
+        """Eq. 3 posterior mean: (q, d) -> (q,)."""
         return self.engine(queries)[:, 0]
 
     def posterior_var(self, queries: Array) -> Array:
@@ -62,6 +71,7 @@ class HCKGaussianProcess:
         return kxx - jnp.sum(vs * kinv_vs, axis=0)
 
     def log_marginal_likelihood(self, y_sorted: Array) -> Array:
+        """Eq. 25 via the Algorithm-2 logdet byproduct (y in tree order)."""
         n = y_sorted.shape[0]
         quad = jnp.sum(y_sorted * self.alpha[:, 0])
         return -0.5 * quad - 0.5 * self.inv.logabsdet - 0.5 * n * jnp.log(2 * jnp.pi)
@@ -72,7 +82,16 @@ def fit_gp(
     rank: int, levels: int, key: Array,
     solve_config: SolveConfig | None = None,
 ) -> HCKGaussianProcess:
-    factors = build_hck(x, levels=levels, rank=rank, key=key, kernel=kernel)
+    """Fit the HCK GP: structured inverse of (K_hck + noise I) plus the
+    Algorithm-3 plan for the posterior mean.
+
+    ``x`` (n, d) with n divisible by ``2**levels``, ``y`` (n,);
+    ``solve_config`` selects the stage backends of the build engine, the
+    structured inversion and the prediction plan (backend / interpret /
+    refine_steps / leaf_block are honored).
+    """
+    factors = build_hck(x, levels=levels, rank=rank, key=key, kernel=kernel,
+                        config=solve_config)
     y_sorted = y[factors.tree.perm][:, None]
     inv = hmatrix.invert(factors, ridge=noise)
     alpha = hmatrix.apply_inverse(inv, y_sorted, solve_config)
@@ -96,7 +115,8 @@ def mle_objective(
         kernel = BaseKernel("gaussian", sigma=1.0)  # sigma applied via scaling
         # fold sigma into the data (x/sigma) so the BaseKernel stays static
         xs = x * jnp.exp(-log_sigma)
-        factors = build_hck(xs, levels=levels, rank=rank, key=key, kernel=kernel)
+        factors = build_hck(xs, levels=levels, rank=rank, key=key,
+                            kernel=kernel, config=solve_config)
         y_sorted = y[factors.tree.perm][:, None]
         inv = hmatrix.invert(factors, ridge=jnp.exp(log_noise))
         alpha = hmatrix.apply_inverse(inv, y_sorted, solve_config)

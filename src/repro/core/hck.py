@@ -9,7 +9,22 @@ Builds the recursively off-diagonal low-rank (ROLR) representation of
   * ``W[l][i] = K(Xl_i, Xl_p) K(Xl_p, Xl_p)^-1``         transfer ops (r, r)
 
 All factors are stacked per tree level so every traversal in
-``repro.core.hmatrix`` is a batched einsum (see DESIGN.md §2).
+``repro.core.hmatrix`` is a batched einsum (see DESIGN.md §2), and —
+since the build-engine refactor — every factor *instantiation* is one of
+two backend-registry stages batched over all nodes of a level
+(DESIGN.md §8):
+
+  * ``build_gram``:  node blocks -> Gram (+ jitter) and its Cholesky
+  * ``build_cross``: node blocks + parent landmarks/``Sigma^{-1}`` ->
+                     the projected cross block (U and W factors)
+
+:func:`build_hck` is the batched engine (xla einsum or fused Pallas
+backends, selected by ``SolveConfig``); :func:`build_hck_reference` keeps
+the per-node host-loop transcription of the paper's Algorithm 2 as the
+float64 parity oracle and the ``bench_build.py`` baseline;
+:func:`build_hck_streaming` stages leaf blocks from a host-resident
+:class:`repro.data.pipeline.ChunkSource` through the same engine for fits
+whose raw data does not fit device memory.
 
 Landmarks ``Xl_i`` are uniform random subsamples of each node's points
 (paper §4.2).  Setting ``shared_landmarks=True`` reuses the root landmark
@@ -28,6 +43,8 @@ import numpy as np
 
 from repro.core.kernels_fn import BaseKernel
 from repro.core.partition import PartitionTree, build_partition
+from repro.kernels.registry import (DEFAULT_CONFIG, SolveConfig, get_impl,
+                                    resolve_backend, tile_config)
 
 Array = jax.Array
 
@@ -49,25 +66,31 @@ class HCKFactors:
     # -- static metadata -------------------------------------------------
     @property
     def levels(self) -> int:
+        """Tree depth L."""
         return len(self.landmarks)
 
     @property
     def num_leaves(self) -> int:
+        """Leaf count 2**L."""
         return self.adiag.shape[0]
 
     @property
     def leaf_size(self) -> int:
+        """Points per leaf n0 = n / 2**L."""
         return self.adiag.shape[1]
 
     @property
     def rank(self) -> int:
+        """Landmarks per node r (0 for a 0-level build)."""
         return self.landmarks[0].shape[1] if self.landmarks else 0
 
     @property
     def n(self) -> int:
+        """Total training points."""
         return self.x_sorted.shape[0]
 
     def tree_flatten(self):
+        """Pytree protocol: all fields are children."""
         leaves = (
             self.x_sorted, self.tree, self.landmarks, self.sigma,
             self.sigma_cho, self.w, self.u, self.adiag,
@@ -76,32 +99,142 @@ class HCKFactors:
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Pytree protocol: rebuild from flattened children."""
         return cls(*children)
+
+
+def landmark_indices(key: Array, bsz: int, m: int, r: int) -> Array:
+    """Per-node landmark row indices: (B, r) int32 positions inside each
+    node block.
+
+    One subkey per node (``jax.random.split``), one uniform permutation per
+    node — the counter-based PRNG makes this reproducible from any path
+    (batched engine, per-node reference, streaming ingestion), which is
+    what the factor-parity gates rely on.
+    """
+    keys = jax.random.split(key, bsz)
+    return jax.vmap(lambda k: jax.random.permutation(k, m)[:r])(keys)
 
 
 def _sample_landmarks(key: Array, blocks: Array, r: int) -> Array:
     """Uniform sample of r points per block: (B, m, d) -> (B, r, d)."""
     bsz, m, d = blocks.shape
-    keys = jax.random.split(key, bsz)
-    idx = jax.vmap(lambda k: jax.random.permutation(k, m)[:r])(keys)  # (B, r)
+    idx = landmark_indices(key, bsz, m, r)                            # (B, r)
     flat = (idx + jnp.arange(bsz)[:, None] * m).reshape(-1)
     return jnp.take(blocks.reshape(bsz * m, d), flat, axis=0).reshape(bsz, r, d)
 
 
-def _chol(mat: Array) -> Array:
-    """Batched lower Cholesky (stacked over axis 0)."""
-    return jnp.linalg.cholesky(mat)
+def _stage_build_gram(blocks: Array, kernel: BaseKernel,
+                      config: SolveConfig, *, want_chol: bool = True):
+    """Dispatch one level's node blocks through the ``build_gram`` stage."""
+    _, m, d = blocks.shape
+    backend = resolve_backend(config, "build_gram", dtype=blocks.dtype,
+                              n0=m, r=m, d=d)
+    gram, chol = get_impl("build_gram", backend)(
+        blocks, name=kernel.name, sigma=kernel.sigma, jitter=kernel.jitter,
+        want_chol=want_chol, interpret=config.interpret)
+    gram = gram.astype(blocks.dtype)
+    return gram, None if chol is None else chol.astype(blocks.dtype)
 
 
-def _cho_solve(lower: Array, rhs: Array) -> Array:
-    """Batched SPD solve with precomputed lower factors: (B,r,r),(B,r,k)."""
-    solve = jax.scipy.linalg.cho_solve
-    return jax.vmap(lambda l, b: solve((l, True), b))(lower, rhs)
+def sigma_linv(chol: Array) -> Array:
+    """Explicit inverse Cholesky factors ``Linv = L^{-1}`` per node.
+
+    (B, r, r) lower factors -> (B, r, r) lower ``Linv``, computed ONCE per
+    node so every ``build_cross`` launch applies ``Sigma^{-1} = Linv^T
+    Linv`` as two pure GEMMs — on CPU/XLA the per-child batched triangular
+    solve this replaces runs ~7x slower than the equivalent GEMMs, and on
+    the MXU the GEMM is the native form.  Keeping the factored (not
+    squared) form preserves cho_solve-grade accuracy: each GEMM mirrors
+    one backward-stable substitution, where a pre-squared ``Sigma^{-1}``
+    doubles the condition number and (empirically, float32) breaks the
+    downstream Algorithm-2 Schur Cholesky.  Sibling nodes share a parent,
+    so one factor serves both children; this is the same object the solve
+    engine keeps as ``InverseFactors.linv`` for its leaf stage.
+    """
+    r = chol.shape[-1]
+    if r <= 64 or r % 2:
+        eye = jnp.eye(r, dtype=chol.dtype)
+        return jax.vmap(
+            lambda lw: jax.scipy.linalg.solve_triangular(
+                lw, eye, lower=True))(chol)
+    # blocked recursion: inv([[A,0],[B,C]]) = [[Ai,0],[-Ci B Ai, Ci]] —
+    # substitution only at the <=64 base, everything above is GEMMs
+    # (XLA CPU's batched triangular solve runs far below GEMM throughput)
+    h = r // 2
+    ai = sigma_linv(chol[:, :h, :h])
+    ci = sigma_linv(chol[:, h:, h:])
+    off = -jnp.einsum("bij,bjk,bkl->bil", ci, chol[:, h:, :h], ai)
+    top = jnp.concatenate([ai, jnp.zeros_like(off.swapaxes(1, 2))], axis=2)
+    return jnp.concatenate(
+        [top, jnp.concatenate([off, ci], axis=2)], axis=1)
+
+
+def _stage_build_cross(blocks: Array, lm_parent: Array, linv_parent: Array,
+                       kernel: BaseKernel, config: SolveConfig) -> Array:
+    """Dispatch one level's cross blocks through the ``build_cross`` stage."""
+    _, m, d = blocks.shape
+    r = lm_parent.shape[1]
+    backend = resolve_backend(config, "build_cross", dtype=blocks.dtype,
+                              n0=m, r=r, d=d)
+    kwargs = {}
+    if backend == "pallas":
+        kwargs["block_m"] = tile_config(
+            "build_cross", n0=m, r=r, k=r, d=d,
+            itemsize=blocks.dtype.itemsize,
+            leaf_block=config.leaf_block).block_n0
+    return get_impl("build_cross", backend)(
+        blocks, lm_parent, linv_parent, name=kernel.name, sigma=kernel.sigma,
+        interpret=config.interpret, **kwargs).astype(blocks.dtype)
+
+
+def _broadcast_shared_landmarks(landmarks: list, rank: int, d: int) -> list:
+    """§4.2 remark: reuse the root landmark set at every node (-> flat
+    k_compositional)."""
+    root = landmarks[0]
+    return [jnp.broadcast_to(root, (1 << lvl, rank, d)).reshape(1 << lvl, rank, d)
+            for lvl in range(len(landmarks))]
+
+
+def _middle_factors(landmarks: tuple, kernel: BaseKernel,
+                    config: SolveConfig):
+    """Sigma, Cholesky, and Linv for every level.
+
+    One ``build_gram`` stage launch per level plus the per-node inverse
+    Cholesky factor (:func:`sigma_linv`) — shared by the in-memory and
+    streaming engines so their factor numerics can never diverge.
+    """
+    sigma, sigma_cho, sigma_li = [], [], []
+    for lm in landmarks:
+        s, c = _stage_build_gram(lm, kernel, config)
+        sigma.append(s)
+        sigma_cho.append(c)
+        sigma_li.append(sigma_linv(c))
+    return tuple(sigma), tuple(sigma_cho), sigma_li
+
+
+def _transfer_ops(landmarks: tuple, sigma_li: list, kernel: BaseKernel,
+                  config: SolveConfig) -> tuple:
+    """W factors at levels 1..L-1 via paired-sibling build_cross launches.
+
+    Sibling nodes share their parent's landmarks and Linv, so each level's
+    cross stage runs at PARENT granularity (paired child blocks) — no
+    repeated landmark/factor stacks.  Shared by both engines.
+    """
+    rank, d = landmarks[0].shape[1], landmarks[0].shape[2]
+    w = []
+    for lvl in range(1, len(landmarks)):
+        pair_lm = landmarks[lvl].reshape(1 << (lvl - 1), 2 * rank, d)
+        w.append(_stage_build_cross(
+            pair_lm, landmarks[lvl - 1], sigma_li[lvl - 1], kernel,
+            config).reshape(1 << lvl, rank, rank))
+    return tuple(w)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("levels", "rank", "method", "shared_landmarks", "kernel"),
+    static_argnames=("levels", "rank", "method", "shared_landmarks", "kernel",
+                     "config"),
 )
 def build_hck(
     x: Array,
@@ -112,12 +245,39 @@ def build_hck(
     kernel: BaseKernel,
     method: str = "rp",
     shared_landmarks: bool = False,
+    config: SolveConfig | None = None,
 ) -> HCKFactors:
-    """Partition ``x`` and instantiate all HCK factors.
+    """Partition ``x`` and instantiate all HCK factors (batched engine).
 
-    Cost (paper §4.5): O(n d log(n/r)) partitioning + O(n r (r + d)) factor
-    instantiation.  Everything is batched over nodes of one level.
+    Level-synchronous Algorithm 2: the partition splits all nodes of a
+    level in one vmapped pass, and every factor is instantiated by one of
+    two registry stages batched over the level — ``build_gram`` (Sigma +
+    Cholesky, and the leaf Adiag blocks) and ``build_cross`` (the
+    Sigma^{-1}-projected U and W blocks).  Cost (paper §4.5): O(n d
+    log(n/r)) partitioning + O(n r (r + d)) factor instantiation.
+
+    Parameters
+    ----------
+    x:       (n, d) training points; n must be divisible by ``2**levels``
+             (:func:`repro.core.partition.pad_points` pads).  float32 or
+             float64 (the factors keep x's dtype; the Pallas backend
+             computes sub-f32 inputs in f32).
+    levels:  tree depth L >= 0 (0 degenerates to one dense leaf block).
+    rank:    landmarks per node r <= n / 2**levels (paper §4.4).
+    key:     PRNG key consumed by the partition and landmark sampling.
+    kernel:  base kernel closed over (name, sigma, jitter); static.
+    method:  partitioning rule, "rp" (recommended) or "pca".
+    shared_landmarks: reuse the root landmark set at every node (§4.2
+             remark: collapses to the flat compositional kernel).
+    config:  :class:`~repro.kernels.registry.SolveConfig` selecting the
+             stage backends (``backend``, ``interpret``, ``leaf_block``
+             are honored); None = DEFAULT_CONFIG ("auto").
+
+    Returns
+    -------
+    :class:`HCKFactors` with all per-level factor stacks.
     """
+    config = config if config is not None else DEFAULT_CONFIG
     n, d = x.shape
     n_leaves = 1 << levels
     if n % n_leaves != 0:
@@ -136,38 +296,220 @@ def build_hck(
         blocks = x_sorted.reshape(1 << lvl, n // (1 << lvl), d)
         landmarks.append(_sample_landmarks(sub, blocks, rank))
     if shared_landmarks and levels > 0:
-        # §4.2 remark: same landmark set everywhere == flat k_compositional.
-        root = landmarks[0]
-        landmarks = [jnp.broadcast_to(root, (1 << lvl, rank, d)).reshape(1 << lvl, rank, d)
-                     for lvl in range(levels)]
+        landmarks = _broadcast_shared_landmarks(landmarks, rank, d)
     landmarks = tuple(landmarks)
 
-    # --- middle factors Sigma + their Cholesky ---------------------------
-    gram = jax.vmap(kernel.gram)
-    sigma = tuple(gram(lm) for lm in landmarks)
-    sigma_cho = tuple(_chol(s) for s in sigma)
+    # --- middle factors Sigma, their Cholesky, and Linv ------------------
+    # (build_gram stage; the inverse Cholesky factor is computed once per
+    # node so every downstream cross block is two GEMMs — see sigma_linv)
+    sigma, sigma_cho, sigma_li = _middle_factors(landmarks, kernel, config)
 
-    # --- leaf factors -----------------------------------------------------
+    # --- leaf factors (build_gram without Cholesky + build_cross) --------
     leaves = x_sorted.reshape(n_leaves, n0, d)
-    adiag = gram(leaves)                                     # (2**L, n0, n0)
+    adiag, _ = _stage_build_gram(leaves, kernel, config, want_chol=False)
     if levels == 0:
         return HCKFactors(x_sorted, tree, (), (), (), (),
                           jnp.zeros((1, n0, 0), x.dtype), adiag)
 
     # U_i = K(X_i, Xl_p) inv(K(Xl_p, Xl_p)); parent of leaf i is i//2.
-    lm_parent = jnp.repeat(landmarks[-1], 2, axis=0)         # (2**L, r, d)
-    cho_parent = jnp.repeat(sigma_cho[-1], 2, axis=0)
-    kxu = jax.vmap(kernel.cross)(leaves, lm_parent)          # (2**L, n0, r)
-    u = jnp.swapaxes(_cho_solve(cho_parent, jnp.swapaxes(kxu, 1, 2)), 1, 2)
+    # Sibling leaves share their parent's landmarks and Linv, so the cross
+    # stage runs at PARENT granularity (paired child blocks) — no repeated
+    # landmark/factor stacks, half the landmark-norm work.
+    paired = leaves.reshape(n_leaves // 2, 2 * n0, d)
+    u = _stage_build_cross(paired, landmarks[-1], sigma_li[-1],
+                           kernel, config).reshape(n_leaves, n0, rank)
 
-    # --- transfer operators W at levels 1..L-1 ----------------------------
+    # --- transfer operators W at levels 1..L-1 (build_cross stage) -------
+    w = _transfer_ops(landmarks, sigma_li, kernel, config)
+    return HCKFactors(x_sorted, tree, landmarks, sigma, sigma_cho, w, u, adiag)
+
+
+# ---------------------------------------------------------------------------
+# Per-node reference construction — the paper's Algorithm 2 as written
+# (oracle + benchmark baseline; host loop over every tree node).
+# ---------------------------------------------------------------------------
+
+def build_hck_reference(
+    x: Array,
+    *,
+    levels: int,
+    rank: int,
+    key: Array,
+    kernel: BaseKernel,
+    method: str = "rp",
+    shared_landmarks: bool = False,
+) -> HCKFactors:
+    """Per-node transcription of Algorithm 2 — the pre-engine build path.
+
+    Walks the whole construction one node at a time: the sequential
+    splitter (:func:`repro.core.partition.build_partition_sequential`)
+    splits node by node, then each node gets one Gram, one Cholesky, one
+    cross-solve — O(4^L) host dispatches instead of one batched stage
+    launch per level.  It consumes the SAME key tree as :func:`build_hck`
+    (partition subkey first, then one landmark subkey per level, split per
+    node) and the sequential splitter produces the identical tree, so with
+    a fixed key the two paths must agree to factorization round-off;
+    ``bench_build.py`` gates the engine against this at 1e-6 in float64
+    and reports the engine's speedup over it.
+    """
+    from repro.core.partition import build_partition_sequential
+
+    n, d = x.shape
+    n_leaves = 1 << levels
+    if n % n_leaves != 0:
+        raise ValueError(f"n={n} not divisible by 2**levels={n_leaves}")
+    n0 = n // n_leaves
+    if rank > n0:
+        raise ValueError(f"rank {rank} exceeds leaf size {n0} (paper §4.4)")
+
+    kpart, key = jax.random.split(key)
+    x_sorted, tree = build_partition_sequential(x, levels, kpart, method=method)
+
+    # landmarks: one permutation draw + gather per node (the counter-based
+    # PRNG makes these bit-identical to the engine's vmapped draws)
+    landmarks = []
+    for lvl in range(levels):
+        key, sub = jax.random.split(key)
+        bsz, m = 1 << lvl, n >> lvl
+        node_keys = jax.random.split(sub, bsz)
+        lm = []
+        for b in range(bsz):
+            idx = jax.random.permutation(node_keys[b], m)[:rank]
+            lm.append(x_sorted[b * m:(b + 1) * m][idx])
+        landmarks.append(jnp.stack(lm))
+    if shared_landmarks and levels > 0:
+        root = landmarks[0]
+        landmarks = [jnp.broadcast_to(root, (1 << lvl, rank, d)).reshape(1 << lvl, rank, d)
+                     for lvl in range(levels)]
+    landmarks = tuple(landmarks)
+
+    # Sigma + Cholesky, one node at a time
+    sigma, sigma_cho = [], []
+    for lm in landmarks:
+        s = [kernel.gram(lm[p]) for p in range(lm.shape[0])]
+        sigma.append(jnp.stack(s))
+        sigma_cho.append(jnp.stack([jnp.linalg.cholesky(sp) for sp in s]))
+    sigma, sigma_cho = tuple(sigma), tuple(sigma_cho)
+
+    # leaf blocks, one leaf at a time
+    leaves = x_sorted.reshape(n_leaves, n0, d)
+    adiag = jnp.stack([kernel.gram(leaves[i]) for i in range(n_leaves)])
+    if levels == 0:
+        return HCKFactors(x_sorted, tree, (), (), (), (),
+                          jnp.zeros((1, n0, 0), x.dtype), adiag)
+
+    def cross_node(pts, lm_p, cho_p):
+        kxu = kernel.cross(pts, lm_p)
+        return jax.scipy.linalg.cho_solve((cho_p, True), kxu.T).T
+
+    u = jnp.stack([
+        cross_node(leaves[i], landmarks[-1][i >> 1], sigma_cho[-1][i >> 1])
+        for i in range(n_leaves)])
     w = []
     for lvl in range(1, levels):
-        lm_p = jnp.repeat(landmarks[lvl - 1], 2, axis=0)     # (2**l, r, d)
-        cho_p = jnp.repeat(sigma_cho[lvl - 1], 2, axis=0)
-        kip = jax.vmap(kernel.cross)(landmarks[lvl], lm_p)   # (2**l, r, r)
-        w.append(jnp.swapaxes(_cho_solve(cho_p, jnp.swapaxes(kip, 1, 2)), 1, 2))
+        w.append(jnp.stack([
+            cross_node(landmarks[lvl][i], landmarks[lvl - 1][i >> 1],
+                       sigma_cho[lvl - 1][i >> 1])
+            for i in range(1 << lvl)]))
     return HCKFactors(x_sorted, tree, landmarks, sigma, sigma_cho, tuple(w), u, adiag)
+
+
+# ---------------------------------------------------------------------------
+# Streaming construction — host-resident data staged through the engine.
+# ---------------------------------------------------------------------------
+
+def build_hck_streaming(
+    source,
+    *,
+    levels: int,
+    rank: int,
+    key: Array,
+    kernel: BaseKernel,
+    method: str = "rp",
+    shared_landmarks: bool = False,
+    config: SolveConfig | None = None,
+    leaf_batch: int = 64,
+    chunk_rows: int = 1 << 16,
+) -> HCKFactors:
+    """Build HCK factors from a host-resident :class:`ChunkSource`.
+
+    The raw (n, d) data never becomes device-resident in one piece: the
+    partition streams per-node projection chunks
+    (:func:`repro.data.pipeline.stream_partition`), landmark rows are
+    gathered by index, and the leaf factor stages (``build_gram`` /
+    ``build_cross``) consume groups of ``leaf_batch`` leaves at a time.
+    Output factors are the usual O(n(n0 + r)) device arrays.
+
+    Uses the same key tree as :func:`build_hck`, and
+    ``stream_partition`` reproduces the batched splitter exactly, so a
+    source wrapping an in-memory array yields identical factors — the
+    streaming-equality test in ``test_build_engine.py`` gates this.
+
+    Parameters
+    ----------
+    source:     :class:`repro.data.pipeline.ChunkSource` (``n``/``dim``
+                properties, ``chunk``/``take`` row access).
+    leaf_batch: leaves staged to the device per build_gram/build_cross
+                launch (bounds device working memory by
+                ``leaf_batch * n0 * (n0 + r + d)`` elements).
+    chunk_rows: rows per device transfer inside the streaming partition.
+    levels, rank, key, kernel, method, shared_landmarks, config: as in
+                :func:`build_hck` (``levels >= 1``: a degenerate 0-level
+                build is a single dense block — load it directly).
+    """
+    from repro.data.pipeline import stream_partition
+
+    config = config if config is not None else DEFAULT_CONFIG
+    if levels < 1:
+        raise ValueError("build_hck_streaming needs levels >= 1 "
+                         "(a 0-level build is one dense block)")
+    n, d = source.n, source.dim
+    n_leaves = 1 << levels
+    if n % n_leaves != 0:
+        raise ValueError(f"n={n} not divisible by 2**levels={n_leaves}")
+    n0 = n // n_leaves
+    if rank > n0:
+        raise ValueError(f"rank {rank} exceeds leaf size {n0} (paper §4.4)")
+
+    kpart, key = jax.random.split(key)
+    perm_np, tree = stream_partition(source, levels, kpart, method=method,
+                                     chunk_rows=chunk_rows)
+
+    # landmarks: engine-identical indices, gathered from the host source
+    landmarks = []
+    for lvl in range(levels):
+        key, sub = jax.random.split(key)
+        bsz, m = 1 << lvl, n >> lvl
+        idx = np.asarray(landmark_indices(sub, bsz, m, rank))
+        rows = perm_np[(np.arange(bsz)[:, None] * m + idx).reshape(-1)]
+        landmarks.append(jnp.asarray(source.take(rows)).reshape(bsz, rank, d))
+    if shared_landmarks:
+        landmarks = _broadcast_shared_landmarks(landmarks, rank, d)
+    landmarks = tuple(landmarks)
+
+    sigma, sigma_cho, sigma_li = _middle_factors(landmarks, kernel, config)
+
+    # leaf factors: stage leaf_batch leaves through the engine at a time
+    # (leaf groups need not align with sibling pairs, so the parent
+    # landmark/Linv stacks are repeated per leaf here)
+    lm_parent = jnp.repeat(landmarks[-1], 2, axis=0)         # (2**L, r, d)
+    linv_parent = jnp.repeat(sigma_li[-1], 2, axis=0)
+    adiag_parts, u_parts, x_parts = [], [], []
+    for start in range(0, n_leaves, leaf_batch):
+        stop = min(start + leaf_batch, n_leaves)
+        rows = perm_np[start * n0:stop * n0]
+        blk = jnp.asarray(source.take(rows)).reshape(stop - start, n0, d)
+        x_parts.append(blk.reshape(-1, d))
+        a, _ = _stage_build_gram(blk, kernel, config, want_chol=False)
+        adiag_parts.append(a)
+        u_parts.append(_stage_build_cross(
+            blk, lm_parent[start:stop], linv_parent[start:stop], kernel, config))
+    adiag = jnp.concatenate(adiag_parts, axis=0)
+    u = jnp.concatenate(u_parts, axis=0)
+    x_sorted = jnp.concatenate(x_parts, axis=0)
+
+    w = _transfer_ops(landmarks, sigma_li, kernel, config)
+    return HCKFactors(x_sorted, tree, landmarks, sigma, sigma_cho, w, u, adiag)
 
 
 # ---------------------------------------------------------------------------

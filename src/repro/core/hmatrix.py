@@ -153,26 +153,32 @@ class InverseFactors:
 
     @property
     def levels(self) -> int:
+        """Tree depth L."""
         return len(self.sigma)
 
     @property
     def num_leaves(self) -> int:
+        """Leaf count 2**L."""
         return self.adiag.shape[0]
 
     @property
     def leaf_size(self) -> int:
+        """Points per leaf n0."""
         return self.adiag.shape[1]
 
     @property
     def rank(self) -> int:
+        """Landmarks per node r."""
         return self.u.shape[-1]
 
     def tree_flatten(self):
+        """Pytree protocol: all fields are children."""
         return (self.adiag, self.u, self.sigma, self.w, self.logabsdet,
                 self.linv), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Pytree protocol: rebuild from flattened children."""
         return cls(*children)
 
 
@@ -338,6 +344,7 @@ def logdet(f: HCKFactors, ridge: Array | float = 0.0) -> Array:
 # ---------------------------------------------------------------------------
 
 def matvec_dense_reference(f: HCKFactors, b: Array) -> Array:
+    """Oracle: materialize K_hck densely and multiply (tests only)."""
     from repro.core.hck import to_dense
 
     return to_dense(f) @ b

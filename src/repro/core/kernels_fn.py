@@ -24,6 +24,7 @@ _KERNELS: dict[str, Callable[..., Array]] = {}
 
 
 def register_kernel(name: str):
+    """Decorator: register a cross-kernel fn K(X, Y) under ``name``."""
     def deco(fn):
         _KERNELS[name] = fn
         return fn
@@ -32,12 +33,14 @@ def register_kernel(name: str):
 
 
 def get_kernel(name: str) -> Callable[..., Array]:
+    """Look up a registered base kernel by name (KeyError if unknown)."""
     if name not in _KERNELS:
         raise KeyError(f"unknown base kernel {name!r}; have {sorted(_KERNELS)}")
     return _KERNELS[name]
 
 
 def available_kernels() -> list[str]:
+    """Sorted names of all registered base kernels."""
     return sorted(_KERNELS)
 
 

@@ -100,6 +100,7 @@ class KPCAModel:
 
     @property
     def engine(self):
+        """Prediction engine over the stacked weights [V, 1/n]."""
         from repro.serving.predict_service import PredictEngine
 
         if self._engine is None:
@@ -123,7 +124,15 @@ def kpca_fit(
     f: HCKFactors, kernel: BaseKernel, dim: int, *, iters: int = 50,
     key: Array | None = None, solve_config: SolveConfig | None = None,
 ) -> KPCAModel:
-    """Embed the training set and package the out-of-sample transform."""
+    """Embed the training set and package the out-of-sample transform.
+
+    ``f`` is a fitted :class:`HCKFactors` (any dtype); returns a
+    :class:`KPCAModel` whose ``embedding`` is (n, dim) in tree order and
+    whose ``transform`` maps (q, d) queries to (q, dim).  ``solve_config``
+    selects the backend of every matvec sweep (subspace iteration) and of
+    the prediction engine behind ``transform`` (``backend``, ``interpret``
+    and ``leaf_block`` are honored).
+    """
     emb, evals = kpca_embed(f, dim, iters=iters, key=key,
                             solve_config=solve_config)
     scale = jnp.sqrt(jnp.maximum(evals, 1e-30))
@@ -144,6 +153,7 @@ def kpca_embed_dense(k_centered: Array, dim: int) -> tuple[Array, Array]:
 
 
 def center(k: Array) -> Array:
+    """Dense double-centering (I - 11^T/n) K (I - 11^T/n) (oracle)."""
     n = k.shape[0]
     h = jnp.eye(n) - jnp.full((n, n), 1.0 / n)
     return h @ k @ h

@@ -15,12 +15,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hmatrix, oos
-from repro.core.hck import HCKFactors, build_hck
+from repro.core.hck import HCKFactors, build_hck, build_hck_streaming
 from repro.core.kernels_fn import BaseKernel
 from repro.core.partition import auto_levels_ceil, pad_points
 from repro.kernels.registry import SolveConfig
 
 Array = jax.Array
+
+
+def _encode_targets(y: Array, classification: bool):
+    """Shared target encoding: (targets (n, k), classes | None, squeeze)."""
+    if classification:
+        classes = jnp.unique(y)
+        if classes.shape[0] == 2:           # ±1 coding, single RHS
+            targets = jnp.where(y == classes[1], 1.0, -1.0)[:, None]
+        else:                               # one-vs-all
+            targets = jnp.where(y[:, None] == classes[None, :], 1.0, -1.0)
+        return targets, classes, False
+    return (y if y.ndim > 1 else y[:, None]), None, y.ndim == 1
 
 
 @dataclasses.dataclass
@@ -54,10 +66,12 @@ class HCKRegressor:
         return PredictEngine.attach(self)
 
     def predict(self, queries: Array) -> Array:
+        """(q, d) -> (q,) when fit with 1-D y, else (q, k) scores."""
         z = self.engine(queries)
         return z[:, 0] if self.squeeze else z
 
     def predict_class(self, queries: Array) -> Array:
+        """(q, d) -> (q,) predicted class labels (classification fits)."""
         if self.classes is None:
             raise ValueError("model was fit for regression")
         z = self.engine(queries)
@@ -83,38 +97,93 @@ def fit(
 ) -> HCKRegressor:
     """Fit KRR with the paper's sizing rule (Eq. 22) unless levels given.
 
-    ``solve_config`` selects the solve-engine backend (xla/pallas/auto) for
-    the multi-RHS Algorithm-2 solve; one-vs-all classification shares the
-    factorization across all class columns.
+    Parameters
+    ----------
+    x:         (n, d) training points (float32/float64; factors keep it).
+    y:         (n,) or (n, k) targets; classification reads class labels
+               from a 1-D ``y``.
+    kernel:    base kernel (name, sigma, jitter); static under jit.
+    lam:       ridge strength of the Algorithm-2 solve.
+    rank:      landmarks per node; ``leaf_size`` defaults to it (Eq. 22).
+    levels:    tree depth override; default sizes by ``auto_levels_ceil``
+               with at least one level (inputs that do not fill the tree
+               are padded by :func:`repro.core.partition.pad_points`).
+    key:       PRNG key for padding, partition, landmarks.
+    solve_config: :class:`~repro.kernels.registry.SolveConfig` — selects
+               the stage backends of BOTH the build engine
+               (``build_gram``/``build_cross``) and the multi-RHS
+               Algorithm-2 solve, plus ``interpret``/``refine_steps``/
+               ``leaf_block``.  One-vs-all classification shares the
+               factorization across all class columns.
     """
     key = key if key is not None else jax.random.PRNGKey(0)
     n = x.shape[0]
     leaf_size = leaf_size if leaf_size is not None else rank
     if levels is None:
-        levels = auto_levels_ceil(n, leaf_size)
+        levels = max(1, auto_levels_ceil(n, leaf_size))
     kpad, kbuild = jax.random.split(key)
     x, y, mask = pad_points(x, y, leaf_size, levels, kpad)
 
-    classes = None
-    targets = y
-    if classification:
-        classes = jnp.unique(y)
-        if classes.shape[0] == 2:           # ±1 coding, single RHS
-            targets = jnp.where(y == classes[1], 1.0, -1.0)[:, None]
-        else:                               # one-vs-all
-            targets = jnp.where(y[:, None] == classes[None, :], 1.0, -1.0)
-    else:
-        targets = y if y.ndim > 1 else y[:, None]
+    targets, classes, squeeze = _encode_targets(y, classification)
     del mask  # padded rows carry duplicated targets (see pad_points)
 
     factors = build_hck(
         x, levels=levels, rank=rank, key=kbuild, kernel=kernel,
-        method=method, shared_landmarks=shared_landmarks,
+        method=method, shared_landmarks=shared_landmarks, config=solve_config,
     )
     y_sorted = targets[factors.tree.perm]
     alpha = hmatrix.solve(factors, y_sorted, ridge=lam, config=solve_config)
     plan = oos.prepare(factors, alpha, solve_config)
-    squeeze = not classification and y.ndim == 1
+    return HCKRegressor(kernel, factors, plan, alpha, classes,
+                        squeeze=squeeze, solve_config=solve_config)
+
+
+def fit_streaming(
+    source,
+    y: Array,
+    *,
+    kernel: BaseKernel,
+    lam: float,
+    rank: int,
+    leaf_size: int | None = None,
+    levels: int | None = None,
+    key: Array | None = None,
+    classification: bool = False,
+    solve_config: SolveConfig | None = None,
+    leaf_batch: int = 64,
+    chunk_rows: int = 1 << 16,
+) -> HCKRegressor:
+    """Fit KRR from a host-resident :class:`repro.data.pipeline.ChunkSource`.
+
+    Same model as :func:`fit`, but the raw points are never device-resident
+    in one piece: the partition streams per-node projection chunks and the
+    factor stages consume ``leaf_batch`` leaves per launch
+    (:func:`repro.core.hck.build_hck_streaming`).  Inputs that do not fill
+    the tree are padded host-side with the same duplicate-and-jitter rule
+    as :func:`repro.core.partition.pad_points`.
+
+    ``y`` is an (n,) or (n, k) array (targets are O(n k) — they stay
+    device-side); ``solve_config`` selects build and solve backends as in
+    :func:`fit`.
+    """
+    from repro.data.pipeline import pad_source
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    n = source.n
+    leaf_size = leaf_size if leaf_size is not None else rank
+    if levels is None:
+        levels = max(1, auto_levels_ceil(n, leaf_size))
+    kpad, kbuild = jax.random.split(key)
+    source, y, _ = pad_source(source, y, leaf_size, levels, kpad)
+
+    targets, classes, squeeze = _encode_targets(jnp.asarray(y), classification)
+    factors = build_hck_streaming(
+        source, levels=levels, rank=rank, key=kbuild, kernel=kernel,
+        config=solve_config, leaf_batch=leaf_batch, chunk_rows=chunk_rows,
+    )
+    y_sorted = targets[factors.tree.perm]
+    alpha = hmatrix.solve(factors, y_sorted, ridge=lam, config=solve_config)
+    plan = oos.prepare(factors, alpha, solve_config)
     return HCKRegressor(kernel, factors, plan, alpha, classes,
                         squeeze=squeeze, solve_config=solve_config)
 
@@ -125,4 +194,5 @@ def relative_error(pred: Array, truth: Array) -> Array:
 
 
 def accuracy(pred: Array, truth: Array) -> Array:
+    """Fraction of exact label matches (classification metric)."""
     return jnp.mean((pred == truth).astype(jnp.float32))

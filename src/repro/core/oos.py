@@ -65,10 +65,12 @@ class OOSPlan:
     c_tilde: Array | None
 
     def tree_flatten(self):
+        """Pytree protocol: all fields are children."""
         return (self.c, self.w_leaf, self.c_tilde), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Pytree protocol: rebuild from flattened children."""
         return cls(*children)
 
 

@@ -43,17 +43,21 @@ class PartitionTree:
 
     @property
     def levels(self) -> int:
+        """Tree depth L (number of split levels)."""
         return len(self.directions)
 
     @property
     def num_leaves(self) -> int:
+        """Leaf count 2**L."""
         return 1 << self.levels
 
     def tree_flatten(self):
+        """Pytree protocol: all fields are children."""
         return (self.perm, self.directions, self.thresholds), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Pytree protocol: rebuild from flattened children."""
         return cls(*children)
 
 
@@ -79,11 +83,29 @@ def _split_level(x: Array, perm: Array, direction: Array):
     return x.reshape(bsz * 2, m // 2, -1), perm, thr
 
 
+def _node_direction_rp(key: Array, d: int, dtype) -> Array:
+    """One random unit direction (d,) from one per-node key."""
+    v = jax.random.normal(key, (d,), dtype=dtype)
+    return v / (jnp.linalg.norm(v) + 1e-12)
+
+
+def rp_directions(key: Array, bsz: int, d: int, dtype) -> Array:
+    """Per-node random-projection directions for one level: (B, d).
+
+    The level key is split into per-node keys and the draws are vmapped, so
+    node ``b`` sees exactly the direction a per-node loop would draw for it
+    (counter-based PRNG) — the batched splitter, the sequential reference
+    (:func:`build_partition_sequential`) and the streaming partition
+    (:func:`repro.data.pipeline.stream_partition`) all share this function
+    and therefore the same tree.
+    """
+    keys = jax.random.split(key, bsz)
+    return jax.vmap(lambda k: _node_direction_rp(k, d, dtype))(keys)
+
+
 def _rp_direction(key: Array, x: Array) -> Array:
     """Random unit directions, one per block: (B, d)."""
-    d = x.shape[-1]
-    v = jax.random.normal(key, (x.shape[0], d), dtype=x.dtype)
-    return v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-12)
+    return rp_directions(key, x.shape[0], x.shape[-1], x.dtype)
 
 
 def _pca_direction(key: Array, x: Array) -> Array:
@@ -114,10 +136,25 @@ def build_partition(
 ) -> tuple[Array, PartitionTree]:
     """Partition ``x`` (n, d) into 2**levels balanced leaves.
 
-    n must be divisible by 2**levels (see :func:`pad_points`).
+    Level-synchronous batched splitter: at level ``l`` every one of the
+    ``2**l`` node blocks is split in ONE pass — per-node projection
+    directions come from a single vmapped draw (``rp``) or batched power
+    iteration (``pca``), projections are one ``(B, m, d) x (B, d)``
+    contraction, and the median cut is one batched argsort.
 
-    Returns (x_sorted, tree): points permuted to tree order, plus the
-    routing record.
+    Parameters
+    ----------
+    x:      (n, d) float array; ``n`` must be divisible by ``2**levels``
+            (see :func:`pad_points`).  Any float dtype; the tree records
+            directions/thresholds in the same dtype.
+    levels: number of split levels L >= 0 (static under jit).
+    key:    PRNG key; consumed one subkey per level, then per node.
+    method: "rp" (random projection, the paper's recommendation) or "pca".
+
+    Returns
+    -------
+    (x_sorted, tree): points permuted to tree order (leaf blocks
+    contiguous), plus the :class:`PartitionTree` routing record.
     """
     n, d = x.shape
     if n % (1 << levels) != 0:
@@ -134,6 +171,51 @@ def build_partition(
         thrs.append(thr)
     x_sorted = blocks.reshape(n, d)
     return x_sorted, PartitionTree(perm, tuple(dirs), tuple(thrs))
+
+
+def build_partition_sequential(
+    x: Array, levels: int, key: Array, method: str = "rp"
+) -> tuple[Array, PartitionTree]:
+    """Per-node host-loop reference splitter (oracle for the batched path).
+
+    Walks the tree one node at a time — draw the node's direction, project
+    its block, argsort, cut at the median — consuming the SAME key tree as
+    :func:`build_partition` (one subkey per level, split into per-node
+    keys).  Because the PRNG is counter-based, the batched splitter must
+    produce the identical permutation, directions and thresholds; the
+    property test in ``test_partition_properties.py`` enforces this.
+    O(levels * 2**l) host dispatches — tests/benchmarks only.
+    """
+    n, d = x.shape
+    if n % (1 << levels) != 0:
+        raise ValueError(f"n={n} not divisible by 2**levels={1 << levels}")
+    perm = jnp.arange(n, dtype=jnp.int32)
+    x_cur = x
+    dirs, thrs = [], []
+    for lvl in range(levels):
+        key, sub = jax.random.split(key)
+        bsz = 1 << lvl
+        m = n // bsz
+        node_keys = jax.random.split(sub, bsz)
+        lvl_dirs, lvl_thrs, new_x, new_perm = [], [], [], []
+        for b in range(bsz):
+            blk = x_cur[b * m:(b + 1) * m]
+            if method == "rp":
+                v = _node_direction_rp(node_keys[b], d, x.dtype)
+            else:
+                v = _pca_direction(node_keys[b], blk[None])[0]
+            proj = blk @ v
+            order = jnp.argsort(proj)
+            sp = proj[order]
+            lvl_dirs.append(v)
+            lvl_thrs.append(0.5 * (sp[m // 2 - 1] + sp[m // 2]))
+            new_x.append(blk[order])
+            new_perm.append(perm[b * m:(b + 1) * m][order])
+        x_cur = jnp.concatenate(new_x, axis=0)
+        perm = jnp.concatenate(new_perm, axis=0)
+        dirs.append(jnp.stack(lvl_dirs))
+        thrs.append(jnp.stack(lvl_thrs))
+    return x_cur, PartitionTree(perm, tuple(dirs), tuple(thrs))
 
 
 @jax.jit
@@ -171,7 +253,8 @@ def group_by_leaf(leaf: Array, num_leaves: int) -> tuple[Array, Array, Array]:
     return order, counts, starts
 
 
-def pad_points(x: Array, y: Array | None, leaf_size: int, levels: int, key: Array):
+def pad_points(x: Array, y: Array | None, leaf_size: int, levels: int,
+               key: Array, *, num_leaves: int | None = None):
     """Pad (x, y) so n == leaf_size * 2**levels.
 
     Padding repeats uniformly-sampled existing points with tiny jitter (so
@@ -179,7 +262,48 @@ def pad_points(x: Array, y: Array | None, leaf_size: int, levels: int, key: Arra
     would bias the fit near the duplicated sites; a duplicate with the same
     target only reweights it slightly).  A mask marks real rows.
     Exact-size inputs round-trip unchanged.
+
+    Parameters
+    ----------
+    x:          (n, d) points; any float dtype (pad noise matches it).
+    y:          (n,) or (n, k) targets, or None.
+    leaf_size:  points per leaf after padding (>= 1).
+    levels:     tree depth; must be >= 1 — a 0-level "hierarchy" is a
+                single dense block and every caller that pads for the build
+                engine would get misshaped (rank-0) factors; build the
+                dense Gram directly instead.
+    key:        PRNG key for the duplicate indices and jitter.
+    num_leaves: alternative to ``levels`` for callers thinking in leaf
+                counts; must be a power of two (the tree is binary).
+                Exactly one of ``levels`` / ``num_leaves`` is honored —
+                pass ``levels=None`` when using ``num_leaves``.
+
+    Returns
+    -------
+    (x_pad, y_pad, mask): padded arrays (y_pad is None iff y is None) and
+    a boolean mask marking the real rows.
+
+    Raises
+    ------
+    ValueError: for ``levels < 1``, a non-power-of-two ``num_leaves``,
+    ``leaf_size < 1``, or ``n`` exceeding the padded capacity.
     """
+    if num_leaves is not None:
+        if levels is not None:
+            raise ValueError("pass exactly one of levels / num_leaves "
+                             f"(got levels={levels}, num_leaves={num_leaves})")
+        if num_leaves < 2 or (num_leaves & (num_leaves - 1)) != 0:
+            raise ValueError(
+                f"num_leaves={num_leaves} is not a power of two >= 2; the "
+                "partition tree is binary, so leaf counts must be 2**levels")
+        levels = num_leaves.bit_length() - 1
+    if levels is None or levels < 1:
+        raise ValueError(
+            f"pad_points needs levels >= 1, got {levels!r}: a 0-level tree "
+            "is one dense block (no landmarks, rank-0 U factors) — pad for "
+            "a real hierarchy or evaluate the dense kernel directly")
+    if leaf_size < 1:
+        raise ValueError(f"leaf_size must be >= 1, got {leaf_size}")
     n = x.shape[0]
     target = leaf_size * (1 << levels)
     if n > target:

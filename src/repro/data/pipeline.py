@@ -1,11 +1,22 @@
-"""Deterministic, checkpointable token data pipeline.
+"""Deterministic data pipelines: token batches and chunked kernel ingestion.
 
-A stand-in for the cluster data service with the properties that matter at
-scale: (a) sharded by DP rank — each data-parallel group reads a disjoint
-stream, (b) stateless resume — the cursor (step) fully determines the next
-batch, so restoring `step` restores the stream exactly, (c) synthetic but
-structured text (a char-level Markov-ish mixture) so a ~100M-param model
-visibly learns in a few hundred steps (examples/lm_train.py).
+Token side (``TokenPipeline``): a stand-in for the cluster data service
+with the properties that matter at scale: (a) sharded by DP rank — each
+data-parallel group reads a disjoint stream, (b) stateless resume — the
+cursor (step) fully determines the next batch, so restoring `step`
+restores the stream exactly, (c) synthetic but structured text (a
+char-level Markov-ish mixture) so a ~100M-param model visibly learns in a
+few hundred steps (examples/lm_train.py).
+
+Kernel side (``ChunkSource`` / ``ArraySource`` / ``stream_partition``):
+chunked, host-resident ingestion for the HCK build engine.  A
+:class:`ChunkSource` exposes row-range and row-gather access to an (n, d)
+point set that lives in host memory (or on disk); the streaming partition
+projects each node's block through the device one chunk at a time and
+sorts on the host, reproducing :func:`repro.core.partition.build_partition`
+exactly under the same key; ``repro.core.hck.build_hck_streaming`` then
+stages groups of leaf blocks through the build stages so no more than a
+bounded working set is ever device-resident.
 """
 from __future__ import annotations
 
@@ -20,6 +31,8 @@ Array = jax.Array
 
 @dataclasses.dataclass
 class TokenPipeline:
+    """Stateless sharded token stream: batch = f(seed, step, dp_rank)."""
+
     vocab: int
     seq_len: int
     global_batch: int
@@ -48,6 +61,232 @@ class TokenPipeline:
         succ = (prev * 7 + 3) % self.vocab
         gate = jax.random.bernoulli(k2, 0.7, shape)
         return jnp.where(gate, succ, base)
+
+
+# ---------------------------------------------------------------------------
+# Chunked ingestion for the HCK build engine
+# ---------------------------------------------------------------------------
+
+class ChunkSource:
+    """Host-resident (n, d) point set with chunked/gather row access.
+
+    The contract the streaming build path needs — subclass (or duck-type)
+    for memory-mapped files, object stores, or feature services:
+
+      * ``n`` / ``dim``: row count and feature dim (ints).
+      * ``dtype``: numpy dtype of the rows.
+      * ``chunk(start, stop)``: contiguous row range as an (stop-start, d)
+        numpy array.
+      * ``take(rows)``: arbitrary row gather as a (len(rows), d) numpy
+        array (used for landmark sampling and permuted leaf blocks).
+
+    Nothing here touches the device: callers move chunks with
+    ``jnp.asarray`` at the moment they enter a kernel stage.
+    """
+
+    @property
+    def n(self) -> int:
+        """Number of rows."""
+        raise NotImplementedError
+
+    @property
+    def dim(self) -> int:
+        """Feature dimension d."""
+        raise NotImplementedError
+
+    @property
+    def dtype(self):
+        """Numpy dtype of the rows."""
+        raise NotImplementedError
+
+    def chunk(self, start: int, stop: int) -> np.ndarray:
+        """Contiguous rows [start, stop) as a (stop-start, d) host array."""
+        raise NotImplementedError
+
+    def take(self, rows: np.ndarray) -> np.ndarray:
+        """Arbitrary row gather as a (len(rows), d) host array."""
+        raise NotImplementedError
+
+
+class ArraySource(ChunkSource):
+    """ChunkSource over an in-memory array (numpy or jax; held as numpy).
+
+    The reference source: wraps training data that *does* fit in host
+    memory, so the streaming path can be tested for exact equality against
+    the in-memory path, and large-but-host-sized fits can bound their
+    device working set.
+    """
+
+    def __init__(self, data):
+        self._data = np.asarray(data)
+        if self._data.ndim != 2:
+            raise ValueError(f"expected (n, d) data, got {self._data.shape}")
+
+    @property
+    def n(self) -> int:
+        """Number of rows."""
+        return self._data.shape[0]
+
+    @property
+    def dim(self) -> int:
+        """Feature dimension d."""
+        return self._data.shape[1]
+
+    @property
+    def dtype(self):
+        """Numpy dtype of the rows."""
+        return self._data.dtype
+
+    def chunk(self, start: int, stop: int) -> np.ndarray:
+        """Contiguous rows [start, stop) as a view of the wrapped array."""
+        return self._data[start:stop]
+
+    def take(self, rows: np.ndarray) -> np.ndarray:
+        """Arbitrary row gather from the wrapped array."""
+        return self._data[rows]
+
+
+class PaddedSource(ChunkSource):
+    """A ChunkSource extended by a small block of host-side pad rows.
+
+    Row indices ``< base.n`` resolve to the base source, indices beyond it
+    to the in-memory ``extra`` block — so the build engine sees one
+    contiguous (n + p, d) point set while only the O(p) pad rows are ever
+    duplicated in host memory.
+    """
+
+    def __init__(self, base: ChunkSource, extra: np.ndarray):
+        self._base = base
+        self._extra = np.asarray(extra, dtype=base.dtype)
+
+    @property
+    def n(self) -> int:
+        """Base rows plus pad rows."""
+        return self._base.n + self._extra.shape[0]
+
+    @property
+    def dim(self) -> int:
+        """Feature dimension d (of the base source)."""
+        return self._base.dim
+
+    @property
+    def dtype(self):
+        """Numpy dtype of the rows (of the base source)."""
+        return self._base.dtype
+
+    def chunk(self, start: int, stop: int) -> np.ndarray:
+        """Contiguous rows, stitched across the base/pad boundary."""
+        nb = self._base.n
+        parts = []
+        if start < nb:
+            parts.append(self._base.chunk(start, min(stop, nb)))
+        if stop > nb:
+            parts.append(self._extra[max(start - nb, 0):stop - nb])
+        if not parts:      # empty range landing exactly on the boundary
+            return np.empty((0, self.dim), dtype=self.dtype)
+        return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+
+    def take(self, rows: np.ndarray) -> np.ndarray:
+        """Row gather routed to the base source or the pad block."""
+        rows = np.asarray(rows)
+        nb = self._base.n
+        out = np.empty((rows.shape[0], self.dim), dtype=self.dtype)
+        low = rows < nb
+        if low.any():
+            out[low] = self._base.take(rows[low])
+        if (~low).any():
+            out[~low] = self._extra[rows[~low] - nb]
+        return out
+
+
+def pad_source(source: ChunkSource, y, leaf_size: int, levels: int, key):
+    """Streaming analogue of :func:`repro.core.partition.pad_points`.
+
+    Pads ``source`` (and targets ``y``) to ``leaf_size * 2**levels`` rows
+    with the same duplicate-and-jitter rule: pad rows copy uniformly
+    sampled real rows plus tiny noise (Gram blocks stay invertible) and
+    duplicate their targets.  Returns ``(padded_source, y_pad, mask)``;
+    exact-size inputs round-trip unchanged (same source object).
+
+    Raises ``ValueError`` for ``levels < 1`` or capacity overflow, like
+    ``pad_points``.
+    """
+    if levels is None or levels < 1:
+        raise ValueError(f"pad_source needs levels >= 1, got {levels!r}")
+    if leaf_size < 1:
+        raise ValueError(f"leaf_size must be >= 1, got {leaf_size}")
+    n = source.n
+    target = leaf_size * (1 << levels)
+    if n > target:
+        raise ValueError(f"n={n} exceeds capacity {target}")
+    if n == target:
+        return source, y, np.ones((n,), dtype=bool)
+    k1, k2 = jax.random.split(key)
+    idx = np.asarray(jax.random.randint(k1, (target - n,), 0, n))
+    noise = np.asarray(
+        1e-4 * jax.random.normal(k2, (target - n, source.dim),
+                                 dtype=jnp.asarray(source.chunk(0, 1)).dtype))
+    extra = source.take(idx) + noise.astype(source.dtype)
+    y_pad = None
+    if y is not None:
+        y_np = np.asarray(y)
+        y_pad = np.concatenate([y_np, y_np[idx]], axis=0)
+    mask = np.concatenate([np.ones((n,), bool), np.zeros((target - n,), bool)])
+    return PaddedSource(source, extra), y_pad, mask
+
+
+def stream_partition(
+    source: ChunkSource, levels: int, key: Array, *,
+    method: str = "rp", chunk_rows: int = 1 << 16,
+):
+    """Streaming level-synchronous partition over a host-resident source.
+
+    Per level, per node: gather the node's (currently permuted) rows in
+    chunks of ``chunk_rows``, project them on the device against the
+    node's direction, and argsort/threshold on the host — only O(chunk *
+    d) points and O(n) scalar projections are ever in flight.  Directions
+    come from :func:`repro.core.partition.rp_directions` with the same key
+    tree as the batched splitter, so the resulting permutation, directions
+    and thresholds are identical to ``build_partition`` on the same data.
+
+    Returns ``(perm, tree)``: the host int64 permutation (sorted position
+    -> source row) and the device :class:`PartitionTree` routing record.
+    Only ``method="rp"`` streams (PCA directions need second moments of
+    the raw blocks; the paper's production recommendation is rp).
+    """
+    from repro.core.partition import PartitionTree, rp_directions
+
+    if method != "rp":
+        raise NotImplementedError(
+            f"stream_partition supports method='rp' only, got {method!r}")
+    n, d = source.n, source.dim
+    if n % (1 << levels) != 0:
+        raise ValueError(f"n={n} not divisible by 2**levels={1 << levels}")
+    dtype = jnp.asarray(source.chunk(0, 1)).dtype
+    perm = np.arange(n, dtype=np.int64)
+    dirs, thrs = [], []
+    for lvl in range(levels):
+        key, sub = jax.random.split(key)
+        bsz, m = 1 << lvl, n >> lvl
+        dmat = rp_directions(sub, bsz, d, dtype)             # (B, d) device
+        thr_lvl = np.empty((bsz,), dtype=np.asarray(dmat).dtype)
+        for b in range(bsz):
+            sl = perm[b * m:(b + 1) * m]
+            proj = np.empty((m,), dtype=thr_lvl.dtype)
+            for c0 in range(0, m, chunk_rows):
+                c1 = min(c0 + chunk_rows, m)
+                blk = jnp.asarray(source.take(sl[c0:c1]))
+                proj[c0:c1] = np.asarray(
+                    jnp.einsum("md,d->m", blk, dmat[b]))
+            order = np.argsort(proj, kind="stable")
+            sp = proj[order]
+            thr_lvl[b] = thr_lvl.dtype.type(0.5) * (sp[m // 2 - 1] + sp[m // 2])
+            perm[b * m:(b + 1) * m] = sl[order]
+        dirs.append(dmat)
+        thrs.append(jnp.asarray(thr_lvl))
+    tree = PartitionTree(jnp.asarray(perm, dtype=jnp.int32),
+                         tuple(dirs), tuple(thrs))
+    return perm, tree
 
 
 def regression_dataset(cfg, key: Array):

@@ -1,7 +1,7 @@
-# Custom-kernel layer.  Each hot spot ships <name>.py (the Pallas body),
-# ops.py (jit'd wrapper) and ref.py (pure-jnp oracle); every stage is
-# registered with repro.kernels.registry so repro.core selects backends
-# through one SolveConfig instead of per-callsite flags.
+"""Custom-kernel layer.  Each hot spot ships <name>.py (the Pallas body),
+ops.py (jit'd wrapper) and ref.py (pure-jnp oracle); every stage is
+registered with repro.kernels.registry so repro.core selects backends
+through one SolveConfig instead of per-callsite flags."""
 from repro.kernels.registry import (DEFAULT_CONFIG, SolveConfig, get_impl,
                                     register, registered, resolve_backend,
                                     tile_config)

@@ -1,0 +1,1 @@
+"""Fused Algorithm-2 construction stages (``build_gram`` / ``build_cross``)."""

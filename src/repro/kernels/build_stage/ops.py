@@ -1,0 +1,71 @@
+"""Jit'd public wrappers for the fused HCK build stages.
+
+These are the "pallas" backend entries of :mod:`repro.kernels.registry`
+for the ``build_gram`` / ``build_cross`` stages (the registry lazily
+imports this module so XLA-only users never trace a Pallas call).  The
+node batch is the grid, so it needs no padding; ``build_cross`` row-tiles
+each node block with the tile size picked by
+:func:`repro.kernels.registry.tile_config` (snapped to a divisor of the
+block row count, so the launch never silently falls back to whole-node
+tiles).  Following the hck_leaf precedent the middle/feature dims stay
+unpadded (Mosaic masks unaligned trailing dims; interpret mode — the CPU
+container — does not care).
+
+Inputs at or below 32-bit are computed on the f32 MXU path; float64 inputs
+stay float64 (interpret-mode oracle parity).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.build_stage.build_stage import (_acc_dtype,
+                                                   cross_solve_kernel,
+                                                   gram_chol_kernel)
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("name", "sigma", "jitter",
+                                             "want_chol", "interpret"))
+def build_gram(
+    points: Array, *, name: str = "gaussian", sigma: float = 1.0,
+    jitter: float = 0.0, want_chol: bool = True, interpret: bool = True,
+) -> tuple[Array, Array | None]:
+    """Fused per-node Gram + (optional) Cholesky over a node batch.
+
+    (B, m, d) -> gram (B, m, m) with ``jitter * m`` added to each diagonal,
+    plus its lower Cholesky factor (or None when ``want_chol=False``).
+    """
+    ct = _acc_dtype(points)
+    return gram_chol_kernel(
+        points.astype(ct), name=name, sigma=sigma, jitter=jitter,
+        want_chol=want_chol, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("name", "sigma", "interpret",
+                                             "block_m"))
+def build_cross(
+    points: Array, landmarks: Array, linv: Array, *,
+    name: str = "gaussian", sigma: float = 1.0, interpret: bool = True,
+    block_m: int | None = None,
+) -> Array:
+    """Fused cross-kernel + Sigma^{-1} projection over a node batch.
+
+    (B, m, d), (B, r, d), (B, r, r) -> U (B, m, r) = K(P, Z) Linv^T Linv
+    with ``Linv`` the precomputed inverse Cholesky factor of the parent
+    middle factor; the node blocks are row-tiled at ``block_m`` (default
+    from :func:`repro.kernels.registry.tile_config`).
+    """
+    from repro.kernels.registry import tile_config
+
+    _, m, d = points.shape
+    r = landmarks.shape[1]
+    ct = _acc_dtype(points, landmarks, linv)
+    if block_m is None:
+        block_m = tile_config("build_cross", n0=m, r=r, k=r, d=d,
+                              itemsize=jax.numpy.dtype(ct).itemsize).block_n0
+    return cross_solve_kernel(
+        points.astype(ct), landmarks.astype(ct), linv.astype(ct),
+        name=name, sigma=sigma, bm=block_m, interpret=interpret)

@@ -24,6 +24,7 @@ def attention(
     causal: bool = True, backend: str = "auto",
     interpret: bool = True, bq: int = 128, bk: int = 128,
 ) -> Array:
+    """Padded, backend-selecting attention entry point."""
     s = q.shape[2]
     if backend == "ref" or (backend == "auto" and (s % bq != 0 or s % bk != 0)):
         return attention_ref(q, k, v, causal=causal)

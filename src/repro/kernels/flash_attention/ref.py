@@ -8,6 +8,7 @@ Array = jax.Array
 
 
 def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True) -> Array:
+    """(b, h, s, d) GQA attention with dense (s, s) scores (oracle)."""
     b, hq, s, d = q.shape
     hkv = k.shape[1]
     group = hq // hkv

@@ -13,6 +13,7 @@ def _f(a: Array) -> Array:
 
 
 def hck_leaf_matvec_ref(adiag: Array, u: Array, b: Array) -> tuple[Array, Array]:
+    """(P,n0,n0),(P,n0,r),(P,n0,k) -> y = A b, c = U^T b."""
     y = jnp.einsum("pnm,pmk->pnk", _f(adiag), _f(b))
     c = jnp.einsum("pnr,pnk->prk", _f(u), _f(b))
     return y, c
@@ -21,6 +22,7 @@ def hck_leaf_matvec_ref(adiag: Array, u: Array, b: Array) -> tuple[Array, Array]
 def hck_leaf_solve_ref(
     linv: Array, u: Array, sig: Array, b: Array
 ) -> tuple[Array, Array]:
+    """Fused leaf inverse apply: x = Linv^T Linv b + U Sig U^T b, c = U^T b."""
     linv, u, sig, b = _f(linv), _f(u), _f(sig), _f(b)
     t = jnp.einsum("pnm,pmk->pnk", linv, b)
     x = jnp.einsum("pmn,pmk->pnk", linv, t)
@@ -30,4 +32,5 @@ def hck_leaf_solve_ref(
 
 
 def hck_leaf_project_ref(u: Array, b: Array) -> Array:
+    """Upward projection c = U^T b: (P,n0,r),(P,n0,k) -> (P,r,k)."""
     return jnp.einsum("pnr,pnk->prk", _f(u), _f(b))

@@ -10,6 +10,7 @@ Array = jax.Array
 def pairwise_kernel_ref(
     x: Array, y: Array, *, name: str = "gaussian", sigma: float = 1.0
 ) -> Array:
+    """K(X, Y) for X (n, d), Y (m, d) -> (n, m), computed in f32."""
     x = x.astype(jnp.float32)
     y = y.astype(jnp.float32)
     if name == "laplace":

@@ -36,6 +36,8 @@ STAGES = (
     "leaf_project",    # c_i = U_i^T b_i           (OOS common-upward)
     "oos_local",       # z_i = w_i^T k(Xleaf_i, x_i)   (Algorithm-3 exact term)
     "oos_walk",        # z_i = c~_i^T k(Xl_i, x_i)     (flattened root path)
+    "build_gram",      # G_b = K(P_b, P_b)+jit I (+Cholesky)  (Algorithm 2)
+    "build_cross",     # U_b = K(P_b, Z_b) Sigma_b^{-1}       (Algorithm 2)
     "pairwise_kernel",  # K(X, Y) tiles            (kernel_tile)
     "attention",        # flash attention          (flash_attention)
     "ssd_intra_chunk",  # SSD intra-chunk scan     (ssd_chunk)
@@ -44,6 +46,10 @@ STAGES = (
 #: prediction-engine stages: per-query point/weight blocks, tiled over the
 #: query batch instead of over leaf rows.
 OOS_STAGES = ("oos_local", "oos_walk")
+
+#: construction-engine stages: per-node blocks stacked over one tree level
+#: (the batched Algorithm-2 build; see repro.kernels.build_stage).
+BUILD_STAGES = ("build_gram", "build_cross")
 
 
 # ---------------------------------------------------------------------------
@@ -79,6 +85,7 @@ class SolveConfig:
                 f"backend {self.backend!r} not in {('auto',) + BACKENDS}")
 
     def with_backend(self, backend: str) -> "SolveConfig":
+        """Copy of this config with ``backend`` replaced."""
         return dataclasses.replace(self, backend=backend)
 
 
@@ -98,6 +105,7 @@ class TileConfig:
 
     @property
     def fits(self) -> bool:
+        """Whether the working set fits the per-program VMEM budget."""
         return self.vmem_bytes <= _VMEM_BUDGET
 
 
@@ -117,7 +125,32 @@ def tile_config(stage: str, *, n0: int, r: int, k: int, d: int = 0,
     point block and (n0, k) weight block (n0 here is the contraction size:
     the leaf size for oos_local, the rank for oos_walk).  The query batch
     is padded to a block multiple by the ops wrapper, so no divisor snap.
+
+    Build stages: ``build_gram`` keeps a whole node per program (the (n0,
+    n0) Gram tile is factorized in place, so it cannot row-tile; the
+    returned config reports whether that working set fits).  ``build_cross``
+    row-tiles the node block like the leaf stages: pts (bn, d) + parent
+    landmarks (r, d) + parent inverse Cholesky factor (r, r) + out (bn, r).
     """
+
+    if stage == "build_gram":
+        usage_g = (n0 * d + 2 * n0 * n0) * itemsize
+        return TileConfig(n0, usage_g)
+
+    if stage == "build_cross":
+        def usage(bn: int) -> int:
+            return (bn * (d + r) + r * d + r * r) * itemsize
+
+        def snap(bn: int) -> int:
+            bn = max(1, min(bn, n0))
+            while n0 % bn != 0:
+                bn -= 1
+            return bn
+
+        bn = snap(leaf_block) if leaf_block is not None else n0
+        while bn > 8 and usage(bn) > _VMEM_BUDGET:
+            bn = snap(bn // 2)
+        return TileConfig(bn, usage(bn))
 
     if stage in OOS_STAGES:
         def usage(bq: int) -> int:
@@ -176,6 +209,7 @@ def register(stage: str, backend: str):
 
 
 def get_impl(stage: str, backend: str) -> Callable:
+    """Implementation registered for (stage, backend); KeyError if none."""
     try:
         return _REGISTRY[(stage, backend)]
     except KeyError:
@@ -186,12 +220,13 @@ def get_impl(stage: str, backend: str) -> Callable:
 
 
 def registered(stage: str | None = None) -> list[tuple[str, str]]:
+    """Sorted (stage, backend) keys, optionally filtered to one stage."""
     keys = sorted(_REGISTRY)
     return [k for k in keys if stage is None or k[0] == stage]
 
 
 def resolve_backend(config: SolveConfig | None, stage: str, *,
-                    dtype, n0: int, r: int, k: int = 1) -> str:
+                    dtype, n0: int, r: int, k: int = 1, d: int = 0) -> str:
     """Map ``config.backend`` ("auto" included) to a concrete backend for
     one stage at one shape.
 
@@ -209,6 +244,12 @@ def resolve_backend(config: SolveConfig | None, stage: str, *,
     leaf size for oos_local, the rank for oos_walk): the fused kernel
     row-tiles over the query batch, so any contraction size that meets the
     sublane granularity qualifies.
+
+    The construction stages (``build_gram`` / ``build_cross``) follow the
+    leaf-stage rules with ``n0`` meaning the per-node block row count (the
+    node/landmark block size); ``build_gram`` factorizes the whole (n0,
+    n0) Gram tile per program, so — like ``leaf_solve`` — it additionally
+    requires the whole-node working set to fit the VMEM budget.
     """
     config = config or DEFAULT_CONFIG
     if config.backend != "auto":
@@ -221,8 +262,8 @@ def resolve_backend(config: SolveConfig | None, stage: str, *,
         return "xla"
     if n0 % config.min_pallas_leaf != 0:
         return "xla"
-    if stage == "leaf_solve":
-        whole = tile_config(stage, n0=n0, r=r, k=k,
+    if stage in ("leaf_solve", "build_gram"):
+        whole = tile_config(stage, n0=n0, r=r, k=k, d=d,
                             itemsize=jnp.dtype(dtype).itemsize,
                             leaf_block=n0)
         if not whole.fits:
@@ -348,6 +389,49 @@ def _oos_walk_pallas(points, weights, queries, *, name="gaussian",
 
     return oos_contract(points, weights, queries, name=name, sigma=sigma,
                         interpret=interpret, block_q=block_q)
+
+
+@register("build_gram", "xla")
+def _build_gram_xla(points, *, name="gaussian", sigma=1.0, jitter=0.0,
+                    want_chol=True, interpret: bool = True):
+    """(B,m,d) -> gram (B,m,m) + jitter*m I [, lower Cholesky or None]."""
+    del interpret
+    from repro.kernels.build_stage.ref import build_gram_ref
+
+    gram, chol = build_gram_ref(points, name=name, sigma=sigma,
+                                jitter=jitter, want_chol=want_chol)
+    return gram.astype(points.dtype), (
+        None if chol is None else chol.astype(points.dtype))
+
+
+@register("build_cross", "xla")
+def _build_cross_xla(points, landmarks, linv, *, name="gaussian",
+                     sigma=1.0, interpret: bool = True):
+    """(B,m,d),(B,r,d),(B,r,r) -> U (B,m,r) = K(P,Z) Linv^T Linv."""
+    del interpret
+    from repro.kernels.build_stage.ref import build_cross_ref
+
+    return build_cross_ref(points, landmarks, linv, name=name,
+                           sigma=sigma).astype(points.dtype)
+
+
+@register("build_gram", "pallas")
+def _build_gram_pallas(points, *, name="gaussian", sigma=1.0, jitter=0.0,
+                       want_chol=True, interpret: bool = True):
+    from repro.kernels.build_stage.ops import build_gram
+
+    return build_gram(points, name=name, sigma=sigma, jitter=jitter,
+                      want_chol=want_chol, interpret=interpret)
+
+
+@register("build_cross", "pallas")
+def _build_cross_pallas(points, landmarks, linv, *, name="gaussian",
+                        sigma=1.0, interpret: bool = True,
+                        block_m: int | None = None):
+    from repro.kernels.build_stage.ops import build_cross
+
+    return build_cross(points, landmarks, linv, name=name, sigma=sigma,
+                       interpret=interpret, block_m=block_m)
 
 
 @register("pairwise_kernel", "xla")

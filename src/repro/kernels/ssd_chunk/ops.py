@@ -14,6 +14,7 @@ Array = jax.Array
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def intra_chunk(c: Array, b: Array, xdt: Array, cs: Array, *,
                 use_pallas: bool = True, interpret: bool = True) -> Array:
+    """Padded wrapper for the SSD intra-chunk scan kernel."""
     if not use_pallas:
         return ssd_intra_chunk_ref(c, b, xdt, cs)
     return ssd_intra_chunk(c, b, xdt, cs, interpret=interpret)

@@ -1,9 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import (jax locks the device
-# count at first init).  This module is the ONLY place the 512 placeholder
-# devices exist — tests and benches see 1 device.
-
 """Multi-pod dry-run: lower + compile every (architecture x input shape)
 under the production meshes and record memory / cost / collective analysis.
 
@@ -21,6 +15,13 @@ depths (L1, 2*L1 with L1 = the hybrid period or 1) and extrapolated linearly
 to the real depth; the full-depth compile still provides memory_analysis and
 proves the real program shards and fits.
 """
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The line above MUST run before jax is imported (jax locks the device
+# count at first init).  This module is the ONLY place the 512 placeholder
+# devices exist — tests and benches see 1 device.
+
 import argparse
 import dataclasses
 import json

@@ -64,7 +64,9 @@ def run_lm(args):
 def run_krr(args):
     from repro.core import krr
     from repro.core.kernels_fn import BaseKernel
+    from repro.kernels.registry import SolveConfig
 
+    cfg = SolveConfig(backend=args.solve_backend)
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (args.n, args.d))
     y = jnp.sin(x[:, 0]) + 0.25 * jnp.cos(x[:, 1] * 2.0)
@@ -72,7 +74,7 @@ def run_krr(args):
 
     t0 = time.perf_counter()
     model = krr.fit(x, y, kernel=ker, lam=1e-2, rank=args.rank,
-                    key=jax.random.PRNGKey(1))
+                    key=jax.random.PRNGKey(1), solve_config=cfg)
     jax.block_until_ready(model.alpha)
     t_fit = time.perf_counter() - t0
 
@@ -118,6 +120,9 @@ def main():
     ap.add_argument("--d", type=int, default=8)
     ap.add_argument("--queries", type=int, default=4096)
     ap.add_argument("--micro-batch", type=int, default=256)
+    ap.add_argument("--solve-backend", choices=["auto", "xla", "pallas"],
+                    default="auto", help="SolveConfig backend shared by the "
+                    "build engine, solve, and prediction stages")
     args = ap.parse_args()
 
     if args.task == "lm":

@@ -1,7 +1,18 @@
 """Training launcher.
 
+``--task lm`` (default): transformer language-model training.
+
   PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
       --steps 300 --seq-len 512 --batch 8 --reduced
+
+``--task krr``: fit an HCK kernel ridge model through the batched
+Algorithm-2 build engine, selecting the stage backends with
+``--solve-backend`` (one SolveConfig threads build + solve + predict);
+``--stream`` routes ingestion through the chunked host-resident pipeline
+(repro.data.pipeline) instead of a device-resident array.
+
+  PYTHONPATH=src python -m repro.launch.train --task krr --n 65536 \
+      --rank 256 --solve-backend auto --stream
 
 On the cluster this binary runs once per host under the standard multi-host
 bootstrap (jax.distributed.initialize from env); in the container it runs
@@ -26,9 +37,49 @@ from repro.training.checkpoint import CheckpointManager
 from repro.training.train_loop import train_loop
 
 
+def run_krr(args):
+    """Fit + evaluate an HCK KRR model through the batched build engine."""
+    import time
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import krr
+    from repro.core.kernels_fn import BaseKernel
+    from repro.kernels.registry import SolveConfig
+
+    cfg = SolveConfig(backend=args.solve_backend)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (args.n, args.d))
+    y = jnp.sin(x[:, 0]) + 0.25 * jnp.cos(2.0 * x[:, 1])
+    ker = BaseKernel("gaussian", sigma=2.0)
+
+    t0 = time.perf_counter()
+    if args.stream:
+        from repro.data.pipeline import ArraySource
+
+        model = krr.fit_streaming(
+            ArraySource(np.asarray(x)), y, kernel=ker, lam=1e-2,
+            rank=args.rank, key=jax.random.PRNGKey(1), solve_config=cfg,
+            leaf_batch=args.leaf_batch)
+    else:
+        model = krr.fit(x, y, kernel=ker, lam=1e-2, rank=args.rank,
+                        key=jax.random.PRNGKey(1), solve_config=cfg)
+    jax.block_until_ready(model.alpha)
+    t_fit = time.perf_counter() - t0
+
+    m = min(args.n, 2048)
+    err = krr.relative_error(model.predict(x[:m]), y[:m])
+    mode = "streaming" if args.stream else "in-memory"
+    print(f"krr n={args.n} d={args.d} rank={args.rank} "
+          f"backend={args.solve_backend} ({mode}): fit {t_fit:.2f} s "
+          f"({args.n / t_fit:,.0f} points/s), train rel-err {float(err):.4f}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--task", choices=["lm", "krr"], default="lm")
+    ap.add_argument("--arch")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq-len", type=int, default=512)
     ap.add_argument("--batch", type=int, default=8)
@@ -43,8 +94,24 @@ def main():
     ap.add_argument("--d-model", type=int, default=None,
                     help="override width (e.g. ~100M example)")
     ap.add_argument("--layers", type=int, default=None)
+    # krr task
+    ap.add_argument("--n", type=int, default=16384)
+    ap.add_argument("--d", type=int, default=8)
+    ap.add_argument("--rank", type=int, default=64)
+    ap.add_argument("--solve-backend", choices=["auto", "xla", "pallas"],
+                    default="auto", help="SolveConfig backend for the build "
+                    "engine + Algorithm-2 solve (krr task)")
+    ap.add_argument("--stream", action="store_true",
+                    help="ingest through the chunked host-resident pipeline")
+    ap.add_argument("--leaf-batch", type=int, default=64,
+                    help="leaves staged per device launch when streaming")
     args = ap.parse_args()
 
+    if args.task == "krr":
+        run_krr(args)
+        return
+    if not args.arch:
+        ap.error("--arch is required for --task lm")
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

@@ -43,7 +43,16 @@ def bucket_size(q: int, min_bucket: int, max_bucket: int) -> int:
 
 @dataclasses.dataclass
 class PredictEngine:
-    """Precompiled, bucketed Algorithm-3 inference over one fitted plan."""
+    """Precompiled, bucketed Algorithm-3 inference over one fitted plan.
+
+    ``apply`` maps (q, d) query batches (d = the training feature dim, any
+    float dtype matching the factors) to (q, k) outputs, padding q up to a
+    power-of-two bucket in [min_bucket, max_bucket] and micro-batching
+    beyond it.  ``config`` is the shared
+    :class:`~repro.kernels.registry.SolveConfig`: ``backend``/``interpret``
+    select the ``oos_local``/``oos_walk`` stage implementations and
+    ``leaf_block`` overrides their query-block tile.
+    """
 
     factors: HCKFactors
     plan: oos.OOSPlan

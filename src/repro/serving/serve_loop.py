@@ -20,6 +20,8 @@ Array = jax.Array
 
 @dataclasses.dataclass
 class ServeSession:
+    """Stateful LM serving session: prefill once, decode incrementally."""
+
     cfg: ArchConfig
     params: dict
     max_seq: int

@@ -1,0 +1,203 @@
+"""Batched Algorithm-2 build engine: parity, streaming, and stage tests.
+
+Oracles: ``build_hck_reference`` is the per-node host-loop transcription of
+the paper's Algorithm 2 (same key tree as the engine, so factors must
+agree to factorization round-off); the ``build_stage`` jnp refs are the
+stage-level oracles for the fused Pallas kernels.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import krr
+from repro.core.hck import (build_hck, build_hck_reference,
+                            build_hck_streaming, to_dense)
+from repro.core.kernels_fn import BaseKernel
+from repro.data.pipeline import ArraySource, pad_source, stream_partition
+from repro.kernels.registry import SolveConfig, get_impl
+
+
+def _assert_factors_close(fa, fb, atol, x_exact=True):
+    if x_exact:
+        np.testing.assert_array_equal(np.asarray(fa.x_sorted),
+                                      np.asarray(fb.x_sorted))
+        np.testing.assert_array_equal(np.asarray(fa.tree.perm),
+                                      np.asarray(fb.tree.perm))
+    np.testing.assert_allclose(np.asarray(fa.adiag), np.asarray(fb.adiag),
+                               atol=atol)
+    np.testing.assert_allclose(np.asarray(fa.u), np.asarray(fb.u), atol=atol)
+    for name in ("sigma", "sigma_cho", "w"):
+        for a, b in zip(getattr(fa, name), getattr(fb, name)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=atol)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("name", ["gaussian", "laplace", "imq"])
+def test_engine_matches_reference(f64, backend, name):
+    """Engine factors == per-node Algorithm-2 reference (f64, both
+    backends; pallas runs in interpret mode on CPU)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 4), dtype=jnp.float64)
+    ker = BaseKernel(name, sigma=1.5, jitter=1e-8)
+    key = jax.random.PRNGKey(1)
+    f = build_hck(x, levels=2, rank=8, key=key, kernel=ker,
+                  config=SolveConfig(backend=backend))
+    fr = build_hck_reference(x, levels=2, rank=8, key=key, kernel=ker)
+    _assert_factors_close(f, fr, atol=1e-9)
+
+
+def test_engine_matches_reference_shared_landmarks(f64):
+    x = jax.random.normal(jax.random.PRNGKey(2), (128, 3), dtype=jnp.float64)
+    ker = BaseKernel("gaussian", sigma=1.0, jitter=1e-10)
+    key = jax.random.PRNGKey(3)
+    f = build_hck(x, levels=3, rank=8, key=key, kernel=ker,
+                  shared_landmarks=True)
+    fr = build_hck_reference(x, levels=3, rank=8, key=key, kernel=ker,
+                             shared_landmarks=True)
+    _assert_factors_close(f, fr, atol=1e-9)
+
+
+def test_engine_default_config_unchanged(f64, small_problem):
+    """config=None (DEFAULT_CONFIG) reproduces an explicitly-xla build —
+    the refactor must not have moved the default numerics."""
+    x, ker, f = small_problem
+    f2 = build_hck(x, levels=3, rank=16, key=jax.random.PRNGKey(1),
+                   kernel=ker, config=SolveConfig(backend="xla"))
+    _assert_factors_close(f, f2, atol=0)
+
+
+def test_streaming_equals_in_memory(f64):
+    """ArraySource streaming build == in-memory build under the same key
+    (partition/landmarks exact; factor stages to batched-solve round-off),
+    with odd leaf_batch and chunk_rows exercising uneven staging."""
+    x = jax.random.normal(jax.random.PRNGKey(4), (256, 5), dtype=jnp.float64)
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-8)
+    key = jax.random.PRNGKey(5)
+    f = build_hck(x, levels=3, rank=8, key=key, kernel=ker)
+    fs = build_hck_streaming(ArraySource(np.asarray(x)), levels=3, rank=8,
+                             key=key, kernel=ker, leaf_batch=3,
+                             chunk_rows=23)
+    _assert_factors_close(f, fs, atol=1e-12)
+
+
+def test_stream_partition_equals_batched(f64):
+    x = jax.random.normal(jax.random.PRNGKey(6), (128, 4), dtype=jnp.float64)
+    key = jax.random.PRNGKey(7)
+    from repro.core.partition import build_partition
+
+    _, tree = build_partition(x, 3, key)
+    perm, tree_s = stream_partition(ArraySource(np.asarray(x)), 3, key,
+                                    chunk_rows=17)
+    np.testing.assert_array_equal(np.asarray(tree.perm), perm)
+    for a, b in zip(tree.thresholds, tree_s.thresholds):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fit_odd_n_padding_in_memory_vs_streaming(f64):
+    """Odd n (padding required): fit and fit_streaming consume the same
+    key, pad with the same duplicate-and-jitter rows, and must produce the
+    same model coefficients and predictions."""
+    n = 147                              # pads to 10 * 2**4 = 160
+    x = jax.random.normal(jax.random.PRNGKey(8), (n, 3), dtype=jnp.float64)
+    y = jnp.sin(x[:, 0]) + 0.1 * x[:, 1]
+    ker = BaseKernel("gaussian", sigma=1.5, jitter=1e-8)
+    key = jax.random.PRNGKey(9)
+    m = krr.fit(x, y, kernel=ker, lam=1e-2, rank=8, leaf_size=10,
+                key=key)
+    ms = krr.fit_streaming(ArraySource(np.asarray(x)), y, kernel=ker,
+                           lam=1e-2, rank=8, leaf_size=10, key=key,
+                           leaf_batch=3, chunk_rows=19)
+    assert m.factors.n == 160 and ms.factors.n == 160
+    np.testing.assert_allclose(np.asarray(m.alpha), np.asarray(ms.alpha),
+                               atol=1e-10)
+    q = jax.random.normal(jax.random.PRNGKey(10), (7, 3), dtype=jnp.float64)
+    np.testing.assert_allclose(np.asarray(m.predict(q)),
+                               np.asarray(ms.predict(q)), atol=1e-10)
+
+
+def test_pad_source_matches_pad_points(f64):
+    """The streaming pad rule generates the SAME pad rows and targets as
+    pad_points under the same key (host numpy vs device jnp arithmetic)."""
+    from repro.core.partition import pad_points
+
+    x = jax.random.normal(jax.random.PRNGKey(11), (37, 4), dtype=jnp.float64)
+    y = jax.random.normal(jax.random.PRNGKey(12), (37,), dtype=jnp.float64)
+    key = jax.random.PRNGKey(13)
+    xp, yp, mask = pad_points(x, y, 8, 3, key)
+    src, yps, mask_s = pad_source(ArraySource(np.asarray(x)), np.asarray(y),
+                                  8, 3, key)
+    np.testing.assert_array_equal(np.asarray(mask), mask_s)
+    np.testing.assert_allclose(np.asarray(xp), src.chunk(0, src.n),
+                               atol=1e-15)
+    np.testing.assert_allclose(np.asarray(yp), yps, atol=0)
+    # gather across the base/pad boundary
+    rows = np.array([0, 36, 37, src.n - 1])
+    np.testing.assert_allclose(src.take(rows), np.asarray(xp)[rows],
+                               atol=1e-15)
+
+
+def test_fit_small_n_clamps_to_one_level():
+    """n <= leaf_size used to produce a degenerate 0-level fit; the sizing
+    rule now clamps to one level (pad_points rejects levels == 0)."""
+    x = jax.random.normal(jax.random.PRNGKey(14), (8, 3))
+    y = jnp.sin(x[:, 0])
+    m = krr.fit(x, y, kernel=BaseKernel(), lam=1e-2, rank=4, leaf_size=16)
+    assert m.factors.levels == 1
+    assert np.isfinite(np.asarray(m.predict(x[:3]))).all()
+
+
+# ---------------------------------------------------------------------------
+# Stage-level parity: fused Pallas bodies vs the jnp refs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["gaussian", "laplace", "imq"])
+@pytest.mark.parametrize("dtype", ["float32", "float64"])
+def test_build_gram_stage_parity(f64, name, dtype):
+    dt = jnp.dtype(dtype)
+    p = jax.random.normal(jax.random.PRNGKey(0), (5, 12, 3), dtype=dt)
+    kw = dict(name=name, sigma=1.3, jitter=1e-6)
+    gx, cx = get_impl("build_gram", "xla")(p, **kw)
+    gp_, cp = get_impl("build_gram", "pallas")(p, **kw)
+    tol = 1e-5 if dt == jnp.float32 else 1e-11
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gp_), atol=tol)
+    np.testing.assert_allclose(np.asarray(cx), np.asarray(cp), atol=tol)
+    # want_chol=False returns the same gram and no factor
+    g2, c2 = get_impl("build_gram", "pallas")(p, want_chol=False, **kw)
+    assert c2 is None
+    np.testing.assert_array_equal(np.asarray(g2), np.asarray(gp_))
+
+
+@pytest.mark.parametrize("name", ["gaussian", "laplace", "imq"])
+@pytest.mark.parametrize("block_m", [None, 4, 12])
+def test_build_cross_stage_parity(f64, name, block_m):
+    from repro.core.hck import sigma_linv
+
+    p = jax.random.normal(jax.random.PRNGKey(1), (4, 12, 3),
+                          dtype=jnp.float64)
+    lm = jax.random.normal(jax.random.PRNGKey(2), (4, 6, 3),
+                           dtype=jnp.float64)
+    kw = dict(name=name, sigma=1.1)
+    _, cho = get_impl("build_gram", "xla")(lm, jitter=1e-6, **kw)
+    li = sigma_linv(cho)
+    ux = get_impl("build_cross", "xla")(p, lm, li, **kw)
+    up = get_impl("build_cross", "pallas")(p, lm, li, block_m=block_m, **kw)
+    np.testing.assert_allclose(np.asarray(ux), np.asarray(up), atol=1e-11)
+
+
+def test_engine_fits_whole_system(f64):
+    """End-to-end sanity: engine-built factors drive a dense-verified fit
+    (K_hck from the batched engine inverts correctly)."""
+    from repro.core import hmatrix
+
+    x = jax.random.normal(jax.random.PRNGKey(15), (128, 3),
+                          dtype=jnp.float64)
+    ker = BaseKernel("gaussian", sigma=1.5, jitter=1e-8)
+    f = build_hck(x, levels=2, rank=8, key=jax.random.PRNGKey(16),
+                  kernel=ker)
+    a = to_dense(f)
+    b = jax.random.normal(jax.random.PRNGKey(17), (f.n, 2),
+                          dtype=jnp.float64)
+    got = hmatrix.solve(f, b, ridge=0.1)
+    want = jnp.linalg.solve(a + 0.1 * jnp.eye(f.n), b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-8)

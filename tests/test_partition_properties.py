@@ -4,9 +4,12 @@ import jax.numpy as jnp
 import numpy as np
 from _hypothesis_compat import given, settings, st
 
+import pytest
+
 from repro.core.kernels_fn import BaseKernel
 from repro.core.partition import (PartitionTree, auto_levels, build_partition,
-                                  pad_points, route)
+                                  build_partition_sequential, pad_points,
+                                  route)
 
 SETTINGS = dict(max_examples=8, deadline=None)
 
@@ -105,8 +108,31 @@ def test_route_far_outside_training_hull():
 
 
 @given(seed=st.integers(0, 2**31 - 1),
+       levels=st.integers(1, 3),
+       d=st.integers(1, 6))
+@settings(**SETTINGS)
+def test_batched_splitter_equals_sequential(seed, levels, d):
+    """The level-synchronous batched splitter and the per-node sequential
+    reference consume the same key tree, so the permutation, directions and
+    thresholds must be IDENTICAL (counter-based PRNG makes the vmapped
+    direction draws bit-equal to per-node draws)."""
+    n = 16 * (1 << levels)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    key = jax.random.PRNGKey(seed + 1)
+    xs, tree = build_partition(x, levels, key)
+    xs_seq, tree_seq = build_partition_sequential(x, levels, key)
+    np.testing.assert_array_equal(np.asarray(tree.perm),
+                                  np.asarray(tree_seq.perm))
+    np.testing.assert_array_equal(np.asarray(xs), np.asarray(xs_seq))
+    for a, b in zip(tree.directions, tree_seq.directions):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(tree.thresholds, tree_seq.thresholds):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(seed=st.integers(0, 2**31 - 1),
        n=st.integers(5, 200),
-       levels=st.integers(0, 3))
+       levels=st.integers(1, 3))
 @settings(**SETTINGS)
 def test_pad_points_roundtrip(seed, n, levels):
     leaf = 8
@@ -124,6 +150,32 @@ def test_pad_points_roundtrip(seed, n, levels):
     pad_y = np.asarray(yp[~mask])
     if pad_y.size:
         assert np.isin(pad_y.round(6), np.asarray(y).round(6)).all()
+
+
+def test_pad_points_rejects_zero_levels():
+    """A 0-level 'hierarchy' is one dense block — pad_points used to emit
+    misshaped (rank-0) factor inputs for it; now it refuses loudly."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (10, 3))
+    with pytest.raises(ValueError, match="levels >= 1"):
+        pad_points(x, None, 8, 0, jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="levels >= 1"):
+        pad_points(x, None, 8, -1, jax.random.PRNGKey(1))
+
+
+def test_pad_points_rejects_non_power_of_two_leaf_count():
+    """Leaf counts are 2**levels; a num_leaves that is not a power of two
+    cannot come from a binary tree and must raise, while a valid power of
+    two behaves exactly like the equivalent levels."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (10, 3))
+    for bad in (0, 1, 3, 6, 12):
+        with pytest.raises(ValueError, match="power of two"):
+            pad_points(x, None, 8, None, jax.random.PRNGKey(1),
+                       num_leaves=bad)
+    with pytest.raises(ValueError, match="exactly one"):
+        pad_points(x, None, 8, 2, jax.random.PRNGKey(1), num_leaves=4)
+    xp, _, mask = pad_points(x, None, 8, None, jax.random.PRNGKey(1),
+                             num_leaves=4)
+    assert xp.shape[0] == 8 * 4 and int(mask.sum()) == 10
 
 
 def test_auto_levels_eq22():
