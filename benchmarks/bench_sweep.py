@@ -1,0 +1,295 @@
+"""Sweep-engine benchmark: σ×λ hyperparameter-grid throughput (grid
+points/sec), per-component amortization breakdown, speedup over the naive
+per-point ``build_hck`` + ``invert`` loop, and float64 parity gates,
+emitted as machine-readable BENCH_sweep.json.
+
+What is measured (the §5.1 / §6 model-selection workload — an NLL value
+per (σ, λ) grid point):
+
+  * naive path: per grid point, rebuild everything — partition, landmarks,
+    Gram/cross factors (``build_hck``), Algorithm-2 inversion (``invert``),
+    NLL assembly.  One point is timed (median of repeats) and extrapolated
+    to the grid: every naive point costs the same, so G×median is the
+    honest loop time without burning G full rebuilds of benchmark wall
+    clock.  Recorded as ``extrapolated: true``.
+  * sweep engine: ONE ``build_sweep_plan`` (partition + landmarks +
+    bandwidth-independent distance tiles), per σ one ``sweep_factors``
+    launch (elementwise-exp + factorize on the cached tiles), per σ one
+    ``invert_multi`` over the whole λ-axis (ridge-free leaf Schur base
+    hoisted, all G·2**L leaf factorizations in one stacked ``leaf_factor``
+    stage launch), then the same NLL assembly.
+
+Two speedups are reported: ``speedup_vs_naive`` end-to-end, and
+``build_speedup`` for the construction phase alone (G·t_build vs t_plan +
+S·t_factors) — the λ-axis still pays one exact Algorithm-2 middle-factor
+recursion per ridge (its O(2**L r³) GEMM flops are irreducible at parity;
+see docs/architecture.md), so at inversion-dominated shapes (r = n0) the
+end-to-end number approaches (t_build + t_invert)/t_invert while the
+construction amortization approaches G/S.
+
+CI runs ``--smoke``: a tiny float64 problem on BOTH backends
+(xla + pallas interpret) gating, at 1e-6 max abs difference, (a) every
+σ's ``sweep_factors`` output against a fresh ``build_hck``, (b) every
+(σ, λ) NLL against the naive rebuild path, and (c) ``invert_multi``
+against a Python loop of ``invert`` — nonzero exit on any miss.
+
+Usage:
+  python benchmarks/bench_sweep.py                      # 4σ×4λ, n=65536
+  python benchmarks/bench_sweep.py --smoke              # CI gate (tiny, f64)
+  python benchmarks/bench_sweep.py --n 16384 --rank 64 --backends xla,pallas
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hmatrix
+from repro.core.hck import build_hck, build_sweep_plan, sweep_factors
+from repro.core.kernels_fn import BaseKernel
+from repro.core.partition import auto_levels_ceil
+from repro.kernels.registry import SolveConfig
+
+
+def _timeit(fn, *args, repeats: int = 3):
+    out = fn(*args)
+    jax.block_until_ready(out)          # compile outside the timed region
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def _max_factor_diff(fa, fb) -> float:
+    """Max abs difference across every stacked factor of two HCKFactors."""
+    diffs = [jnp.max(jnp.abs(fa.u - fb.u)),
+             jnp.max(jnp.abs(fa.adiag - fb.adiag))]
+    for a, b in zip(fa.sigma, fb.sigma):
+        diffs.append(jnp.max(jnp.abs(a - b)))
+    for a, b in zip(fa.sigma_cho, fb.sigma_cho):
+        diffs.append(jnp.max(jnp.abs(a - b)))
+    for a, b in zip(fa.w, fb.w):
+        diffs.append(jnp.max(jnp.abs(a - b)))
+    return float(jnp.max(jnp.stack(diffs)))
+
+
+def _nll(inv, y_sorted, config) -> jnp.ndarray:
+    """Eq. 25 NLL from one structured inverse (quad + logdet terms)."""
+    alpha = hmatrix.apply_inverse(inv, y_sorted, config)
+    n = y_sorted.shape[0]
+    quad = jnp.sum(y_sorted[:, 0] * alpha[:, 0])
+    return 0.5 * quad + 0.5 * inv.logabsdet + 0.5 * n * jnp.log(2 * jnp.pi)
+
+
+def naive_point(x, y, sigma, lam, *, levels, rank, key, jitter, config):
+    """One grid point the way a per-point loop pays for it: full rebuild."""
+    kernel = BaseKernel("gaussian", sigma=sigma, jitter=jitter)
+    f = build_hck(x, levels=levels, rank=rank, key=key, kernel=kernel,
+                  config=config)
+    y_sorted = y[f.tree.perm][:, None]
+    inv = hmatrix.invert(f, lam, config)
+    return _nll(inv, y_sorted, config)
+
+
+def sweep_grid(plan, y, sigmas, lams, *, jitter, config):
+    """The whole σ×λ surface through the sweep engine; returns (S, L)."""
+    rows = []
+    for s in sigmas:
+        kernel = BaseKernel("gaussian", sigma=s, jitter=jitter)
+        f = sweep_factors(plan, kernel, config)
+        y_sorted = y[f.tree.perm][:, None]
+        invs = hmatrix.invert_multi(f, lams, config)
+        rows.append(jnp.stack([
+            _nll(jax.tree_util.tree_map(lambda a, g=g: a[g], invs),
+                 y_sorted, config)
+            for g in range(lams.shape[0])]))
+    return jnp.stack(rows)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=65536)
+    ap.add_argument("--rank", type=int, default=256)
+    ap.add_argument("--d", type=int, default=8, help="input dimension")
+    ap.add_argument("--levels", type=int, default=None,
+                    help="tree depth (default: paper Eq. 22 sizing)")
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "float64"])
+    ap.add_argument("--backends", default="xla")
+    ap.add_argument("--sigmas", default="0.5,1,2,4",
+                    help="comma-separated bandwidth grid")
+    ap.add_argument("--lams", default="1e-3,1e-2,1e-1,1",
+                    help="comma-separated ridge grid")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--gate-n", type=int, default=1024,
+                    help="problem size for the float64 parity gates")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny float64 problem + parity gates only")
+    ap.add_argument("--tol", type=float, default=1e-6,
+                    help="max abs factor/NLL difference vs the naive path")
+    ap.add_argument("--out", default="BENCH_sweep.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.n, args.rank, args.d = 512, 16, 4
+        args.dtype = "float64"
+        args.backends = "xla,pallas"
+        args.sigmas, args.lams = "0.8,1.6", "1e-2,1e-1"
+        args.gate_n = args.n
+
+    jax.config.update("jax_enable_x64", True)   # parity gates run in f64
+    dtype = jnp.dtype(args.dtype)
+    jitter = 1e-8
+    sigmas = [float(s) for s in args.sigmas.split(",")]
+    lams_f = [float(v) for v in args.lams.split(",")]
+    n_sigma, n_lam = len(sigmas), len(lams_f)
+    grid_points = n_sigma * n_lam
+    x = jax.random.normal(jax.random.PRNGKey(0), (args.n, args.d),
+                          dtype=dtype)
+    y = (jnp.sin(x[:, 0]) + 0.25 * jnp.cos(2.0 * x[:, 1])).astype(dtype)
+    levels = (args.levels if args.levels is not None
+              else auto_levels_ceil(args.n, args.rank))
+    key = jax.random.PRNGKey(1)
+
+    report = {
+        "problem": {"n": args.n, "levels": levels, "rank": args.rank,
+                    "d": args.d, "dtype": args.dtype, "smoke": args.smoke,
+                    "sigmas": sigmas, "lams": lams_f,
+                    "grid_points": grid_points},
+        "device": str(jax.devices()[0]),
+        "results": [],
+        "checks": {},
+    }
+
+    if not args.smoke:
+        lams = jnp.asarray(lams_f, dtype=dtype)
+        for backend in args.backends.split(","):
+            backend = backend.strip()
+            cfg = SolveConfig(backend=backend)
+
+            # naive per-point loop: one (σ, λ) timed, extrapolated to G
+            # (every naive point repeats identical work); the build alone is
+            # also timed so the construction amortization can be reported
+            t_point, _ = _timeit(
+                lambda: naive_point(
+                    x, y, sigmas[0], lams_f[0], levels=levels,
+                    rank=args.rank, key=key, jitter=jitter, config=cfg),
+                repeats=args.repeats)
+            kern0 = BaseKernel("gaussian", sigma=sigmas[0], jitter=jitter)
+            t_build, _ = _timeit(
+                lambda: build_hck(x, levels=levels, rank=args.rank, key=key,
+                                  kernel=kern0, config=cfg),
+                repeats=args.repeats)
+            naive_total = grid_points * t_point
+
+            # sweep engine, component-fenced
+            t_plan, plan = _timeit(
+                lambda: build_sweep_plan(x, levels=levels, rank=args.rank,
+                                         key=key),
+                repeats=args.repeats)
+            t_factors, f0 = _timeit(
+                lambda: sweep_factors(plan, kern0, cfg),
+                repeats=args.repeats)
+            t_multi, _ = _timeit(
+                lambda: hmatrix.invert_multi(f0, lams, cfg),
+                repeats=args.repeats)
+            t_grid, _ = _timeit(
+                lambda: sweep_grid(plan, y, sigmas, lams, jitter=jitter,
+                                   config=cfg),
+                repeats=1)
+            sweep_total = t_plan + t_grid
+            entry = {
+                "backend": backend,
+                "naive": {"point_s": t_point, "build_s": t_build,
+                          "total_s": naive_total, "extrapolated": True},
+                "sweep": {"plan_s": t_plan, "factors_s_per_sigma": t_factors,
+                          "invert_multi_s_per_sigma": t_multi,
+                          "grid_s": t_grid, "total_s": sweep_total},
+                "grid_points_per_s": grid_points / sweep_total,
+                "speedup_vs_naive": naive_total / sweep_total,
+                "build_speedup": (grid_points * t_build)
+                / (t_plan + n_sigma * t_factors),
+            }
+            report["results"].append(entry)
+            print(f"[{backend:>6}] naive {naive_total:8.1f} s "
+                  f"({t_point:.2f} s/point, extrapolated)  sweep "
+                  f"{sweep_total:8.1f} s ({grid_points / sweep_total:.2f} "
+                  f"points/s)  -> {entry['speedup_vs_naive']:.1f}x "
+                  f"end-to-end, {entry['build_speedup']:.1f}x construction")
+
+    # --- float64 parity gates vs the naive rebuild path ------------------
+    # gate size: at least two leaves' worth of points so the sweep plan has
+    # a real hierarchy (levels >= 1) even when rank >= the requested gate_n
+    ok = True
+    gn = min(args.n, max(args.gate_n, 2 * args.rank))
+    g_levels = max(1, min(levels, auto_levels_ceil(gn, args.rank)))
+    x64 = jax.random.normal(jax.random.PRNGKey(0), (gn, args.d),
+                            dtype=jnp.float64)
+    y64 = (jnp.sin(x64[:, 0]) + 0.25 * jnp.cos(2.0 * x64[:, 1]))
+    lams64 = jnp.asarray(lams_f, dtype=jnp.float64)
+    for backend in args.backends.split(","):
+        backend = backend.strip()
+        cfg = SolveConfig(backend=backend)
+        plan = build_sweep_plan(x64, levels=g_levels, rank=args.rank,
+                                key=key)
+        factor_diff, nll_diff = 0.0, 0.0
+        for s in sigmas:
+            kernel = BaseKernel("gaussian", sigma=s, jitter=jitter)
+            f_naive = build_hck(x64, levels=g_levels, rank=args.rank,
+                                key=key, kernel=kernel, config=cfg)
+            f_sweep = sweep_factors(plan, kernel, cfg)
+            factor_diff = max(factor_diff,
+                              _max_factor_diff(f_sweep, f_naive))
+            y_sorted = y64[f_sweep.tree.perm][:, None]
+            invs = hmatrix.invert_multi(f_sweep, lams64, cfg)
+            for g, lam in enumerate(lams_f):
+                nll_naive = naive_point(
+                    x64, y64, s, lam, levels=g_levels, rank=args.rank,
+                    key=key, jitter=jitter, config=cfg)
+                nll_sweep = _nll(
+                    jax.tree_util.tree_map(lambda a, g=g: a[g], invs),
+                    y_sorted, cfg)
+                nll_diff = max(nll_diff, float(abs(nll_sweep - nll_naive)))
+        # invert_multi must reproduce a loop of invert on the same factors
+        f0 = sweep_factors(plan, BaseKernel("gaussian", sigma=sigmas[0],
+                                            jitter=jitter), cfg)
+        invs = hmatrix.invert_multi(f0, lams64, cfg)
+        multi_diff = 0.0
+        for g, lam in enumerate(lams_f):
+            one = hmatrix.invert(f0, lam, cfg)
+            multi_diff = max(
+                multi_diff,
+                float(jnp.max(jnp.abs(invs.adiag[g] - one.adiag))),
+                float(jnp.max(jnp.abs(invs.u[g] - one.u))),
+                float(abs(invs.logabsdet[g] - one.logabsdet)))
+        passed = (factor_diff <= args.tol and nll_diff <= args.tol
+                  and multi_diff <= args.tol)
+        ok = ok and passed
+        report["checks"][backend] = {
+            "gate_n": gn, "levels": g_levels,
+            "max_factor_diff_vs_build_hck": factor_diff,
+            "max_nll_diff_vs_naive": nll_diff,
+            "max_invert_multi_diff_vs_invert_loop": multi_diff,
+            "tol": args.tol, "pass": passed,
+        }
+        print(f"[{backend:>6}] parity ({gn} pts, f64): factors "
+              f"{factor_diff:.2e}  nll {nll_diff:.2e}  invert_multi "
+              f"{multi_diff:.2e}  {'PASS' if passed else 'FAIL'}")
+
+    report["pass"] = ok
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

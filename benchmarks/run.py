@@ -23,6 +23,7 @@ def main() -> None:
         return not which or name in which
 
     summary = []
+    failed = 0
 
     if want("fig3"):
         _section("fig3_stability (error-vs-sigma variance bands)")
@@ -64,6 +65,23 @@ def main() -> None:
         fig8_kpca.run()
         summary.append(("fig8_kpca", time.perf_counter() - t0))
 
+    if want("sweep"):
+        _section("sweep engine (σ×λ grid amortization, BENCH_sweep.json)")
+        # subprocess, not import: bench_sweep flips jax_enable_x64 globally
+        # for its parity gates, which would silently re-dtype every later
+        # section (cost/roofline) if run in-process
+        import pathlib
+        import subprocess
+
+        t0 = time.perf_counter()
+        rc = subprocess.run(
+            [sys.executable,
+             str(pathlib.Path(__file__).parent / "bench_sweep.py"),
+             "--smoke", "--out", "BENCH_sweep.json"]).returncode
+        summary.append(("bench_sweep_smoke", time.perf_counter() - t0))
+        if rc:
+            failed = rc           # parity-gate miss must not exit 0
+
     if want("cost"):
         _section("cost scaling of Alg 1/2/3 (paper §4.5)")
         from benchmarks import cost_scaling
@@ -84,6 +102,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, dt in summary:
         print(f"{name},{dt * 1e6:.0f},wall_s={dt:.2f}")
+    if failed:
+        raise SystemExit(failed)
 
 
 if __name__ == "__main__":

@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hmatrix, oos
-from repro.core.hck import HCKFactors, build_hck
-from repro.core.kernels_fn import BaseKernel
+from repro.core.hck import (HCKFactors, build_hck, build_sweep_plan,
+                            sweep_factors)
+from repro.core.kernels_fn import KERNEL_METRIC, BaseKernel
 from repro.kernels.registry import SolveConfig
 
 Array = jax.Array
@@ -93,7 +94,7 @@ def fit_gp(
     factors = build_hck(x, levels=levels, rank=rank, key=key, kernel=kernel,
                         config=solve_config)
     y_sorted = y[factors.tree.perm][:, None]
-    inv = hmatrix.invert(factors, ridge=noise)
+    inv = hmatrix.invert(factors, ridge=noise, config=solve_config)
     alpha = hmatrix.apply_inverse(inv, y_sorted, solve_config)
     plan = oos.prepare(factors, alpha, solve_config)
     return HCKGaussianProcess(kernel, factors, inv, alpha, plan, noise,
@@ -109,19 +110,85 @@ def mle_objective(
     The partition/landmark randomness is frozen via ``key`` so the surface
     is deterministic — the paper's §5.1 point about stable surfaces being a
     prerequisite for parameter estimation.
+
+    ``name`` selects the base kernel.  The bandwidth is applied by folding
+    σ into the data (``x * exp(-log_sigma)``) so the BaseKernel stays a
+    static jit argument; that identity — ``k_1(x/σ, y/σ) = k_σ(x, y)`` —
+    only holds for kernels that are elementwise functions of a σ-scaled
+    metric (the ones in :data:`repro.core.kernels_fn.KERNEL_METRIC`), so
+    any other kernel raises up front.  For evaluating a whole σ×λ grid
+    prefer :func:`mle_grid`, which amortizes the partition and distance
+    work across the surface.
     """
+    if name not in KERNEL_METRIC:
+        raise ValueError(
+            f"kernel {name!r} is not σ-foldable: applying the bandwidth as "
+            "x * exp(-log_sigma) requires k_sigma(x, y) = k_1(x/σ, y/σ), "
+            "which holds only for kernels that are elementwise functions "
+            f"of a σ-scaled metric ({sorted(KERNEL_METRIC)}); pass the "
+            "bandwidth through BaseKernel(sigma=...) and fit_gp instead")
 
     def nll(log_sigma: Array, log_noise: Array) -> Array:
-        kernel = BaseKernel("gaussian", sigma=1.0)  # sigma applied via scaling
+        kernel = BaseKernel(name, sigma=1.0)  # sigma applied via scaling
         # fold sigma into the data (x/sigma) so the BaseKernel stays static
         xs = x * jnp.exp(-log_sigma)
         factors = build_hck(xs, levels=levels, rank=rank, key=key,
                             kernel=kernel, config=solve_config)
         y_sorted = y[factors.tree.perm][:, None]
-        inv = hmatrix.invert(factors, ridge=jnp.exp(log_noise))
+        inv = hmatrix.invert(factors, ridge=jnp.exp(log_noise),
+                             config=solve_config)
         alpha = hmatrix.apply_inverse(inv, y_sorted, solve_config)
         n = y_sorted.shape[0]
         quad = jnp.sum(y_sorted[:, 0] * alpha[:, 0])
         return 0.5 * quad + 0.5 * inv.logabsdet + 0.5 * n * jnp.log(2 * jnp.pi)
 
     return nll
+
+
+def mle_grid(
+    x: Array, y: Array, *, levels: int, rank: int, key: Array,
+    sigmas, noises, name: str = "gaussian", jitter: float = 1e-5,
+    solve_config: SolveConfig | None = None,
+) -> Array:
+    """Eq. 25 NLL over a σ×λ grid through the sweep engine: (S, L) surface.
+
+    Where a naive grid search re-runs partition + landmarks + Gram + cross
+    + Cholesky + inversion for every grid point, this amortizes everything
+    amortizable (§5.1: the surface is what model selection explores):
+
+      * the partition tree, landmark draw and pairwise distances are
+        bandwidth-independent — ONE :func:`~repro.core.hck.build_sweep_plan`
+        serves the whole grid;
+      * per σ, the factors are one elementwise-exp + factorize pass over
+        the cached distance tiles (:func:`~repro.core.hck.sweep_factors`);
+      * per σ, ALL noise values invert together —
+        :func:`~repro.core.hmatrix.invert_multi` stacks the λ-axis into a
+        single ``leaf_factor`` launch (the factors are λ-independent).
+
+    So the σ×λ surface costs one distance pass plus, per bandwidth, two
+    batched launches (factor instantiation + multi-ridge inversion).
+
+    Entry (s, l) matches ``mle_objective(...)(log(sigmas[s]),
+    log(noises[l]))`` to float round-off under the same ``key``.
+
+    ``sigmas`` is a sequence of Python floats (each bandwidth is a static
+    kernel parameter); ``noises`` an array-like of ridge values.
+    """
+    config = solve_config
+    plan = build_sweep_plan(x, levels=levels, rank=rank, key=key, name=name)
+    noises = jnp.asarray(noises)
+    n = x.shape[0]
+    rows = []
+    for s in sigmas:
+        kernel = BaseKernel(name, sigma=float(s), jitter=jitter)
+        factors = sweep_factors(plan, kernel, config)
+        y_sorted = y[factors.tree.perm][:, None]
+        invs = hmatrix.invert_multi(factors, noises, config)
+        quads = []
+        for g in range(noises.shape[0]):
+            inv_g = jax.tree_util.tree_map(lambda a, g=g: a[g], invs)
+            alpha = hmatrix.apply_inverse(inv_g, y_sorted, config)
+            quads.append(jnp.sum(y_sorted[:, 0] * alpha[:, 0]))
+        rows.append(0.5 * jnp.stack(quads) + 0.5 * invs.logabsdet
+                    + 0.5 * n * jnp.log(2 * jnp.pi))
+    return jnp.stack(rows)

@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kernels_fn import BaseKernel
+from repro.core.kernels_fn import KERNEL_METRIC, BaseKernel
 from repro.core.partition import PartitionTree, build_partition
 from repro.kernels.registry import (DEFAULT_CONFIG, SolveConfig, get_impl,
                                     resolve_backend, tile_config)
@@ -152,22 +152,13 @@ def sigma_linv(chol: Array) -> Array:
     so one factor serves both children; this is the same object the solve
     engine keeps as ``InverseFactors.linv`` for its leaf stage.
     """
-    r = chol.shape[-1]
-    if r <= 64 or r % 2:
-        eye = jnp.eye(r, dtype=chol.dtype)
-        return jax.vmap(
-            lambda lw: jax.scipy.linalg.solve_triangular(
-                lw, eye, lower=True))(chol)
     # blocked recursion: inv([[A,0],[B,C]]) = [[Ai,0],[-Ci B Ai, Ci]] —
     # substitution only at the <=64 base, everything above is GEMMs
-    # (XLA CPU's batched triangular solve runs far below GEMM throughput)
-    h = r // 2
-    ai = sigma_linv(chol[:, :h, :h])
-    ci = sigma_linv(chol[:, h:, h:])
-    off = -jnp.einsum("bij,bjk,bkl->bil", ci, chol[:, h:, :h], ai)
-    top = jnp.concatenate([ai, jnp.zeros_like(off.swapaxes(1, 2))], axis=2)
-    return jnp.concatenate(
-        [top, jnp.concatenate([off, ci], axis=2)], axis=1)
+    # (XLA CPU's batched triangular solve runs far below GEMM throughput);
+    # shared with the solve engine's leaf_factor stage
+    from repro.kernels.hck_leaf.ref import tril_inverse
+
+    return tril_inverse(chol)
 
 
 def _stage_build_cross(blocks: Array, lm_parent: Array, linv_parent: Array,
@@ -322,6 +313,225 @@ def build_hck(
     # --- transfer operators W at levels 1..L-1 (build_cross stage) -------
     w = _transfer_ops(landmarks, sigma_li, kernel, config)
     return HCKFactors(x_sorted, tree, landmarks, sigma, sigma_cho, w, u, adiag)
+
+
+# ---------------------------------------------------------------------------
+# Hyperparameter sweep engine — build the hierarchy once, re-instantiate
+# the factors for every bandwidth from cached distance tiles.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SweepPlan:
+    """σ-independent precomputation for a bandwidth/regularization grid.
+
+    For every base kernel in :data:`repro.core.kernels_fn.KERNEL_METRIC`
+    the kernel value is an elementwise function of a
+    bandwidth-independent metric distance, and the partition tree plus the
+    landmark draw depend only on the PRNG key and the (unscaled) data — so
+    a (σ, λ) grid search needs exactly ONE partition + landmark pass and
+    ONE O(n r (r + d)) distance pass.  The plan caches:
+
+      * ``x_sorted`` / ``tree`` / ``landmarks`` — the reusable hierarchy
+        (argsort scale invariance: see ``partition.rescale_tree``).
+      * ``lm_self[l]``   (2**l, r, r)      landmark self distances
+      * ``lm_cross[l-1]`` (2**(l-1), 2r, r) landmark→parent cross distances
+      * ``leaf_self``    (2**L, n0, n0)    leaf-block self distances
+      * ``leaf_cross``   (2**(L-1), 2n0, r) leaf→parent-landmark distances
+
+    :func:`sweep_factors` turns the plan into :class:`HCKFactors` at any
+    bandwidth via the ``build_gram_dist`` / ``build_cross_dist`` registry
+    stages — elementwise nonlinearity + factorize only, no distance work —
+    and matches :func:`build_hck` on the same key to float round-off.
+    """
+
+    x_sorted: Array
+    tree: PartitionTree
+    landmarks: tuple           # levels 0..L-1: (2**l, r, d)
+    lm_self: tuple             # levels 0..L-1: (2**l, r, r)
+    lm_cross: tuple            # levels 1..L-1: (2**(l-1), 2r, r)
+    leaf_self: Array           # (2**L, n0, n0)
+    leaf_cross: Array          # (2**(L-1), 2*n0, r)
+    metric: str = "l2"         # static: "l2" (gaussian/imq) or "l1" (laplace)
+
+    @property
+    def levels(self) -> int:
+        """Tree depth L."""
+        return len(self.landmarks)
+
+    @property
+    def num_leaves(self) -> int:
+        """Leaf count 2**L."""
+        return self.leaf_self.shape[0]
+
+    @property
+    def leaf_size(self) -> int:
+        """Points per leaf n0."""
+        return self.leaf_self.shape[1]
+
+    @property
+    def rank(self) -> int:
+        """Landmarks per node r."""
+        return self.landmarks[0].shape[1]
+
+    def tree_flatten(self):
+        """Pytree protocol: ``metric`` is static aux data."""
+        leaves = (self.x_sorted, self.tree, self.landmarks, self.lm_self,
+                  self.lm_cross, self.leaf_self, self.leaf_cross)
+        return leaves, self.metric
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        """Pytree protocol: rebuild from flattened children."""
+        return cls(*children, metric=aux)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("levels", "rank", "method", "shared_landmarks",
+                              "name"),
+)
+def build_sweep_plan(
+    x: Array,
+    *,
+    levels: int,
+    rank: int,
+    key: Array,
+    name: str = "gaussian",
+    method: str = "rp",
+    shared_landmarks: bool = False,
+) -> SweepPlan:
+    """Partition once and cache all bandwidth-independent distance tiles.
+
+    Consumes the SAME key tree as :func:`build_hck` (partition subkey
+    first, then one landmark subkey per level), so
+    ``sweep_factors(plan, kernel)`` reproduces
+    ``build_hck(x, ..., kernel=kernel)`` for every kernel sharing
+    ``name``'s metric.  O(n d log(n/r)) partition + O(n (n0 + r)) distance
+    entries, all reused across the whole (σ, λ) grid.
+
+    ``levels`` must be >= 1 (a 0-level build is one dense block with no
+    σ-independent structure worth caching — call :func:`build_hck`).
+    """
+    from repro.kernels.build_stage.ref import pairwise_dist_ref
+
+    if name not in KERNEL_METRIC:
+        raise ValueError(
+            f"kernel {name!r} has no registered bandwidth-independent "
+            f"metric; sweepable kernels: {sorted(KERNEL_METRIC)}")
+    if levels < 1:
+        raise ValueError("build_sweep_plan needs levels >= 1 "
+                         "(a 0-level build is one dense block)")
+    metric = KERNEL_METRIC[name]
+    n, d = x.shape
+    n_leaves = 1 << levels
+    if n % n_leaves != 0:
+        raise ValueError(f"n={n} not divisible by 2**levels={n_leaves}")
+    n0 = n // n_leaves
+    if rank > n0:
+        raise ValueError(f"rank {rank} exceeds leaf size {n0} (paper §4.4)")
+
+    kpart, key = jax.random.split(key)
+    x_sorted, tree = build_partition(x, levels, kpart, method=method)
+
+    landmarks = []
+    for lvl in range(levels):
+        key, sub = jax.random.split(key)
+        blocks = x_sorted.reshape(1 << lvl, n // (1 << lvl), d)
+        landmarks.append(_sample_landmarks(sub, blocks, rank))
+    if shared_landmarks:
+        landmarks = _broadcast_shared_landmarks(landmarks, rank, d)
+    landmarks = tuple(landmarks)
+
+    lm_self = tuple(pairwise_dist_ref(lm, lm, metric) for lm in landmarks)
+    lm_cross = tuple(
+        pairwise_dist_ref(
+            landmarks[lvl].reshape(1 << (lvl - 1), 2 * rank, d),
+            landmarks[lvl - 1], metric)
+        for lvl in range(1, levels))
+    leaves = x_sorted.reshape(n_leaves, n0, d)
+    leaf_self = pairwise_dist_ref(leaves, leaves, metric)
+    leaf_cross = pairwise_dist_ref(
+        leaves.reshape(n_leaves // 2, 2 * n0, d), landmarks[-1], metric)
+    return SweepPlan(x_sorted, tree, landmarks, lm_self, lm_cross,
+                     leaf_self, leaf_cross, metric=metric)
+
+
+def _stage_gram_dist(dist: Array, kernel: BaseKernel, config: SolveConfig,
+                     *, want_chol: bool = True):
+    """Dispatch cached distance tiles through the ``build_gram_dist`` stage."""
+    _, m, _ = dist.shape
+    backend = resolve_backend(config, "build_gram_dist", dtype=dist.dtype,
+                              n0=m, r=m)
+    gram, chol = get_impl("build_gram_dist", backend)(
+        dist, name=kernel.name, sigma=kernel.sigma, jitter=kernel.jitter,
+        want_chol=want_chol, interpret=config.interpret)
+    gram = gram.astype(dist.dtype)
+    return gram, None if chol is None else chol.astype(dist.dtype)
+
+
+def _stage_cross_dist(dist: Array, linv_parent: Array, kernel: BaseKernel,
+                      config: SolveConfig) -> Array:
+    """Dispatch cached cross tiles through the ``build_cross_dist`` stage."""
+    _, m, r = dist.shape
+    backend = resolve_backend(config, "build_cross_dist", dtype=dist.dtype,
+                              n0=m, r=r)
+    kwargs = {}
+    if backend == "pallas":
+        kwargs["block_m"] = tile_config(
+            "build_cross_dist", n0=m, r=r, k=r,
+            itemsize=dist.dtype.itemsize,
+            leaf_block=config.leaf_block).block_n0
+    return get_impl("build_cross_dist", backend)(
+        dist, linv_parent, name=kernel.name, sigma=kernel.sigma,
+        interpret=config.interpret, **kwargs).astype(dist.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "config"))
+def sweep_factors(
+    plan: SweepPlan,
+    kernel: BaseKernel,
+    config: SolveConfig | None = None,
+) -> HCKFactors:
+    """Instantiate :class:`HCKFactors` at one bandwidth from a
+    :class:`SweepPlan` — the per-σ pass of the sweep engine.
+
+    Every launch is elementwise-nonlinearity + factorize on a cached
+    distance tile (``build_gram_dist`` / ``build_cross_dist`` stages): no
+    partition, no landmark draw, no pairwise-distance MXU work.  With the
+    plan built from the same key, the result matches
+    ``build_hck(x, ..., kernel=kernel, ...)`` to float round-off for any
+    ``kernel`` whose metric equals ``plan.metric``.
+
+    ``kernel`` and ``config`` are static (hashable) jit arguments, exactly
+    as in :func:`build_hck`.
+    """
+    config = config if config is not None else DEFAULT_CONFIG
+    if KERNEL_METRIC.get(kernel.name) != plan.metric:
+        raise ValueError(
+            f"kernel {kernel.name!r} (metric "
+            f"{KERNEL_METRIC.get(kernel.name)!r}) does not match the plan's "
+            f"cached metric {plan.metric!r}; rebuild the plan with "
+            f"name={kernel.name!r}")
+    levels, rank = plan.levels, plan.rank
+    n_leaves, n0 = plan.num_leaves, plan.leaf_size
+
+    sigma, sigma_cho, sigma_li = [], [], []
+    for lvl in range(levels):
+        s, c = _stage_gram_dist(plan.lm_self[lvl], kernel, config)
+        sigma.append(s)
+        sigma_cho.append(c)
+        sigma_li.append(sigma_linv(c))
+
+    adiag, _ = _stage_gram_dist(plan.leaf_self, kernel, config,
+                                want_chol=False)
+    u = _stage_cross_dist(plan.leaf_cross, sigma_li[-1], kernel,
+                          config).reshape(n_leaves, n0, rank)
+    w = tuple(
+        _stage_cross_dist(plan.lm_cross[lvl - 1], sigma_li[lvl - 1], kernel,
+                          config).reshape(1 << lvl, rank, rank)
+        for lvl in range(1, levels))
+    return HCKFactors(plan.x_sorted, plan.tree, plan.landmarks,
+                      tuple(sigma), tuple(sigma_cho), w, u, adiag)
 
 
 # ---------------------------------------------------------------------------

@@ -4,6 +4,9 @@ Implements, in level-synchronous batched form (DESIGN.md §2):
 
   * :func:`matvec`   — Algorithm 1, y = A b in O(n r) (≈18nr flops)
   * :func:`invert`   — Algorithm 2, structured A^{-1} in O(n r^2) (≈37nr^2)
+  * :func:`invert_multi` — Algorithm 2 over a whole ridge grid: the factors
+                       are λ-independent, so G inversions share one build
+                       and one stacked leaf-factorization launch
   * :func:`solve`    — invert + matvec
   * :func:`logdet`   — log det A from the Algorithm-2 byproducts
                        (the Chen 2014b extension the paper points to in §6)
@@ -182,35 +185,45 @@ class InverseFactors:
         return cls(*children)
 
 
-@functools.partial(jax.jit, static_argnames=())
-def invert(f: HCKFactors, ridge: Array | float = 0.0) -> InverseFactors:
-    """Algorithm 2: factors of (K_hck + ridge I)^{-1}, O(n r^2).
+def _stage_leaf_factor(dleaf: Array, r: int,
+                       config: SolveConfig) -> tuple[Array, Array]:
+    """Dispatch the leaf Schur factorization through the ``leaf_factor``
+    stage: (P, n0, n0) SPD -> (chol, chol^{-1}), both lower triangular.
 
-    ``ridge`` is the KRR/GP regularization λ−λ' of §4.3 added to the leaf
-    diagonal blocks before inversion; it also keeps the leaf Schur
-    complements well conditioned when landmarks coincide with data points.
+    The only factorization of the Algorithm-2 inversion hot path; promoting
+    it to a registry stage lets ``invert``/``logdet`` route through Pallas
+    like every other hot loop, and lets ``invert_multi`` stack a whole
+    (ridge-grid x leaves) batch into ONE launch.
     """
-    levels, n0 = f.levels, f.leaf_size
-    eye_n0 = jnp.eye(n0, dtype=f.adiag.dtype)
-    adiag = f.adiag + ridge * eye_n0
+    n0 = dleaf.shape[-1]
+    backend = resolve_backend(config, "leaf_factor", dtype=dleaf.dtype,
+                              n0=n0, r=r)
+    lo, linv = get_impl("leaf_factor", backend)(
+        dleaf, interpret=config.interpret)
+    return lo.astype(dleaf.dtype), linv.astype(dleaf.dtype)
 
-    if levels == 0:
-        _, ld = jnp.linalg.slogdet(adiag[0])
-        return InverseFactors(jnp.linalg.inv(adiag), f.u, (), (), ld)
 
+def _leaf_schur(f: HCKFactors) -> Array:
+    """Ridge-independent part of the leaf Schur complements:
+    ``adiag - U Sigma_parent U^T`` (the ridge adds to the diagonal)."""
+    sig_p = _rep2(f.sigma[f.levels - 1])                     # (2**L, r, r)
+    return f.adiag - jnp.einsum("pnr,prs,pms->pnm", f.u, sig_p, f.u)
+
+
+def _invert_tail(f: HCKFactors, lo: Array, linv: Array) -> InverseFactors:
+    """Everything after the leaf factorization of Algorithm 2.
+
+    Pure batched einsum/slogdet work on the (2**l, r, r) middle factors —
+    no registry stage, no leaf-sized operand.  Written ridge-free so
+    :func:`invert_multi` can ``jax.vmap`` it over a ridge grid: the ridge
+    enters only through ``lo``/``linv``, while all the off-diagonal
+    factors of ``f`` are closed over and therefore SHARED (broadcast, not
+    copied) across the grid.
+    """
+    levels = f.levels
     r = f.rank
     eye_r = jnp.eye(r, dtype=f.adiag.dtype)
 
-    # ---- upward, leaf level ------------------------------------------------
-    sig_p = _rep2(f.sigma[levels - 1])                       # (2**L, r, r)
-    dleaf = adiag - jnp.einsum("pnr,prs,pms->pnm", f.u, sig_p, f.u)
-    # D is SPD (leaf Schur complement + ridge): batched Cholesky inverse.
-    # linv = L^{-1} is kept so the leaf-solve stage can apply D^{-1} as the
-    # triangular pair L^{-T} L^{-1} (the fused Pallas kernel's layout);
-    # the explicit inverse diagonal blocks are one extra syrk away.
-    lo = jnp.linalg.cholesky(dleaf)
-    linv = jax.vmap(lambda l: jax.scipy.linalg.solve_triangular(
-        l, eye_n0, lower=True))(lo)
     adiag_t = jnp.einsum("pmn,pmk->pnk", linv, linv)
     logdet_acc = 2.0 * jnp.sum(jnp.log(jnp.abs(
         jnp.diagonal(lo, axis1=-2, axis2=-1))))
@@ -239,6 +252,9 @@ def invert(f: HCKFactors, ridge: Array | float = 0.0) -> InverseFactors:
         else:
             lam = f.sigma[0]
         m = eye_r + jnp.einsum("pab,pbc->pac", lam, xi[lvl])
+        # slogdet and solve both LU-factorize m, but they are independent
+        # ops over the same input — XLA CPU schedules them concurrently,
+        # which beats the sequential share-one-LU rewrite (measured)
         sign, ld = jnp.linalg.slogdet(m)
         logdet_acc = logdet_acc + jnp.sum(ld)
         sigma_t[lvl] = -jnp.linalg.solve(m, lam)
@@ -265,6 +281,85 @@ def invert(f: HCKFactors, ridge: Array | float = 0.0) -> InverseFactors:
         logabsdet=logdet_acc,
         linv=linv,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def invert(f: HCKFactors, ridge: Array | float = 0.0,
+           config: SolveConfig | None = None) -> InverseFactors:
+    """Algorithm 2: factors of (K_hck + ridge I)^{-1}, O(n r^2).
+
+    ``ridge`` is the KRR/GP regularization λ−λ' of §4.3 added to the leaf
+    diagonal blocks before inversion; it also keeps the leaf Schur
+    complements well conditioned when landmarks coincide with data points.
+    ``config`` selects the backend of the ``leaf_factor`` stage (the leaf
+    Schur Cholesky + triangular inverse — the only leaf-sized
+    factorization); None = DEFAULT_CONFIG, uniform with every other
+    public entry point.
+    """
+    config = config if config is not None else DEFAULT_CONFIG
+    levels, n0 = f.levels, f.leaf_size
+    eye_n0 = jnp.eye(n0, dtype=f.adiag.dtype)
+
+    if levels == 0:
+        adiag = f.adiag + ridge * eye_n0
+        _, ld = jnp.linalg.slogdet(adiag[0])
+        return InverseFactors(jnp.linalg.inv(adiag), f.u, (), (), ld)
+
+    # D is SPD (leaf Schur complement + ridge): batched Cholesky inverse.
+    # linv = L^{-1} is kept so the leaf-solve stage can apply D^{-1} as the
+    # triangular pair L^{-T} L^{-1} (the fused Pallas kernel's layout);
+    # the explicit inverse diagonal blocks are one extra syrk away.
+    dleaf = _leaf_schur(f) + ridge * eye_n0
+    lo, linv = _stage_leaf_factor(dleaf, f.rank, config)
+    return _invert_tail(f, lo, linv)
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def invert_multi(f: HCKFactors, ridges: Array,
+                 config: SolveConfig | None = None) -> InverseFactors:
+    """Algorithm 2 vmapped over a ridge grid: one build, G inversions.
+
+    Returns an :class:`InverseFactors` whose every array carries a leading
+    grid axis ``G = len(ridges)`` (``logabsdet`` has shape (G,)); entry
+    ``g`` equals ``invert(f, ridges[g], config)``.  The λ-axis of the
+    hyperparameter sweep engine: the hierarchy factors are λ-independent,
+    so the grid shares one ``f``, the ridge-free part of the leaf Schur
+    complements (``adiag - U Sigma U^T``) is computed ONCE, and the only
+    leaf-sized factorization is stacked into a SINGLE ``leaf_factor``
+    stage launch over all G·2**L blocks (high arithmetic intensity:
+    ~G·n·n0²/3 flops over one n·n0 operand read).  The O(L·2**l·r³)
+    middle-factor tail runs per ridge inside the same jit — measured
+    faster than vmapping it across the grid on CPU (the G-times working
+    set of a batched tail thrashes cache for identical flops).
+
+    Apply entry ``g`` by slicing:  ``jax.tree.map(lambda a: a[g], inv)``
+    (or ``jax.vmap(apply_inverse, in_axes=(0, None))`` for all at once).
+    """
+    config = config if config is not None else DEFAULT_CONFIG
+    ridges = jnp.asarray(ridges)
+    if ridges.ndim != 1:
+        raise ValueError(f"ridges must be 1-D, got shape {ridges.shape}")
+    g = ridges.shape[0]
+    levels, n0 = f.levels, f.leaf_size
+    eye_n0 = jnp.eye(n0, dtype=f.adiag.dtype)
+    ridges = ridges.astype(f.adiag.dtype)
+
+    if levels == 0:
+        def dense_one(rr):
+            adiag = f.adiag + rr * eye_n0
+            _, ld = jnp.linalg.slogdet(adiag[0])
+            return InverseFactors(jnp.linalg.inv(adiag), f.u, (), (), ld)
+
+        return jax.vmap(dense_one)(ridges)
+
+    base = _leaf_schur(f)                                    # (2**L, n0, n0)
+    dleaf = base[None] + ridges[:, None, None, None] * eye_n0
+    lo, linv = _stage_leaf_factor(
+        dleaf.reshape(g * f.num_leaves, n0, n0), f.rank, config)
+    lo = lo.reshape(g, f.num_leaves, n0, n0)
+    linv = linv.reshape(g, f.num_leaves, n0, n0)
+    invs = [_invert_tail(f, lo[i], linv[i]) for i in range(g)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *invs)
 
 
 @functools.partial(jax.jit, static_argnames=("config",))
@@ -316,7 +411,21 @@ def solve(f: HCKFactors, b: Array, ridge: Array | float = 0.0,
     residual.
     """
     config = config if config is not None else DEFAULT_CONFIG
-    inv = invert(f, ridge)
+    inv = invert(f, ridge, config)
+    return solve_with_inverse(f, inv, b, ridge, config)
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def solve_with_inverse(f: HCKFactors, inv: InverseFactors, b: Array,
+                       ridge: Array | float = 0.0,
+                       config: SolveConfig | None = None) -> Array:
+    """Apply a prebuilt structured inverse + iterative refinement.
+
+    The second half of :func:`solve`, split out so callers holding many
+    inverses of the same hierarchy — :func:`invert_multi` grids, warm
+    restarts — reuse the refinement loop without re-running Algorithm 2.
+    """
+    config = config if config is not None else DEFAULT_CONFIG
     x = apply_inverse(inv, b, config)
 
     def norm(v):
@@ -334,9 +443,16 @@ def solve(f: HCKFactors, b: Array, ridge: Array | float = 0.0,
     return x
 
 
-def logdet(f: HCKFactors, ridge: Array | float = 0.0) -> Array:
-    """log det (K_hck + ridge I) — the GP-MLE term (paper §6 / Eq. 25)."""
-    return invert(f, ridge).logabsdet
+def logdet(f: HCKFactors, ridge: Array | float = 0.0,
+           config: SolveConfig | None = None) -> Array:
+    """log det (K_hck + ridge I) — the GP-MLE term (paper §6 / Eq. 25).
+
+    ``config`` selects the ``leaf_factor`` stage backend (None =
+    DEFAULT_CONFIG); for a whole ridge grid use
+    ``invert_multi(f, ridges, config).logabsdet`` — one stage launch for
+    all grid points instead of G rebuild-and-factorize passes.
+    """
+    return invert(f, ridge, config).logabsdet
 
 
 # ---------------------------------------------------------------------------

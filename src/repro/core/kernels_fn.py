@@ -22,6 +22,17 @@ Array = jax.Array
 # Registry: name -> cross-kernel fn K(X, Y) of shapes (n, d), (m, d) -> (n, m)
 _KERNELS: dict[str, Callable[..., Array]] = {}
 
+#: bandwidth-independent metric each base kernel's nonlinearity consumes
+#: ("l2" = SQUARED Euclidean, "l1" = Manhattan).  A kernel listed here is
+#: an elementwise function of its σ-scaled metric, which is exactly the
+#: property the hyperparameter sweep machinery relies on twice over: the
+#: distance-cached build stages (``build_gram_dist``/``build_cross_dist``)
+#: cache the metric once per grid, and ``gp.mle_objective`` folds σ into
+#: the data as ``x / σ``.  Register new kernels here ONLY when
+#: ``k_sigma(x, y) = k_1(x/σ, y/σ)`` holds; kernels absent from this table
+#: are rejected by ``build_sweep_plan`` and ``mle_objective``.
+KERNEL_METRIC = {"gaussian": "l2", "imq": "l2", "laplace": "l1"}
+
 
 def register_kernel(name: str):
     """Decorator: register a cross-kernel fn K(X, Y) under ``name``."""

@@ -188,6 +188,138 @@ def fit_streaming(
                         squeeze=squeeze, solve_config=solve_config)
 
 
+@dataclasses.dataclass
+class KRRPath:
+    """A fitted regularization path: one hierarchy, G ridge solutions.
+
+    ``alphas[g]`` are the dual coefficients at ``lams[g]`` (tree order);
+    ``scores[g]`` the validation metric at that λ (relative error for
+    regression, misclassification rate for classification — lower is
+    better in both), or None when no validation set was given.
+    :meth:`model` materializes the :class:`HCKRegressor` at one grid
+    index; :meth:`best` picks the score argmin.
+    """
+
+    kernel: BaseKernel
+    factors: HCKFactors
+    lams: Array                # (G,)
+    alphas: Array              # (G, n, k) dual coefficients, tree order
+    scores: Array | None       # (G,) validation scores, or None
+    classes: Array | None = None
+    squeeze: bool = False
+    solve_config: SolveConfig | None = None
+
+    def model(self, g: int) -> HCKRegressor:
+        """Materialize the fitted model at grid index ``g`` (prepares the
+        Algorithm-3 plan for that λ's coefficients)."""
+        plan = oos.prepare(self.factors, self.alphas[g], self.solve_config)
+        return HCKRegressor(self.kernel, self.factors, plan, self.alphas[g],
+                            self.classes, squeeze=self.squeeze,
+                            solve_config=self.solve_config)
+
+    def best(self) -> HCKRegressor:
+        """Model at the validation-score argmin (requires scores)."""
+        if self.scores is None:
+            raise ValueError("fit_path was called without a validation set; "
+                             "pick an index and call .model(g)")
+        return self.model(int(jnp.argmin(self.scores)))
+
+
+def fit_path(
+    x: Array,
+    y: Array,
+    *,
+    kernel: BaseKernel,
+    lams,
+    rank: int | None = None,
+    leaf_size: int | None = None,
+    levels: int | None = None,
+    key: Array | None = None,
+    method: str = "rp",
+    classification: bool = False,
+    shared_landmarks: bool = False,
+    solve_config: SolveConfig | None = None,
+    x_val: Array | None = None,
+    y_val: Array | None = None,
+    factors: HCKFactors | None = None,
+) -> KRRPath:
+    """Fit the whole regularization path in one build (sweep engine λ-axis).
+
+    The HCK factors are λ-independent, so where a naive grid search runs
+    ``fit`` per λ — G full rebuilds — this partitions, samples and
+    factorizes ONCE, stacks all G leaf Schur factorizations into a single
+    ``leaf_factor`` stage launch (:func:`repro.core.hmatrix.invert_multi`),
+    and shares the Algorithm-1 refinement operator across the grid.
+    Validation scoring batches all λ through ONE Algorithm-3 pass: the
+    prediction is linear in alpha, so the G coefficient vectors ride as
+    extra RHS columns of a single OOS plan.
+
+    Parameters are as in :func:`fit` with ``lams`` an array-like of ridge
+    values; ``x_val``/``y_val`` (optional) score every λ on held-out data.
+    ``factors`` (optional) supplies a prebuilt hierarchy — e.g. one σ of a
+    :func:`repro.core.hck.sweep_factors` grid — in which case ``x``/``y``
+    must already match its padded size and tree, and the build (including
+    padding) is skipped; ``rank``/``leaf_size``/``levels``/``key`` are
+    ignored.
+    """
+    if factors is None:
+        if rank is None:
+            raise ValueError("rank is required when no prebuilt factors "
+                             "are given")
+        key = key if key is not None else jax.random.PRNGKey(0)
+        n = x.shape[0]
+        leaf_size = leaf_size if leaf_size is not None else rank
+        if levels is None:
+            levels = max(1, auto_levels_ceil(n, leaf_size))
+        kpad, kbuild = jax.random.split(key)
+        x, y, _ = pad_points(x, y, leaf_size, levels, kpad)
+        factors = build_hck(
+            x, levels=levels, rank=rank, key=kbuild, kernel=kernel,
+            method=method, shared_landmarks=shared_landmarks,
+            config=solve_config,
+        )
+    elif y.shape[0] != factors.n or x.shape[0] != factors.n:
+        raise ValueError(
+            f"prebuilt factors cover n={factors.n} points but x has "
+            f"{x.shape[0]} and y has {y.shape[0]} rows — pad x/y to the "
+            "factor tree first")
+
+    targets, classes, squeeze = _encode_targets(y, classification)
+    y_sorted = targets[factors.tree.perm]
+    lams = jnp.asarray(lams)
+    invs = hmatrix.invert_multi(factors, lams, solve_config)
+    alphas = jnp.stack([
+        hmatrix.solve_with_inverse(
+            factors, jax.tree_util.tree_map(lambda a, g=g: a[g], invs),
+            y_sorted, ridge=lams[g], config=solve_config)
+        for g in range(lams.shape[0])])                      # (G, n, k)
+
+    scores = None
+    if x_val is not None:
+        if y_val is None:
+            raise ValueError("x_val given without y_val")
+        g_count, _, k = alphas.shape
+        # one OOS pass for ALL lambdas: predictions are linear in alpha,
+        # so the G coefficient sets are just extra RHS columns
+        alpha_cols = jnp.moveaxis(alphas, 0, 2).reshape(-1, g_count * k)
+        plan = oos.prepare(factors, alpha_cols, solve_config)
+        z = oos.apply_plan(factors, plan, x_val, kernel, solve_config)
+        z = z.reshape(-1, k, g_count)                        # (q, k, G)
+        if classification:
+            if classes.shape[0] == 2:
+                pred = jnp.where(z[:, 0, :] > 0, classes[1], classes[0])
+            else:
+                pred = classes[jnp.argmax(z, axis=1)]        # (q, G)
+            scores = jnp.mean((pred != y_val[:, None]).astype(jnp.float32),
+                              axis=0)
+        else:
+            yv = y_val if y_val.ndim > 1 else y_val[:, None]
+            scores = (jnp.linalg.norm(z - yv[:, :, None], axis=(0, 1))
+                      / jnp.linalg.norm(yv))
+    return KRRPath(kernel, factors, lams, alphas, scores, classes,
+                   squeeze=squeeze, solve_config=solve_config)
+
+
 def relative_error(pred: Array, truth: Array) -> Array:
     """Paper's regression metric: ||pred - y|| / ||y||."""
     return jnp.linalg.norm(pred - truth) / jnp.linalg.norm(truth)

@@ -218,6 +218,30 @@ def build_partition_sequential(
     return x_cur, PartitionTree(perm, tuple(dirs), tuple(thrs))
 
 
+def rescale_tree(tree: PartitionTree, scale: Array | float) -> PartitionTree:
+    """The tree ``build_partition(x * scale)`` would produce, for free.
+
+    Random-projection partitioning is *scale invariant*: the per-node
+    directions depend only on the PRNG key (unit normals), every projected
+    coordinate scales by the positive factor, and argsort of a positively
+    scaled sequence is the argsort of the original — so the permutation
+    and directions are IDENTICAL and only the median thresholds pick up
+    the factor.  This is what lets the hyperparameter sweep engine
+    (``repro.core.hck.SweepPlan``) reuse one partition and one landmark
+    draw across every bandwidth of a σ-grid: folding σ into the data as
+    ``x / σ`` never changes the tree topology.  (PCA directions are unit
+    singular vectors of the scaled blocks, so the same argument applies.)
+
+    ``scale`` must be a positive scalar; the property test in
+    ``test_partition_properties.py`` checks this against an actual
+    rebuild.  Routing scaled queries through the returned tree matches
+    routing unscaled queries through the original.
+    """
+    return PartitionTree(
+        tree.perm, tree.directions,
+        tuple(t * scale for t in tree.thresholds))
+
+
 @jax.jit
 def route(tree: PartitionTree, queries: Array) -> Array:
     """Leaf index for each query point: (q, d) -> (q,) int32.

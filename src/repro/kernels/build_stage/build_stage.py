@@ -22,6 +22,15 @@ build engine (``repro.core.hck.build_hck``):
     the native MXU form on TPU, and keep cho_solve-grade accuracy (the
     factored form does not square the condition number).
 
+Both kernels also come in *distance-cached* form for the hyperparameter
+sweep engine (``gram_chol_dist_kernel`` / ``cross_solve_dist_kernel``):
+the pairwise metric distances are bandwidth-independent, so a σ-grid
+computes them once and each per-σ program skips the distance pass —
+loading the precomputed (m, m) / (bm, r) distance tile from HBM and
+running only the elementwise kernel nonlinearity plus the factorize /
+project epilogue.  That converts the per-grid-point cost from O(m d) MXU
+distance work + O(m^3/3) factorization into the factorization alone.
+
 The factorization loop is expressed with one-hot masked updates (no
 dynamic slicing), so the same body runs under both the Mosaic compiler
 and interpret mode.  Accumulation dtype follows the input: float32 for
@@ -173,3 +182,97 @@ def cross_solve_kernel(
         out_shape=jax.ShapeDtypeStruct((bsz, m, r), acc),
         interpret=interpret,
     )(points.astype(acc), landmarks.astype(acc), linv.astype(acc))
+
+
+# ---------------------------------------------------------------------------
+# Distance-cached variants (hyperparameter sweep engine)
+# ---------------------------------------------------------------------------
+
+def _gram_chol_dist_body(dist_ref, gram_ref, chol_ref, *, epilogue,
+                         jitter: float, acc):
+    dist = dist_ref[0]                                     # (m, m) cached
+    m = dist.shape[0]
+    eye = (jax.lax.iota(jnp.int32, m)[:, None]
+           == jax.lax.iota(jnp.int32, m)[None, :]).astype(acc)
+    gram = epilogue(dist).astype(acc) + (jitter * m) * eye
+    gram_ref[0] = gram
+    if chol_ref is not None:
+        chol_ref[0] = _cholesky_in_vmem(gram, m, acc)
+
+
+def _cross_solve_dist_body(dist_ref, linv_ref, u_ref, *, epilogue, acc):
+    dist = dist_ref[0]                                     # (bm, r) cached
+    linv = linv_ref[0]                                     # (r, r) lower
+    kxu = epilogue(dist).astype(acc)
+    y = jax.lax.dot_general(                               # K Linv^T
+        kxu, linv, (((1,), (1,)), ((), ())), preferred_element_type=acc)
+    u_ref[0] = jax.lax.dot_general(                        # ... Linv
+        y, linv, (((1,), (0,)), ((), ())), preferred_element_type=acc)
+
+
+@functools.partial(jax.jit, static_argnames=("name", "sigma", "jitter",
+                                             "want_chol", "interpret"))
+def gram_chol_dist_kernel(
+    dist: Array, *, name: str = "gaussian", sigma: float = 1.0,
+    jitter: float = 0.0, want_chol: bool = True, interpret: bool = True,
+) -> tuple[Array, Array | None]:
+    """(B, m, m) cached metric distances -> gram (B, m, m) [+ Cholesky].
+
+    The per-σ program of the sweep engine: elementwise kernel nonlinearity
+    on the precomputed distance tile, size-scaled jitter, in-VMEM
+    right-looking Cholesky.  No distance pass — the MXU work left is the
+    O(m^3/3) factorization.
+    """
+    if name not in SUPPORTED:
+        raise ValueError(f"{name!r} not in {SUPPORTED}")
+    bsz, m, _ = dist.shape
+    acc = _acc_dtype(dist)
+    body = functools.partial(
+        _gram_chol_dist_body, epilogue=kernel_epilogue(name, sigma),
+        jitter=jitter, acc=acc)
+    out_shape = [jax.ShapeDtypeStruct((bsz, m, m), acc)]
+    out_specs = [pl.BlockSpec((1, m, m), lambda i: (i, 0, 0))]
+    if want_chol:
+        out_shape.append(jax.ShapeDtypeStruct((bsz, m, m), acc))
+        out_specs.append(pl.BlockSpec((1, m, m), lambda i: (i, 0, 0)))
+    else:
+        body = functools.partial(
+            lambda inner, d_ref, g_ref: inner(d_ref, g_ref, None), body)
+    out = pl.pallas_call(
+        body,
+        grid=(bsz,),
+        in_specs=[pl.BlockSpec((1, m, m), lambda i: (i, 0, 0))],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(dist.astype(acc))
+    return (out[0], out[1]) if want_chol else (out[0], None)
+
+
+@functools.partial(jax.jit, static_argnames=("name", "sigma", "bm",
+                                             "interpret"))
+def cross_solve_dist_kernel(
+    dist: Array, linv: Array, *, name: str = "gaussian", sigma: float = 1.0,
+    bm: int = 128, interpret: bool = True,
+) -> Array:
+    """(B, m, r) cached distances, (B, r, r) -> U (B, m, r); ``bm`` must
+    divide m (use ops.build_cross_dist for the tile-snapped entry point)."""
+    if name not in SUPPORTED:
+        raise ValueError(f"{name!r} not in {SUPPORTED}")
+    bsz, m, r = dist.shape
+    assert m % bm == 0, (m, bm)
+    acc = _acc_dtype(dist, linv)
+    body = functools.partial(
+        _cross_solve_dist_body, epilogue=kernel_epilogue(name, sigma),
+        acc=acc)
+    return pl.pallas_call(
+        body,
+        grid=(bsz, m // bm),
+        in_specs=[
+            pl.BlockSpec((1, bm, r), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, r, r), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, r), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m, r), acc),
+        interpret=interpret,
+    )(dist.astype(acc), linv.astype(acc))

@@ -21,7 +21,9 @@ import functools
 import jax
 
 from repro.kernels.build_stage.build_stage import (_acc_dtype,
+                                                   cross_solve_dist_kernel,
                                                    cross_solve_kernel,
+                                                   gram_chol_dist_kernel,
                                                    gram_chol_kernel)
 
 Array = jax.Array
@@ -69,3 +71,45 @@ def build_cross(
     return cross_solve_kernel(
         points.astype(ct), landmarks.astype(ct), linv.astype(ct),
         name=name, sigma=sigma, bm=block_m, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("name", "sigma", "jitter",
+                                             "want_chol", "interpret"))
+def build_gram_dist(
+    dist: Array, *, name: str = "gaussian", sigma: float = 1.0,
+    jitter: float = 0.0, want_chol: bool = True, interpret: bool = True,
+) -> tuple[Array, Array | None]:
+    """Per-σ Gram + (optional) Cholesky from cached metric distances.
+
+    (B, m, m) -> gram (B, m, m) = κ_σ(D) + jitter*m I [+ lower Cholesky];
+    the sweep engine computes D once per grid (bandwidth-independent) and
+    re-launches only this nonlinearity + factorization pass per σ.
+    """
+    ct = _acc_dtype(dist)
+    return gram_chol_dist_kernel(
+        dist.astype(ct), name=name, sigma=sigma, jitter=jitter,
+        want_chol=want_chol, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("name", "sigma", "interpret",
+                                             "block_m"))
+def build_cross_dist(
+    dist: Array, linv: Array, *, name: str = "gaussian", sigma: float = 1.0,
+    interpret: bool = True, block_m: int | None = None,
+) -> Array:
+    """Per-σ cross projection from cached metric distances.
+
+    (B, m, r), (B, r, r) -> U (B, m, r) = κ_σ(D) Linv^T Linv with ``Linv``
+    the parent inverse Cholesky factor at this σ; row-tiled at ``block_m``
+    (default from :func:`repro.kernels.registry.tile_config`).
+    """
+    from repro.kernels.registry import tile_config
+
+    _, m, r = dist.shape
+    ct = _acc_dtype(dist, linv)
+    if block_m is None:
+        block_m = tile_config("build_cross_dist", n0=m, r=r, k=r,
+                              itemsize=jax.numpy.dtype(ct).itemsize).block_n0
+    return cross_solve_dist_kernel(
+        dist.astype(ct), linv.astype(ct), name=name, sigma=sigma,
+        bm=block_m, interpret=interpret)

@@ -19,6 +19,18 @@ maps, stacked over all nodes of one tree level:
                      float32 accuracy: each GEMM mirrors one
                      backward-stable substitution.
 
+The hyperparameter-sweep engine (``repro.core.hck.SweepPlan``) adds the
+*distance-cached* variants of both stages: the pairwise metric distances
+(squared L2 for gaussian/imq, L1 for laplace) are computed ONCE per grid —
+they do not depend on the bandwidth — and every per-σ rebuild is just the
+elementwise kernel nonlinearity plus the factorization:
+
+  * ``build_gram_dist``:  D_b (m, m) -> G_b = κ_σ(D_b) + jitter*m I
+                          (+ optional Cholesky), with κ_σ the base-kernel
+                          epilogue at bandwidth σ.
+  * ``build_cross_dist``: D_b (m, r), Linv_b (r, r) ->
+                          U_b = κ_σ(D_b) Linv_b^T Linv_b.
+
 The oracles evaluate the base kernel through ``repro.core.kernels_fn`` so
 they agree bit-for-bit with the pre-engine construction path; float64
 inputs stay float64 (parity-gate grade), sub-f32 inputs promote to f32.
@@ -28,9 +40,38 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernels_fn import get_kernel
+from repro.core.kernels_fn import (KERNEL_METRIC,  # noqa: F401 — re-export
+                                   _sqdist, get_kernel)
 
 Array = jax.Array
+
+
+def pairwise_dist_ref(x: Array, y: Array, metric: str) -> Array:
+    """Batched metric distances: (B, m, d), (B, r, d) -> (B, m, r).
+
+    ``"l2"`` is the SQUARED Euclidean distance via the matmul identity
+    (exactly :func:`repro.core.kernels_fn._sqdist`, so the cached pass
+    matches the fused one bit-for-bit); ``"l1"`` is the Manhattan distance.
+    This is the once-per-grid O(n d r) pass of the sweep engine.
+    """
+    if metric == "l1":
+        return jax.vmap(lambda a, b: jnp.sum(
+            jnp.abs(a[:, None, :] - b[None, :, :]), axis=-1))(x, y)
+    if metric == "l2":
+        return jax.vmap(_sqdist)(x, y)
+    raise ValueError(f"unknown metric {metric!r}; have ('l2', 'l1')")
+
+
+def dist_epilogue(name: str, sigma: float):
+    """Cached distance -> kernel value, matching ``kernels_fn`` formulas
+    exactly (the imq case uses 1/sqrt, not rsqrt, for oracle-grade f64)."""
+    if name == "gaussian":
+        return lambda d2: jnp.exp(d2 * (-0.5 / (sigma * sigma)))
+    if name == "imq":
+        return lambda d2: sigma / jnp.sqrt(d2 + sigma * sigma)
+    if name == "laplace":
+        return lambda d1: jnp.exp(-d1 / sigma)
+    raise ValueError(f"unsupported kernel {name!r}")
 
 
 def _f(a: Array) -> Array:
@@ -70,5 +111,42 @@ def build_cross_ref(
     pts, lm, li = _f(points), _f(landmarks), _f(linv)
     fn = get_kernel(name)
     kxu = jax.vmap(lambda p, z: fn(p, z, sigma=sigma))(pts, lm)  # (B, m, r)
+    y = jnp.einsum("bmr,bsr->bms", kxu, li)        # K Linv^T
+    return jnp.einsum("bms,bsr->bmr", y, li)       # ... Linv
+
+
+def build_gram_dist_ref(
+    dist: Array, *, name: str = "gaussian", sigma: float = 1.0,
+    jitter: float = 0.0, want_chol: bool = True,
+) -> tuple[Array, Array | None]:
+    """(B, m, m) cached metric distances -> gram (B, m, m) [+ Cholesky].
+
+    The per-σ half of the sweep engine's ``build_gram``: apply the
+    bandwidth nonlinearity elementwise to the precomputed distance tile,
+    add the size-scaled jitter, factorize.  With ``dist`` produced by
+    :func:`pairwise_dist_ref` on the same blocks, the result matches
+    :func:`build_gram_ref` on the raw points.
+    """
+    d = _f(dist)
+    _, m, _ = d.shape
+    gram = dist_epilogue(name, sigma)(d)
+    gram = gram + (jitter * m) * jnp.eye(m, dtype=gram.dtype)
+    if not want_chol:
+        return gram, None
+    return gram, jnp.linalg.cholesky(gram)
+
+
+def build_cross_dist_ref(
+    dist: Array, linv: Array, *, name: str = "gaussian", sigma: float = 1.0,
+) -> Array:
+    """(B, m, r) cached distances, (B, r, r) -> U (B, m, r).
+
+    The per-σ half of the sweep engine's ``build_cross``:
+    ``U_b = κ_σ(D_b) Linv_b^T Linv_b`` with ``Linv_b`` the inverse
+    Cholesky factor of the parent middle factor AT THIS σ (the factor
+    chain is σ-dependent; only the distances are cached).
+    """
+    d, li = _f(dist), _f(linv)
+    kxu = dist_epilogue(name, sigma)(d)
     y = jnp.einsum("bmr,bsr->bms", kxu, li)        # K Linv^T
     return jnp.einsum("bms,bsr->bmr", y, li)       # ... Linv

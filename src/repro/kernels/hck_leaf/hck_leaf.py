@@ -154,6 +154,74 @@ def hck_leaf_solve(
 
 
 # ---------------------------------------------------------------------------
+# Leaf Schur-complement factorization (Algorithm 2 inversion)
+# ---------------------------------------------------------------------------
+
+def _tri_inv_in_vmem(lo: Array, m: int, acc) -> Array:
+    """Inverse of a lower-triangular (m, m) tile via one-hot forward
+    substitution.
+
+    Row ``i`` of ``X = lo^{-1}`` solves ``lo[i, i] X[i, :] = e_i -
+    lo[i, :] X`` where the contraction only touches the already-computed
+    rows < i.  Like the Cholesky loop, every step is a one-hot masked
+    rank-1 update — no dynamic slicing, so the same body lowers under
+    Mosaic and interpret mode.  O(m^3/2) flops over an m-step loop.
+    """
+    rows = jax.lax.iota(jnp.int32, m)
+
+    def body(i, x):
+        ei = (rows == i).astype(acc)                       # one-hot (m,)
+        lrow = ei @ lo                                     # row i of lo
+        s = lrow @ x                                       # uses rows < i
+        pivot = lrow @ ei                                  # lo[i, i]
+        newrow = (ei - s) / pivot
+        return x + ei[:, None] * newrow[None, :]
+
+    return jax.lax.fori_loop(0, m, body, jnp.zeros((m, m), acc))
+
+
+def _factor_body(dleaf_ref, lo_ref, linv_ref, *, acc):
+    from repro.kernels.build_stage.build_stage import _cholesky_in_vmem
+
+    d = dleaf_ref[0]                                       # (n0, n0) SPD
+    m = d.shape[0]
+    lo = _cholesky_in_vmem(d, m, acc)
+    lo_ref[0] = lo
+    linv_ref[0] = _tri_inv_in_vmem(lo, m, acc)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hck_leaf_factor(
+    dleaf: Array, *, interpret: bool = True,
+) -> tuple[Array, Array]:
+    """Fused leaf factorization: Cholesky + triangular inverse in VMEM.
+
+    (P, n0, n0) SPD leaf Schur complements -> (lo, linv), both (P, n0, n0)
+    lower triangular with ``linv = lo^{-1}`` (so ``D^{-1} = linv^T linv``).
+    One program per leaf; the (n0, n0) tile never round-trips to HBM
+    between factorization and inversion.  Grid-batched over all leaves —
+    ``invert_multi`` stacks a whole (ridge-grid x leaves) batch into one
+    launch.
+    """
+    p, n0, _ = dleaf.shape
+    acc = _acc_dtype(dleaf)
+    return pl.pallas_call(
+        functools.partial(_factor_body, acc=acc),
+        grid=(p,),
+        in_specs=[pl.BlockSpec((1, n0, n0), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, n0, n0), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n0, n0), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, n0, n0), acc),
+            jax.ShapeDtypeStruct((p, n0, n0), acc),
+        ],
+        interpret=interpret,
+    )(dleaf)
+
+
+# ---------------------------------------------------------------------------
 # Leaf projection (OOS / distributed upward pass)
 # ---------------------------------------------------------------------------
 

@@ -12,9 +12,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.hck_leaf.hck_leaf import (hck_leaf_matvec, hck_leaf_project,
-                                             hck_leaf_solve)
-from repro.kernels.hck_leaf.ref import (hck_leaf_matvec_ref,
+from repro.kernels.hck_leaf.hck_leaf import (hck_leaf_factor, hck_leaf_matvec,
+                                             hck_leaf_project, hck_leaf_solve)
+from repro.kernels.hck_leaf.ref import (hck_leaf_factor_ref,
+                                        hck_leaf_matvec_ref,
                                         hck_leaf_project_ref,
                                         hck_leaf_solve_ref)
 
@@ -57,6 +58,17 @@ def leaf_solve(
     return hck_leaf_solve(
         linv.astype(ct), u.astype(ct), sig.astype(ct), b.astype(ct),
         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def leaf_factor(
+    dleaf: Array, *, interpret: bool = True, use_pallas: bool = True,
+) -> tuple[Array, Array]:
+    """Fused leaf Schur-complement factorization (Cholesky + its inverse)."""
+    if not use_pallas:
+        return hck_leaf_factor_ref(dleaf)
+    ct = _compute_dtype(dleaf)
+    return hck_leaf_factor(dleaf.astype(ct), interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))

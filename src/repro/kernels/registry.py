@@ -33,11 +33,14 @@ BACKENDS = ("xla", "pallas")
 STAGES = (
     "leaf_matvec",     # y_i = A_ii b_i            ; c_i = U_i^T b_i
     "leaf_solve",      # x_i = A_ii^{-1} b_i (+lr) ; c_i = U_i^T b_i
+    "leaf_factor",     # D_i -> chol(D_i), chol(D_i)^{-1}  (Algorithm-2 inv)
     "leaf_project",    # c_i = U_i^T b_i           (OOS common-upward)
     "oos_local",       # z_i = w_i^T k(Xleaf_i, x_i)   (Algorithm-3 exact term)
     "oos_walk",        # z_i = c~_i^T k(Xl_i, x_i)     (flattened root path)
     "build_gram",      # G_b = K(P_b, P_b)+jit I (+Cholesky)  (Algorithm 2)
     "build_cross",     # U_b = K(P_b, Z_b) Sigma_b^{-1}       (Algorithm 2)
+    "build_gram_dist",  # G_b = κ_σ(D_b)+jit I (+Chol)  (sweep engine, per σ)
+    "build_cross_dist",  # U_b = κ_σ(D_b) Sigma_b^{-1}  (sweep engine, per σ)
     "pairwise_kernel",  # K(X, Y) tiles            (kernel_tile)
     "attention",        # flash attention          (flash_attention)
     "ssd_intra_chunk",  # SSD intra-chunk scan     (ssd_chunk)
@@ -48,8 +51,11 @@ STAGES = (
 OOS_STAGES = ("oos_local", "oos_walk")
 
 #: construction-engine stages: per-node blocks stacked over one tree level
-#: (the batched Algorithm-2 build; see repro.kernels.build_stage).
-BUILD_STAGES = ("build_gram", "build_cross")
+#: (the batched Algorithm-2 build; see repro.kernels.build_stage).  The
+#: ``*_dist`` variants consume precomputed bandwidth-independent distance
+#: tiles instead of raw points (the sweep engine's per-σ pass).
+BUILD_STAGES = ("build_gram", "build_cross",
+                "build_gram_dist", "build_cross_dist")
 
 
 # ---------------------------------------------------------------------------
@@ -131,14 +137,24 @@ def tile_config(stage: str, *, n0: int, r: int, k: int, d: int = 0,
     returned config reports whether that working set fits).  ``build_cross``
     row-tiles the node block like the leaf stages: pts (bn, d) + parent
     landmarks (r, d) + parent inverse Cholesky factor (r, r) + out (bn, r).
+    The distance-cached sweep variants follow the same split with the point
+    blocks replaced by distance tiles: ``build_gram_dist`` holds dist +
+    gram + Cholesky (3 n0^2), ``build_cross_dist`` holds dist (bn, r) +
+    Linv (r, r) + out (bn, r).  ``leaf_factor`` factorizes the whole (n0,
+    n0) leaf Schur tile in place (dist-in, chol + inverse out: 3 n0^2).
     """
 
-    if stage == "build_gram":
-        usage_g = (n0 * d + 2 * n0 * n0) * itemsize
+    if stage in ("build_gram", "build_gram_dist", "leaf_factor"):
+        if stage == "build_gram":
+            usage_g = (n0 * d + 2 * n0 * n0) * itemsize
+        else:   # dist tile (or SPD tile) in, two (n0, n0) factors out
+            usage_g = 3 * n0 * n0 * itemsize
         return TileConfig(n0, usage_g)
 
-    if stage == "build_cross":
+    if stage in ("build_cross", "build_cross_dist"):
         def usage(bn: int) -> int:
+            if stage == "build_cross_dist":
+                return (2 * bn * r + r * r) * itemsize
             return (bn * (d + r) + r * d + r * r) * itemsize
 
         def snap(bn: int) -> int:
@@ -245,11 +261,13 @@ def resolve_backend(config: SolveConfig | None, stage: str, *,
     row-tiles over the query batch, so any contraction size that meets the
     sublane granularity qualifies.
 
-    The construction stages (``build_gram`` / ``build_cross``) follow the
-    leaf-stage rules with ``n0`` meaning the per-node block row count (the
-    node/landmark block size); ``build_gram`` factorizes the whole (n0,
-    n0) Gram tile per program, so — like ``leaf_solve`` — it additionally
-    requires the whole-node working set to fit the VMEM budget.
+    The construction stages (``build_gram`` / ``build_cross`` and their
+    distance-cached ``*_dist`` sweep variants) follow the leaf-stage rules
+    with ``n0`` meaning the per-node block row count (the node/landmark
+    block size); ``build_gram``/``build_gram_dist`` factorize the whole
+    (n0, n0) Gram tile per program and ``leaf_factor`` the whole leaf
+    Schur tile, so — like ``leaf_solve`` — they additionally require the
+    whole-node working set to fit the VMEM budget.
     """
     config = config or DEFAULT_CONFIG
     if config.backend != "auto":
@@ -262,7 +280,8 @@ def resolve_backend(config: SolveConfig | None, stage: str, *,
         return "xla"
     if n0 % config.min_pallas_leaf != 0:
         return "xla"
-    if stage in ("leaf_solve", "build_gram"):
+    if stage in ("leaf_solve", "build_gram", "build_gram_dist",
+                 "leaf_factor"):
         whole = tile_config(stage, n0=n0, r=r, k=k, d=d,
                             itemsize=jnp.dtype(dtype).itemsize,
                             leaf_block=n0)
@@ -317,6 +336,21 @@ def _leaf_project_xla(u, b, *, interpret: bool = True):
     return hck_leaf_project_ref(u, b).astype(b.dtype)
 
 
+@register("leaf_factor", "xla")
+def _leaf_factor_xla(dleaf, *, interpret: bool = True):
+    """(P,n0,n0) SPD -> (chol, chol^{-1}), both (P,n0,n0) lower.
+
+    The leaf Schur-complement factorization of Algorithm 2 (inversion),
+    batched over leaves — and, via ``hmatrix.invert_multi``, over a whole
+    (ridge-grid x leaves) stack in one call.
+    """
+    del interpret
+    from repro.kernels.hck_leaf.ref import hck_leaf_factor_ref
+
+    lo, linv = hck_leaf_factor_ref(dleaf)
+    return lo.astype(dleaf.dtype), linv.astype(dleaf.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Pallas implementations — lazy imports so plain-XLA users never pay the
 # pallas import, and so this module has no import cycle with the kernel
@@ -343,6 +377,13 @@ def _leaf_project_pallas(u, b, *, interpret: bool = True):
     from repro.kernels.hck_leaf.ops import leaf_project
 
     return leaf_project(u, b, interpret=interpret)
+
+
+@register("leaf_factor", "pallas")
+def _leaf_factor_pallas(dleaf, *, interpret: bool = True):
+    from repro.kernels.hck_leaf.ops import leaf_factor
+
+    return leaf_factor(dleaf, interpret=interpret)
 
 
 @register("oos_local", "xla")
@@ -415,6 +456,30 @@ def _build_cross_xla(points, landmarks, linv, *, name="gaussian",
                            sigma=sigma).astype(points.dtype)
 
 
+@register("build_gram_dist", "xla")
+def _build_gram_dist_xla(dist, *, name="gaussian", sigma=1.0, jitter=0.0,
+                         want_chol=True, interpret: bool = True):
+    """(B,m,m) cached distances -> gram κ_σ(D)+jit I [, Cholesky or None]."""
+    del interpret
+    from repro.kernels.build_stage.ref import build_gram_dist_ref
+
+    gram, chol = build_gram_dist_ref(dist, name=name, sigma=sigma,
+                                     jitter=jitter, want_chol=want_chol)
+    return gram.astype(dist.dtype), (
+        None if chol is None else chol.astype(dist.dtype))
+
+
+@register("build_cross_dist", "xla")
+def _build_cross_dist_xla(dist, linv, *, name="gaussian", sigma=1.0,
+                          interpret: bool = True):
+    """(B,m,r) cached distances, (B,r,r) -> U = κ_σ(D) Linv^T Linv."""
+    del interpret
+    from repro.kernels.build_stage.ref import build_cross_dist_ref
+
+    return build_cross_dist_ref(dist, linv, name=name,
+                                sigma=sigma).astype(dist.dtype)
+
+
 @register("build_gram", "pallas")
 def _build_gram_pallas(points, *, name="gaussian", sigma=1.0, jitter=0.0,
                        want_chol=True, interpret: bool = True):
@@ -422,6 +487,25 @@ def _build_gram_pallas(points, *, name="gaussian", sigma=1.0, jitter=0.0,
 
     return build_gram(points, name=name, sigma=sigma, jitter=jitter,
                       want_chol=want_chol, interpret=interpret)
+
+
+@register("build_gram_dist", "pallas")
+def _build_gram_dist_pallas(dist, *, name="gaussian", sigma=1.0, jitter=0.0,
+                            want_chol=True, interpret: bool = True):
+    from repro.kernels.build_stage.ops import build_gram_dist
+
+    return build_gram_dist(dist, name=name, sigma=sigma, jitter=jitter,
+                           want_chol=want_chol, interpret=interpret)
+
+
+@register("build_cross_dist", "pallas")
+def _build_cross_dist_pallas(dist, linv, *, name="gaussian", sigma=1.0,
+                             interpret: bool = True,
+                             block_m: int | None = None):
+    from repro.kernels.build_stage.ops import build_cross_dist
+
+    return build_cross_dist(dist, linv, name=name, sigma=sigma,
+                            interpret=interpret, block_m=block_m)
 
 
 @register("build_cross", "pallas")

@@ -14,6 +14,15 @@ Algorithm-2 build engine, selecting the stage backends with
   PYTHONPATH=src python -m repro.launch.train --task krr --n 65536 \
       --rank 256 --solve-backend auto --stream
 
+``--task krr --grid``: hyperparameter sweep over a σ×λ grid through the
+sweep engine — ONE partition + distance pass (SweepPlan), per σ one
+factor-instantiation launch, per σ ALL λ inverted together
+(invert_multi), validation scores for the whole λ-axis in one
+Algorithm-3 pass.  Reports the surface and the selected (σ, λ).
+
+  PYTHONPATH=src python -m repro.launch.train --task krr --grid \
+      --n 16384 --rank 64 --sigmas 0.5,1,2,4 --lams 1e-4,1e-3,1e-2,1e-1
+
 On the cluster this binary runs once per host under the standard multi-host
 bootstrap (jax.distributed.initialize from env); in the container it runs
 the same step function on the local device.  ``--reduced`` selects the
@@ -76,6 +85,65 @@ def run_krr(args):
           f"({args.n / t_fit:,.0f} points/s), train rel-err {float(err):.4f}")
 
 
+def run_krr_grid(args):
+    """σ×λ grid search through the sweep engine (SweepPlan + fit_path)."""
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.core import krr
+    from repro.core.hck import build_sweep_plan, sweep_factors
+    from repro.core.kernels_fn import BaseKernel
+    from repro.core.partition import auto_levels_ceil, pad_points
+    from repro.kernels.registry import SolveConfig
+
+    cfg = SolveConfig(backend=args.solve_backend)
+    sigmas = [float(s) for s in args.sigmas.split(",")]
+    lams = jnp.asarray([float(v) for v in args.lams.split(",")])
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (args.n, args.d))
+    y = jnp.sin(x[:, 0]) + 0.25 * jnp.cos(2.0 * x[:, 1])
+    xv = jax.random.normal(jax.random.PRNGKey(7), (args.val, args.d))
+    yv = jnp.sin(xv[:, 0]) + 0.25 * jnp.cos(2.0 * xv[:, 1])
+    # same sizing + padding rule as krr.fit, so any --n works
+    levels = max(1, auto_levels_ceil(args.n, args.rank))
+    x, y, _ = pad_points(x, y, args.rank, levels, jax.random.PRNGKey(3))
+
+    t0 = time.perf_counter()
+    plan = build_sweep_plan(x, levels=levels, rank=args.rank,
+                            key=jax.random.PRNGKey(1))
+    jax.block_until_ready(plan.leaf_self)
+    t_plan = time.perf_counter() - t0
+
+    # per σ: one factor instantiation, then the whole λ-axis through
+    # fit_path (multi-ridge inversion + one-OOS-pass validation scores)
+    paths = []
+    t0 = time.perf_counter()
+    for s in sigmas:
+        ker = BaseKernel("gaussian", sigma=s)
+        paths.append(krr.fit_path(
+            x, y, kernel=ker, lams=lams, solve_config=cfg,
+            factors=sweep_factors(plan, ker, cfg), x_val=xv, y_val=yv))
+    jax.block_until_ready(paths[-1].scores)
+    t_grid = time.perf_counter() - t0
+
+    n_pts = len(sigmas) * int(lams.shape[0])
+    print(f"sweep n={x.shape[0]} rank={args.rank} grid={len(sigmas)}x"
+          f"{int(lams.shape[0])} backend={args.solve_backend}: "
+          f"plan {t_plan:.2f} s + grid {t_grid:.2f} s "
+          f"({n_pts / (t_plan + t_grid):.2f} grid points/s)")
+    for s, path in zip(sigmas, paths):
+        row = "  ".join(f"{float(e):.4f}" for e in path.scores)
+        print(f"  sigma={s:<8g} val-relerr per lam: {row}")
+    i_best = min(range(len(sigmas)),
+                 key=lambda i: float(jnp.min(paths[i].scores)))
+    g_best = int(jnp.argmin(paths[i_best].scores))
+    model = paths[i_best].best()
+    err = krr.relative_error(model.predict(xv), yv)
+    print(f"best: sigma={sigmas[i_best]} lam={float(lams[g_best])} "
+          f"val-relerr {float(err):.4f}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--task", choices=["lm", "krr"], default="lm")
@@ -105,10 +173,22 @@ def main():
                     help="ingest through the chunked host-resident pipeline")
     ap.add_argument("--leaf-batch", type=int, default=64,
                     help="leaves staged per device launch when streaming")
+    ap.add_argument("--grid", action="store_true",
+                    help="σ×λ grid search through the sweep engine "
+                         "(krr task)")
+    ap.add_argument("--sigmas", default="0.5,1,2,4",
+                    help="comma-separated bandwidth grid (with --grid)")
+    ap.add_argument("--lams", default="1e-4,1e-3,1e-2,1e-1",
+                    help="comma-separated ridge grid (with --grid)")
+    ap.add_argument("--val", type=int, default=2048,
+                    help="validation points for --grid scoring")
     args = ap.parse_args()
 
     if args.task == "krr":
-        run_krr(args)
+        if args.grid:
+            run_krr_grid(args)
+        else:
+            run_krr(args)
         return
     if not args.arch:
         ap.error("--arch is required for --task lm")

@@ -9,7 +9,7 @@ import pytest
 from repro.core.kernels_fn import BaseKernel
 from repro.core.partition import (PartitionTree, auto_levels, build_partition,
                                   build_partition_sequential, pad_points,
-                                  route)
+                                  rescale_tree, route)
 
 SETTINGS = dict(max_examples=8, deadline=None)
 
@@ -183,6 +183,34 @@ def test_auto_levels_eq22():
     assert auto_levels(1024, 128) == 3
     assert auto_levels(1023, 128) == 2
     assert auto_levels(128, 128) == 0
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       levels=st.integers(1, 4),
+       d=st.integers(1, 6),
+       scale=st.floats(0.05, 20.0))
+@settings(**SETTINGS)
+def test_partition_scale_invariance(seed, levels, d, scale):
+    """σ-sweep tree reuse: scaling the inputs by a positive factor under
+    one key yields the IDENTICAL permutation and directions, with only the
+    thresholds scaled — exactly what rescale_tree predicts.  This is the
+    invariance the sweep engine's one-partition-per-grid design rests on
+    (folding σ into the data never changes the tree topology)."""
+    n = 16 * (1 << levels)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    key = jax.random.PRNGKey(seed + 1)
+    xs, tree = build_partition(x, levels, key)
+    xs2, tree2 = build_partition(x * scale, levels, key)
+    np.testing.assert_array_equal(np.asarray(tree.perm),
+                                  np.asarray(tree2.perm))
+    for a, b in zip(tree.directions, tree2.directions):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    predicted = rescale_tree(tree, scale)
+    for a, b in zip(predicted.thresholds, tree2.thresholds):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+    np.testing.assert_allclose(np.asarray(xs2), np.asarray(xs) * scale,
+                               rtol=1e-5, atol=1e-6)
 
 
 @given(seed=st.integers(0, 2**31 - 1),

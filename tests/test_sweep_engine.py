@@ -1,0 +1,249 @@
+"""Hyperparameter sweep engine: σ-axis reuse, λ-axis batching, API layer.
+
+Oracles: ``build_hck`` (the sweep's distance-cached factors must reproduce
+a fresh per-σ build under the same key), a Python loop of ``invert`` (the
+multi-ridge inversion must reproduce it per grid point), and the dense
+``slogdet``/``cho_solve`` paths (f64, Algorithm-2 grade).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gp, hmatrix, krr
+from repro.core.hck import (build_hck, build_sweep_plan, sweep_factors,
+                            to_dense)
+from repro.core.kernels_fn import BaseKernel
+from repro.kernels.registry import SolveConfig
+
+RIDGES = [1e-3, 1e-2, 1e-1, 1.0]
+
+
+def _factors_equal(fa, fb, atol):
+    np.testing.assert_array_equal(np.asarray(fa.x_sorted),
+                                  np.asarray(fb.x_sorted))
+    np.testing.assert_allclose(np.asarray(fa.adiag), np.asarray(fb.adiag),
+                               atol=atol)
+    np.testing.assert_allclose(np.asarray(fa.u), np.asarray(fb.u), atol=atol)
+    for name in ("sigma", "sigma_cho", "w"):
+        for a, b in zip(getattr(fa, name), getattr(fb, name)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# σ-axis: distance-cached factor instantiation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("name", ["gaussian", "laplace", "imq"])
+def test_sweep_factors_match_build_hck(f64, backend, name):
+    """One plan serves every bandwidth: sweep_factors(plan, k_sigma) must
+    reproduce build_hck(x, kernel=k_sigma) under the shared key for every
+    supported base kernel and backend."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 5), dtype=jnp.float64)
+    key = jax.random.PRNGKey(1)
+    cfg = SolveConfig(backend=backend)
+    plan = build_sweep_plan(x, levels=3, rank=8, key=key, name=name)
+    for sigma in (0.7, 2.0):
+        ker = BaseKernel(name, sigma=sigma, jitter=1e-8)
+        f_sweep = sweep_factors(plan, ker, cfg)
+        f_ref = build_hck(x, levels=3, rank=8, key=key, kernel=ker,
+                          config=cfg)
+        _factors_equal(f_sweep, f_ref, atol=1e-10)
+
+
+def test_sweep_plan_rejects_metric_mismatch(f64):
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 3), dtype=jnp.float64)
+    plan = build_sweep_plan(x, levels=2, rank=8, key=jax.random.PRNGKey(1),
+                            name="gaussian")
+    with pytest.raises(ValueError, match="metric"):
+        sweep_factors(plan, BaseKernel("laplace", sigma=1.0))
+
+
+def test_sweep_plan_rejects_unsweepable_kernel(f64):
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 3), dtype=jnp.float64)
+    with pytest.raises(ValueError, match="metric"):
+        build_sweep_plan(x, levels=2, rank=8, key=jax.random.PRNGKey(1),
+                         name="matern")
+
+
+def test_sweep_factors_shared_landmarks(f64):
+    """§4.2 shared-landmark (flat compositional) builds sweep too."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (128, 3), dtype=jnp.float64)
+    key = jax.random.PRNGKey(3)
+    plan = build_sweep_plan(x, levels=2, rank=8, key=key,
+                            shared_landmarks=True)
+    ker = BaseKernel("gaussian", sigma=1.3, jitter=1e-8)
+    f_sweep = sweep_factors(plan, ker)
+    f_ref = build_hck(x, levels=2, rank=8, key=key, kernel=ker,
+                      shared_landmarks=True)
+    _factors_equal(f_sweep, f_ref, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# λ-axis: multi-ridge inversion and the logdet byproduct
+# ---------------------------------------------------------------------------
+
+def test_logdet_matches_dense_slogdet_over_ridge_grid(small_problem):
+    """Structured logdet == dense slogdet oracle across a ridge grid (f64),
+    through the SolveConfig-threaded signature."""
+    _, _, f = small_problem
+    a = to_dense(f)
+    eye = jnp.eye(f.n, dtype=a.dtype)
+    cfg = SolveConfig(backend="xla")
+    for ridge in RIDGES:
+        got = float(hmatrix.logdet(f, ridge=ridge, config=cfg))
+        _, want = jnp.linalg.slogdet(a + ridge * eye)
+        assert abs(got - float(want)) < 1e-8 * max(1.0, abs(float(want)))
+
+
+def test_invert_multi_bit_matches_invert_loop(small_problem):
+    """invert_multi(ridges)[g] reproduces invert(ridges[g]) exactly: the
+    stacked leaf_factor launch and the per-ridge tail run the same ops on
+    the same blocks, so the grid axis must introduce no drift at all."""
+    _, _, f = small_problem
+    ridges = jnp.asarray(RIDGES, dtype=jnp.float64)
+    multi = hmatrix.invert_multi(f, ridges)
+    for g, ridge in enumerate(RIDGES):
+        one = hmatrix.invert(f, ridge)
+        np.testing.assert_array_equal(np.asarray(multi.adiag[g]),
+                                      np.asarray(one.adiag))
+        np.testing.assert_array_equal(np.asarray(multi.u[g]),
+                                      np.asarray(one.u))
+        np.testing.assert_array_equal(np.asarray(multi.linv[g]),
+                                      np.asarray(one.linv))
+        for a, b in zip(multi.sigma, one.sigma):
+            np.testing.assert_array_equal(np.asarray(a[g]), np.asarray(b))
+        for a, b in zip(multi.w, one.w):
+            np.testing.assert_array_equal(np.asarray(a[g]), np.asarray(b))
+        assert float(multi.logabsdet[g]) == float(one.logabsdet)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_invert_multi_solves_against_dense(small_problem, backend):
+    """Every grid point's inverse actually inverts: (K + λI) x == b against
+    the dense oracle, on both leaf_factor backends."""
+    _, _, f = small_problem
+    cfg = SolveConfig(backend=backend)
+    a = to_dense(f)
+    b = jax.random.normal(jax.random.PRNGKey(7), (f.n,), dtype=jnp.float64)
+    ridges = jnp.asarray(RIDGES, dtype=jnp.float64)
+    invs = hmatrix.invert_multi(f, ridges, cfg)
+    for g, ridge in enumerate(RIDGES):
+        inv_g = jax.tree_util.tree_map(lambda x, g=g: x[g], invs)
+        x = hmatrix.apply_inverse(inv_g, b, cfg)
+        want = jnp.linalg.solve(a + ridge * jnp.eye(f.n, dtype=a.dtype), b)
+        resid = float(jnp.linalg.norm(x - want) / jnp.linalg.norm(want))
+        assert resid < 1e-6, (backend, ridge, resid)
+
+
+def test_invert_multi_levels_zero(f64):
+    """The dense 0-level degenerate case batches over ridges too."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 3), dtype=jnp.float64)
+    ker = BaseKernel("gaussian", sigma=1.0, jitter=1e-8)
+    f = build_hck(x, levels=0, rank=0, key=jax.random.PRNGKey(1), kernel=ker)
+    ridges = jnp.asarray(RIDGES, dtype=jnp.float64)
+    multi = hmatrix.invert_multi(f, ridges)
+    for g, ridge in enumerate(RIDGES):
+        one = hmatrix.invert(f, ridge)
+        np.testing.assert_allclose(np.asarray(multi.adiag[g]),
+                                   np.asarray(one.adiag), atol=1e-12)
+        assert abs(float(multi.logabsdet[g] - one.logabsdet)) < 1e-10
+
+
+def test_invert_multi_rejects_non_1d(small_problem):
+    _, _, f = small_problem
+    with pytest.raises(ValueError, match="1-D"):
+        hmatrix.invert_multi(f, jnp.ones((2, 2), dtype=jnp.float64))
+
+
+# ---------------------------------------------------------------------------
+# API layer: fit_path, mle_grid, mle_objective
+# ---------------------------------------------------------------------------
+
+def test_fit_path_matches_per_lambda_fits(f64):
+    """The regularization path reproduces fit() per λ and scores every λ
+    on the validation set in one OOS pass."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 4), dtype=jnp.float64)
+    y = jnp.sin(x[:, 0]) + 0.25 * jnp.cos(2.0 * x[:, 1])
+    xv = jax.random.normal(jax.random.PRNGKey(9), (64, 4), dtype=jnp.float64)
+    yv = jnp.sin(xv[:, 0]) + 0.25 * jnp.cos(2.0 * xv[:, 1])
+    ker = BaseKernel("gaussian", sigma=1.5)
+    key = jax.random.PRNGKey(5)
+    lams = [1e-3, 1e-1]
+    path = krr.fit_path(x, y, kernel=ker, lams=lams, rank=16, key=key,
+                        x_val=xv, y_val=yv)
+    assert path.scores.shape == (2,)
+    for g, lam in enumerate(lams):
+        m = krr.fit(x, y, kernel=ker, lam=lam, rank=16, key=key)
+        np.testing.assert_allclose(np.asarray(path.alphas[g]),
+                                   np.asarray(m.alpha), atol=1e-9)
+        pred_path = path.model(g).predict(xv)
+        pred_fit = m.predict(xv)
+        np.testing.assert_allclose(np.asarray(pred_path),
+                                   np.asarray(pred_fit), atol=1e-9)
+        score = float(krr.relative_error(pred_fit, yv))
+        assert abs(score - float(path.scores[g])) < 1e-9
+    assert float(jnp.min(path.scores)) == pytest.approx(
+        float(krr.relative_error(path.best().predict(xv), yv)), abs=1e-12)
+
+
+def test_fit_path_without_validation(f64):
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 3), dtype=jnp.float64)
+    y = jnp.sin(x[:, 0])
+    path = krr.fit_path(x, y, kernel=BaseKernel("gaussian", sigma=1.0),
+                        lams=[1e-2, 1e-1], rank=8, key=jax.random.PRNGKey(1))
+    assert path.scores is None
+    with pytest.raises(ValueError, match="validation"):
+        path.best()
+    assert path.model(0).predict(x[:16]).shape == (16,)
+
+
+def test_mle_grid_matches_mle_objective(f64):
+    """The σ×λ surface matches the σ-folded per-point objective (the
+    argsort scale-invariance + distance-cache path is exact)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 3), dtype=jnp.float64)
+    y = jnp.sin(x[:, 0])
+    key = jax.random.PRNGKey(5)
+    sigmas, noises = [0.8, 1.6], jnp.asarray([1e-2, 1e-1], dtype=jnp.float64)
+    surf = gp.mle_grid(x, y, levels=2, rank=8, key=key, sigmas=sigmas,
+                       noises=noises)
+    assert surf.shape == (2, 2)
+    nll = gp.mle_objective(x, y, levels=2, rank=8, key=key)
+    for i, s in enumerate(sigmas):
+        for j in range(noises.shape[0]):
+            want = float(nll(jnp.log(s), jnp.log(noises[j])))
+            assert float(surf[i, j]) == pytest.approx(want, rel=1e-9,
+                                                      abs=1e-8)
+
+
+def test_mle_objective_honors_kernel_name(f64):
+    """Regression for the satellite bugfix: `name` used to be ignored and
+    `gaussian` hard-coded; laplace must now produce a different surface."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 3), dtype=jnp.float64)
+    y = jnp.sin(x[:, 0])
+    key = jax.random.PRNGKey(5)
+    nll_g = gp.mle_objective(x, y, levels=2, rank=8, key=key,
+                             name="gaussian")
+    nll_l = gp.mle_objective(x, y, levels=2, rank=8, key=key, name="laplace")
+    a = float(nll_g(jnp.log(1.0), jnp.log(0.1)))
+    b = float(nll_l(jnp.log(1.0), jnp.log(0.1)))
+    assert a != b
+    # the laplace surface must agree with a direct laplace fit NLL
+    ker = BaseKernel("laplace", sigma=1.0)
+    f = build_hck(x, levels=2, rank=8, key=key, kernel=ker)
+    y_sorted = y[f.tree.perm][:, None]
+    inv = hmatrix.invert(f, 0.1)
+    alpha = hmatrix.apply_inverse(inv, y_sorted)
+    want = float(0.5 * jnp.sum(y_sorted[:, 0] * alpha[:, 0])
+                 + 0.5 * inv.logabsdet
+                 + 0.5 * x.shape[0] * jnp.log(2 * jnp.pi))
+    assert b == pytest.approx(want, rel=1e-9)
+
+
+def test_mle_objective_rejects_unfoldable_kernel(f64):
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 3), dtype=jnp.float64)
+    with pytest.raises(ValueError, match="foldable"):
+        gp.mle_objective(x, x[:, 0], levels=2, rank=8,
+                         key=jax.random.PRNGKey(1), name="matern")
