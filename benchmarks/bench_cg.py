@@ -1,0 +1,181 @@
+"""Iterative-solver benchmark: exact-kernel CG iterations-to-tolerance and
+wall time, HCK-preconditioned vs unpreconditioned, emitted as
+machine-readable BENCH_cg.json.
+
+The matvec-free subsystem's trajectory is tracked from this file onward:
+CI runs ``--smoke`` on a tiny float64 problem and gates two things
+(nonzero exit on miss):
+
+  * PARITY — ``krr.fit_exact`` (HCK-preconditioned CG on the chunked
+    exact-kernel operator) matches a dense ``jnp.linalg.solve`` KRR fit
+    to 1e-6, on both xla and pallas(interpret) backends;
+  * PRECONDITIONING — the HCK structured inverse cuts CG
+    iterations-to-tolerance by at least the required ratio (>=4x at the
+    acceptance shapes; the smoke gate uses the same ratio at its
+    smaller size).
+
+Full runs chart iterations, wall time, and the iteration ratio at
+production shapes, plus the EigenPro truncated-spectrum rival.
+
+Usage:
+  python benchmarks/bench_cg.py                       # default (n=4096)
+  python benchmarks/bench_cg.py --smoke               # CI gate (tiny, f64)
+  python benchmarks/bench_cg.py --n 8192 --rank 256 --backends xla
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _problem(n, d, dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d), dtype=dtype)
+    y = jnp.sin(x[:, 0]) + 0.25 * jnp.cos(2.0 * x[:, 1])
+    return x, y
+
+
+def bench_backend(x, y, *, kernel, lam, rank, tol, maxiter, backend,
+                  eigenpro: bool) -> tuple:
+    """Returns (metrics dict, preconditioned ExactKRR model)."""
+    from repro.core import krr
+    from repro.kernels.registry import SolveConfig
+
+    cfg = SolveConfig(backend=backend)
+    out = {"backend": backend}
+
+    t0 = time.perf_counter()
+    m_pc = krr.fit_exact(x, y, kernel=kernel, lam=lam, rank=rank,
+                         key=jax.random.PRNGKey(1), tol=tol,
+                         maxiter=maxiter, solve_config=cfg)
+    jax.block_until_ready(m_pc.alpha)
+    out["pcg_s"] = time.perf_counter() - t0
+    out["pcg_iters"] = int(m_pc.result.iterations)
+    out["pcg_converged"] = bool(m_pc.result.converged)
+    out["pcg_final_rel_residual"] = float(
+        m_pc.result.residuals[out["pcg_iters"]])
+
+    t0 = time.perf_counter()
+    m_pl = krr.fit_exact(x, y, kernel=kernel, lam=lam, rank=rank,
+                         key=jax.random.PRNGKey(1), tol=tol,
+                         maxiter=maxiter, precondition=False,
+                         solve_config=cfg)
+    jax.block_until_ready(m_pl.alpha)
+    out["plain_s"] = time.perf_counter() - t0
+    out["plain_iters"] = int(m_pl.result.iterations)
+    out["plain_converged"] = bool(m_pl.result.converged)
+    out["iteration_ratio"] = out["plain_iters"] / max(out["pcg_iters"], 1)
+
+    if eigenpro:
+        t0 = time.perf_counter()
+        m_ep = krr.fit_exact(x, y, kernel=kernel, lam=lam, rank=rank,
+                             key=jax.random.PRNGKey(1), tol=tol,
+                             maxiter=maxiter, solver="eigenpro",
+                             solve_config=cfg)
+        jax.block_until_ready(m_ep.alpha)
+        out["eigenpro_s"] = time.perf_counter() - t0
+        out["eigenpro_iters"] = int(m_ep.result.iterations)
+        out["eigenpro_converged"] = bool(m_ep.result.converged)
+
+    return out, m_pc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--d", type=int, default=4)
+    ap.add_argument("--rank", type=int, default=128)
+    ap.add_argument("--sigma", type=float, default=2.0)
+    ap.add_argument("--lam", type=float, default=1e-2)
+    ap.add_argument("--tol", type=float, default=1e-6,
+                    help="CG relative-residual target")
+    ap.add_argument("--maxiter", type=int, default=3000)
+    ap.add_argument("--dtype", default="float64",
+                    choices=["float32", "float64"])
+    ap.add_argument("--backends", default="xla")
+    ap.add_argument("--eigenpro", action="store_true",
+                    help="also run the EigenPro rival")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny float64 problem + dense parity/ratio gates")
+    ap.add_argument("--parity-tol", type=float, default=1e-6,
+                    help="smoke-mode alpha tolerance vs the dense solve")
+    ap.add_argument("--min-ratio", type=float, default=4.0,
+                    help="smoke-mode minimum plain/preconditioned "
+                    "iteration ratio")
+    ap.add_argument("--out", default="BENCH_cg.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.n, args.d, args.rank, args.dtype = 1024, 4, 96, "float64"
+        args.tol = 1e-9
+        args.backends = "xla,pallas"
+        args.eigenpro = True
+
+    if args.dtype == "float64":
+        jax.config.update("jax_enable_x64", True)
+    dtype = jnp.dtype(args.dtype)
+
+    from repro.core.kernels_fn import BaseKernel
+
+    x, y = _problem(args.n, args.d, dtype)
+    kernel = BaseKernel("gaussian", sigma=args.sigma, jitter=1e-6)
+
+    report = {
+        "problem": {"n": args.n, "d": args.d, "rank": args.rank,
+                    "sigma": args.sigma, "lam": args.lam, "tol": args.tol,
+                    "dtype": args.dtype, "smoke": args.smoke},
+        "device": str(jax.devices()[0]),
+        "results": [],
+        "checks": {},
+    }
+
+    models = {}
+    for backend in args.backends.split(","):
+        r, m = bench_backend(x, y, kernel=kernel, lam=args.lam,
+                             rank=args.rank, tol=args.tol,
+                             maxiter=args.maxiter, backend=backend.strip(),
+                             eigenpro=args.eigenpro)
+        models[backend.strip()] = m
+        report["results"].append(r)
+        ep = (f"  eigenpro {r['eigenpro_iters']:4d} it"
+              if args.eigenpro else "")
+        print(f"[{r['backend']:>6}] pcg {r['pcg_iters']:4d} it "
+              f"{r['pcg_s']:7.2f} s   plain {r['plain_iters']:4d} it "
+              f"{r['plain_s']:7.2f} s   ratio {r['iteration_ratio']:.1f}x"
+              + ep)
+
+    ok = True
+    if args.smoke:
+        dense = kernel.gram(x) + args.lam * jnp.eye(args.n, dtype=dtype)
+        want = jnp.linalg.solve(dense, y[:, None])
+        for backend, m in models.items():
+            a_err = float(jnp.max(jnp.abs(m.alpha - want)))
+            r = next(e for e in report["results"] if e["backend"] == backend)
+            ratio_ok = r["iteration_ratio"] >= args.min_ratio
+            passed = a_err <= args.parity_tol and ratio_ok
+            ok = ok and passed
+            report["checks"][backend] = {
+                "alpha_max_err_vs_dense": a_err,
+                "parity_tol": args.parity_tol,
+                "iteration_ratio": r["iteration_ratio"],
+                "min_ratio": args.min_ratio,
+                "pass": passed,
+            }
+            print(f"[{backend:>6}] smoke: alpha err {a_err:.2e}  "
+                  f"ratio {r['iteration_ratio']:.1f}x  "
+                  f"{'PASS' if passed else 'FAIL'}")
+
+    report["pass"] = ok
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

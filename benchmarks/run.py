@@ -82,6 +82,22 @@ def main() -> None:
         if rc:
             failed = rc           # parity-gate miss must not exit 0
 
+    if want("cg"):
+        _section("iterative solvers (exact-kernel PCG, BENCH_cg.json)")
+        # subprocess, not import: bench_cg flips jax_enable_x64 globally
+        # for its dense-parity gate, which would re-dtype later sections
+        import pathlib
+        import subprocess
+
+        t0 = time.perf_counter()
+        rc = subprocess.run(
+            [sys.executable,
+             str(pathlib.Path(__file__).parent / "bench_cg.py"),
+             "--smoke", "--out", "BENCH_cg.json"]).returncode
+        summary.append(("bench_cg_smoke", time.perf_counter() - t0))
+        if rc:
+            failed = rc           # parity/ratio-gate miss must not exit 0
+
     if want("cost"):
         _section("cost scaling of Alg 1/2/3 (paper §4.5)")
         from benchmarks import cost_scaling

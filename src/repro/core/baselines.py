@@ -43,11 +43,17 @@ def fit_nystrom(
 ) -> NystromModel:
     """Primal ridge in the Nyström feature space.
 
-    With Phi = K(X, Xl) L^{-T} (L = chol K(Xl,Xl)), solving the r x r system
-    (Phi^T Phi + lam n?) ... we use the standard dual-equivalent form:
+    With Phi = K(X, Xl) L^{-T} (L = chol K(Xl,Xl)), the r x r primal
+    system uses UNSCALED lam —
       beta = L^{-T} (Phi^T Phi + lam I)^{-1} Phi^T y,
-    so predict(x) = k(x, Xl) beta matches (K_nys + lam I)^{-1} applied to y
-    up to the usual Nyström primal/dual equivalence. O(n r^2).
+    which by the push-through identity  Phi^T (Phi Phi^T + lam I)^{-1}
+    = (Phi^T Phi + lam I)^{-1} Phi^T  makes predict(x) = k(x, Xl) beta
+    EXACTLY the dual KRR fit (K_nys + lam I)^{-1} y with K_nys =
+    Phi Phi^T — the same λ convention as the HCK and dense solves, so the
+    Fig-3/5/6 comparisons share one ridge axis.  (A lam·n scaling here
+    would correspond to mean- rather than sum-squared loss; the
+    dense-oracle regression test in tests/test_solvers.py pins this
+    equivalence to float64 round-off.)  O(n r^2).
     """
     n = x.shape[0]
     idx = jax.random.permutation(key, n)[:rank]

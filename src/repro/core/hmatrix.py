@@ -203,6 +203,18 @@ def _stage_leaf_factor(dleaf: Array, r: int,
     return lo.astype(dleaf.dtype), linv.astype(dleaf.dtype)
 
 
+def _invert_level0(f: HCKFactors, ridge: Array | float,
+                   eye_n0: Array) -> InverseFactors:
+    """Degenerate 0-level hierarchy: one dense block, inverted directly.
+
+    Shared by :func:`invert` and (vmapped over the ridge grid)
+    :func:`invert_multi` so the two cannot drift apart.
+    """
+    adiag = f.adiag + ridge * eye_n0
+    _, ld = jnp.linalg.slogdet(adiag[0])
+    return InverseFactors(jnp.linalg.inv(adiag), f.u, (), (), ld)
+
+
 def _leaf_schur(f: HCKFactors) -> Array:
     """Ridge-independent part of the leaf Schur complements:
     ``adiag - U Sigma_parent U^T`` (the ridge adds to the diagonal)."""
@@ -301,9 +313,7 @@ def invert(f: HCKFactors, ridge: Array | float = 0.0,
     eye_n0 = jnp.eye(n0, dtype=f.adiag.dtype)
 
     if levels == 0:
-        adiag = f.adiag + ridge * eye_n0
-        _, ld = jnp.linalg.slogdet(adiag[0])
-        return InverseFactors(jnp.linalg.inv(adiag), f.u, (), (), ld)
+        return _invert_level0(f, ridge, eye_n0)
 
     # D is SPD (leaf Schur complement + ridge): batched Cholesky inverse.
     # linv = L^{-1} is kept so the leaf-solve stage can apply D^{-1} as the
@@ -345,12 +355,7 @@ def invert_multi(f: HCKFactors, ridges: Array,
     ridges = ridges.astype(f.adiag.dtype)
 
     if levels == 0:
-        def dense_one(rr):
-            adiag = f.adiag + rr * eye_n0
-            _, ld = jnp.linalg.slogdet(adiag[0])
-            return InverseFactors(jnp.linalg.inv(adiag), f.u, (), (), ld)
-
-        return jax.vmap(dense_one)(ridges)
+        return jax.vmap(lambda rr: _invert_level0(f, rr, eye_n0))(ridges)
 
     base = _leaf_schur(f)                                    # (2**L, n0, n0)
     dleaf = base[None] + ridges[:, None, None, None] * eye_n0

@@ -1,0 +1,11 @@
+"""Fused exact-kernel matvec stage: z = K(Xc, Y) @ V without storing K.
+
+The leaf primitive of the matvec-free iterative solver subsystem
+(:mod:`repro.solvers`): one row chunk of the kernel matrix is evaluated,
+contracted against the right-hand sides, and discarded — the full
+``(n, n)`` matrix never exists in any memory space.
+"""
+from repro.kernels.matvec_stage.ops import kernel_matvec
+from repro.kernels.matvec_stage.ref import kernel_matvec_ref
+
+__all__ = ["kernel_matvec", "kernel_matvec_ref"]

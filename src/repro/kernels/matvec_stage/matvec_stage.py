@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: fused exact-kernel row-chunk matvec.
+
+One program handles one (bn, bm) tile of the exact kernel matrix
+``K(Xc, Y)``: it forms the pairwise distances (MXU matmul identity for L2
+kernels, VPU broadcast for L1), applies the base-kernel nonlinearity —
+the same epilogue body as ``kernel_tile`` so every Pallas kernel in the
+repo evaluates the base kernels identically — and immediately contracts
+the tile against the (bm, k) slab of right-hand sides on the MXU.  The
+kernel tile lives only in registers/VMEM for the duration of one program:
+K(X, X) is never materialized in HBM, which is the whole point of the
+matvec-free operator (O(n·b) memory for O(n²·d) flops).
+
+Grid: (rows/bn, m/bm), contraction dim innermost so the (bn, k) output
+block stays VMEM-resident across the accumulation (TPU revisiting
+semantics).  Feature and RHS dims stay whole per block (Mosaic masks
+unaligned trailing dims; interpret mode — the CPU container — does not
+care), following the build_stage precedent.
+
+Accumulation dtype follows the input: float32 for <=32-bit inputs (MXU
+path), float64 for float64 inputs (interpret-mode oracle parity).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.kernel_tile.kernel_tile import SUPPORTED, kernel_epilogue
+
+Array = jax.Array
+
+
+def _acc_dtype(*arrays: Array):
+    if any(a.dtype == jnp.float64 for a in arrays):
+        return jnp.float64
+    return jnp.float32
+
+
+def _matvec_body(x_ref, y_ref, v_ref, o_ref, *, l1: bool, epilogue):
+    """Accumulate o += epilogue(dist(x, y_j)) @ v_j over contraction tiles."""
+    jm = pl.program_id(1)
+
+    @pl.when(jm == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                                    # (bn, d)
+    y = y_ref[...]                                    # (bm, d)
+    if l1:
+        dist = jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+    else:
+        xx = jnp.sum(x * x, axis=-1)[:, None]
+        yy = jnp.sum(y * y, axis=-1)[None, :]
+        xy = jax.lax.dot_general(
+            x, y, (((1,), (1,)), ((), ())),
+            preferred_element_type=x.dtype)           # (bn, bm) on the MXU
+        dist = jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+    kx = epilogue(dist)
+    o_ref[...] += jax.lax.dot_general(
+        kx, v_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("name", "sigma", "bn", "bm", "interpret"),
+)
+def kernel_matvec_kernel(
+    xc: Array,
+    y: Array,
+    v: Array,
+    *,
+    name: str = "gaussian",
+    sigma: float = 1.0,
+    bn: int = 128,
+    bm: int = 128,
+    interpret: bool = True,
+) -> Array:
+    """z = K(Xc, Y) @ V for Xc:(b,d), Y:(m,d), V:(m,k); b, m must divide
+    the block sizes (use ops.kernel_matvec for the padded entry point).
+
+    Padded Y rows are safe as long as the matching V rows are zero: the
+    kernel value of a padded point is nonzero, but its contraction weight
+    vanishes.
+    """
+    if name not in SUPPORTED:
+        raise ValueError(f"{name!r} not in {SUPPORTED}")
+    b, d = xc.shape
+    m, k = v.shape
+    assert b % bn == 0 and m % bm == 0, (b, m, bn, bm)
+    acc = _acc_dtype(xc, y, v)
+    body = functools.partial(
+        _matvec_body, l1=(name == "laplace"),
+        epilogue=kernel_epilogue(name, sigma))
+    return pl.pallas_call(
+        body,
+        grid=(b // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), acc),
+        interpret=interpret,
+    )(xc.astype(acc), y.astype(acc), v.astype(acc))

@@ -1,0 +1,54 @@
+"""Jit'd public wrapper for the fused exact-kernel matvec stage.
+
+This is the "pallas" backend entry of :mod:`repro.kernels.registry` for
+the ``kernel_matvec`` stage (the registry lazily imports this module so
+XLA-only users never trace a Pallas call).  Row and contraction dims are
+padded to block multiples; padded contraction rows carry zero RHS weight
+so they cannot perturb the result, and padded output rows are sliced off.
+
+Inputs at or below 32-bit run the f32 MXU path; float64 inputs stay
+float64 (interpret-mode oracle parity for the iterative-solver gates).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.matvec_stage.matvec_stage import (_acc_dtype,
+                                                     kernel_matvec_kernel)
+
+Array = jax.Array
+
+
+def _pad_rows(a: Array, mult: int) -> Array:
+    pad = (-a.shape[0]) % mult
+    if pad == 0:
+        return a
+    return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+
+
+@functools.partial(jax.jit, static_argnames=("name", "sigma", "interpret",
+                                             "block_n", "block_m"))
+def kernel_matvec(
+    xc: Array, y: Array, v: Array, *, name: str = "gaussian",
+    sigma: float = 1.0, interpret: bool = True,
+    block_n: int | None = None, block_m: int | None = None,
+) -> Array:
+    """z = K(Xc, Y) @ V with automatic padding: (b,d),(m,d),(m,k) -> (b,k).
+
+    The (b, m) kernel tile exists only per-program in VMEM — the exact
+    kernel matrix is never materialized.  ``interpret=True`` executes the
+    Pallas body on CPU (this container); pass ``interpret=False`` on TPU.
+    """
+    bn = block_n if block_n is not None else 128
+    bm = block_m if block_m is not None else 128
+    ct = _acc_dtype(xc, y, v)
+    b = xc.shape[0]
+    xp = _pad_rows(xc.astype(ct), bn)
+    yp = _pad_rows(y.astype(ct), bm)
+    vp = _pad_rows(v.astype(ct), bm)      # zero RHS rows: padded Y is inert
+    out = kernel_matvec_kernel(xp, yp, vp, name=name, sigma=sigma,
+                               bn=bn, bm=bm, interpret=interpret)
+    return out[:b]

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused exact-kernel matvec stage.
+
+Unlike :func:`repro.kernels.kernel_tile.ref.pairwise_kernel_ref` (which
+pins float32 — the TPU deployment dtype), this reference is
+dtype-PRESERVING: float64 inputs run the whole distance + epilogue +
+contraction chain in float64, because the exact-kernel operator is the
+accuracy ceiling the iterative solvers are gated against.  The kernel
+math itself is :mod:`repro.core.kernels_fn` — the registered base
+kernels are already dtype-preserving jnp, and reusing them keeps this
+oracle definitionally identical to the kernels it oracles for.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.kernels_fn import get_kernel
+
+Array = jax.Array
+
+
+def kernel_matvec_ref(
+    xc: Array, y: Array, v: Array, *, name: str = "gaussian",
+    sigma: float = 1.0,
+) -> Array:
+    """z = K(Xc, Y) @ V for one row chunk of the exact kernel matrix.
+
+    xc: (b, d) row chunk of the evaluation points.
+    y:  (m, d) full point set (the contraction side).
+    v:  (m, k) right-hand sides.
+    Returns (b, k).  The (b, m) kernel tile is transient — the caller
+    chunks over rows so peak memory is O(b·m), never O(n²).
+    """
+    return get_kernel(name)(xc, y, sigma=sigma) @ v

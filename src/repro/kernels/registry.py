@@ -41,6 +41,7 @@ STAGES = (
     "build_cross",     # U_b = K(P_b, Z_b) Sigma_b^{-1}       (Algorithm 2)
     "build_gram_dist",  # G_b = κ_σ(D_b)+jit I (+Chol)  (sweep engine, per σ)
     "build_cross_dist",  # U_b = κ_σ(D_b) Sigma_b^{-1}  (sweep engine, per σ)
+    "kernel_matvec",    # z = K(Xc, Y) V  (matvec-free exact-kernel operator)
     "pairwise_kernel",  # K(X, Y) tiles            (kernel_tile)
     "attention",        # flash attention          (flash_attention)
     "ssd_intra_chunk",  # SSD intra-chunk scan     (ssd_chunk)
@@ -168,6 +169,20 @@ def tile_config(stage: str, *, n0: int, r: int, k: int, d: int = 0,
             bn = snap(bn // 2)
         return TileConfig(bn, usage(bn))
 
+    if stage == "kernel_matvec":
+        # per (bn, bm=128) program: x (bn, d) + y (bm, d) + v (bm, k) +
+        # kernel tile (bn, bm) + out (bn, k)
+        bm = 128
+
+        def usage(bn: int) -> int:
+            return (bn * (d + bm + k) + bm * (d + k)) * itemsize
+
+        bn = leaf_block if leaf_block is not None else 128
+        bn = max(8, bn)
+        while bn > 8 and usage(bn) > _VMEM_BUDGET:
+            bn = max(8, bn // 2)    # floor at f32 sublane granularity
+        return TileConfig(bn, usage(bn))
+
     if stage in OOS_STAGES:
         def usage(bq: int) -> int:
             per_query = n0 * (d + k + 1) + d + k   # points + weights + kv + io
@@ -268,6 +283,11 @@ def resolve_backend(config: SolveConfig | None, stage: str, *,
     (n0, n0) Gram tile per program and ``leaf_factor`` the whole leaf
     Schur tile, so — like ``leaf_solve`` — they additionally require the
     whole-node working set to fit the VMEM budget.
+
+    The matvec-free exact-kernel stage (``kernel_matvec``) tiles both the
+    row chunk and the contraction dim, so — like ``leaf_matvec`` — any
+    shape that meets the sublane granularity qualifies (``n0`` is the row
+    chunk handed over by :class:`repro.solvers.operators.ExactKernelOp`).
     """
     config = config or DEFAULT_CONFIG
     if config.backend != "auto":
@@ -516,6 +536,27 @@ def _build_cross_pallas(points, landmarks, linv, *, name="gaussian",
 
     return build_cross(points, landmarks, linv, name=name, sigma=sigma,
                        interpret=interpret, block_m=block_m)
+
+
+@register("kernel_matvec", "xla")
+def _kernel_matvec_xla(xc, y, v, *, name="gaussian", sigma=1.0,
+                       interpret: bool = True):
+    """(b,d),(m,d),(m,k) -> z (b,k) = K(Xc, Y) V (dtype-preserving)."""
+    del interpret
+    from repro.kernels.matvec_stage.ref import kernel_matvec_ref
+
+    return kernel_matvec_ref(xc, y, v, name=name,
+                             sigma=sigma).astype(v.dtype)
+
+
+@register("kernel_matvec", "pallas")
+def _kernel_matvec_pallas(xc, y, v, *, name="gaussian", sigma=1.0,
+                          interpret: bool = True,
+                          block_n: int | None = None):
+    from repro.kernels.matvec_stage.ops import kernel_matvec
+
+    return kernel_matvec(xc, y, v, name=name, sigma=sigma,
+                         interpret=interpret, block_n=block_n)
 
 
 @register("pairwise_kernel", "xla")

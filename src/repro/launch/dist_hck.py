@@ -202,33 +202,36 @@ def make_dist_matvec(axis: str, config: SolveConfig | None = None):
     return matvec
 
 
-def dist_solve_cg(matvec_fn, b: Array, *, ridge: float, iters: int = 50,
-                  precond=None):
-    """CG on (A + ridge I) x = b (inner products must already be global —
-    under shard_map wrap sums with psum; under pjit they compose freely)."""
+def dist_solve(matvec_fn, b: Array, *, ridge: float, iters: int = 50,
+               precond=None, all_reduce=None, tol: float = 0.0,
+               flexible: bool = True):
+    """Distributed KRR solve: PCG on (A + ridge I) x = b through the
+    shared solver engine (:func:`repro.solvers.cg.pcg`).
 
-    def amv(v):
-        return matvec_fn(v) + ridge * v
+    ``all_reduce`` injects the global reduction for the CG inner
+    products: under ``shard_map`` pass ``lambda s:
+    jax.lax.psum(s, axis)`` so every dot product sums over the mesh; the
+    default (None) keeps local sums — correct under pjit, where the
+    partial sums compose, and on a single device.  ``precond`` is
+    typically the purely-local Algorithm-2 structured inverse (the
+    block-diagonal preconditioner of the distributed-KRR story above).
+    ``tol=0`` (default) runs exactly ``iters`` iterations — the legacy
+    fixed-budget semantics of the deleted ``dist_solve_cg`` helper; with
+    ``flexible=False`` the iteration is arithmetically IDENTICAL to that
+    helper (Fletcher–Reeves β, same ε guards — the parity test pins
+    this), while the default flexible (Polak–Ribière) form additionally
+    tolerates an inexact float32 preconditioner.  A positive ``tol``
+    enables the engine's early exit on the global relative residual.
+    """
+    from repro.solvers.cg import pcg
 
-    x = jnp.zeros_like(b)
-    r = b - amv(x)
-    z = precond(r) if precond else r
-    p = z
-
-    def body(_, carry):
-        x, r, z, p = carry
-        ap = amv(p)
-        rz = jnp.sum(r * z)
-        alpha = rz / jnp.maximum(jnp.sum(p * ap), 1e-30)
-        x = x + alpha * p
-        r_new = r - alpha * ap
-        z_new = precond(r_new) if precond else r_new
-        beta = jnp.sum(r_new * z_new) / jnp.maximum(rz, 1e-30)
-        p = z_new + beta * p
-        return x, r_new, z_new, p
-
-    x, r, z, p = jax.lax.fori_loop(0, iters, body, (x, r, z, p))
-    return x
+    if all_reduce is not None:
+        def dot(u, v):
+            return all_reduce(jnp.sum(u * v, axis=0))
+    else:
+        dot = None
+    return pcg(matvec_fn, b, ridge=ridge, precond=precond, tol=tol,
+               maxiter=iters, dot=dot, flexible=flexible).x
 
 
 # ---------------------------------------------------------------------------

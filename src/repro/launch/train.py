@@ -14,6 +14,14 @@ Algorithm-2 build engine, selecting the stage backends with
   PYTHONPATH=src python -m repro.launch.train --task krr --n 65536 \
       --rank 256 --solve-backend auto --stream
 
+``--task krr --solver exact-cg|eigenpro``: EXACT-kernel KRR through the
+matvec-free iterative subsystem (repro.solvers) — chunked kernel_matvec
+operator, HCK-preconditioned CG (or the EigenPro truncated-spectrum
+Richardson rival); K(X, X) is never materialized.
+
+  PYTHONPATH=src python -m repro.launch.train --task krr --n 8192 \
+      --rank 128 --solver exact-cg
+
 ``--task krr --grid``: hyperparameter sweep over a σ×λ grid through the
 sweep engine — ONE partition + distance pass (SweepPlan), per σ one
 factor-instantiation launch, per σ ALL λ inverted together
@@ -62,6 +70,28 @@ def run_krr(args):
     x = jax.random.normal(key, (args.n, args.d))
     y = jnp.sin(x[:, 0]) + 0.25 * jnp.cos(2.0 * x[:, 1])
     ker = BaseKernel("gaussian", sigma=2.0)
+
+    if args.solver in ("exact-cg", "eigenpro"):
+        # matvec-free iterative subsystem: EXACT-kernel KRR, the HCK
+        # hierarchy acting only as CG preconditioner (or the EigenPro
+        # truncated-spectrum rival) — K(X, X) is never materialized
+        t0 = time.perf_counter()
+        model = krr.fit_exact(
+            x, y, kernel=ker, lam=1e-2, rank=args.rank,
+            key=jax.random.PRNGKey(1), solve_config=cfg,
+            solver="cg" if args.solver == "exact-cg" else "eigenpro",
+            tol=1e-4, maxiter=args.cg_maxiter)  # f32 demo: CG floors ~1e-5
+        jax.block_until_ready(model.alpha)
+        t_fit = time.perf_counter() - t0
+        m = min(args.n, 2048)
+        err = krr.relative_error(model.predict(x[:m]), y[:m])
+        it = int(model.result.iterations)
+        res = float(model.result.residuals[it])
+        print(f"krr-exact n={args.n} d={args.d} rank={args.rank} "
+              f"solver={args.solver} backend={args.solve_backend}: "
+              f"fit {t_fit:.2f} s in {it} iterations "
+              f"(rel resid {res:.2e}), train rel-err {float(err):.4f}")
+        return
 
     t0 = time.perf_counter()
     if args.stream:
@@ -169,6 +199,15 @@ def main():
     ap.add_argument("--solve-backend", choices=["auto", "xla", "pallas"],
                     default="auto", help="SolveConfig backend for the build "
                     "engine + Algorithm-2 solve (krr task)")
+    ap.add_argument("--solver", choices=["hck", "exact-cg", "eigenpro"],
+                    default="hck",
+                    help="krr fit path: 'hck' = structured Algorithm-2 "
+                    "solve on the approximate kernel; 'exact-cg' = "
+                    "HCK-preconditioned CG on the EXACT kernel (matvec-"
+                    "free); 'eigenpro' = truncated-eigenspectrum "
+                    "preconditioned Richardson on the exact kernel")
+    ap.add_argument("--cg-maxiter", type=int, default=300,
+                    help="iteration cap for --solver exact-cg/eigenpro")
     ap.add_argument("--stream", action="store_true",
                     help="ingest through the chunked host-resident pipeline")
     ap.add_argument("--leaf-batch", type=int, default=64,

@@ -1,0 +1,28 @@
+"""Matvec-free iterative solver subsystem (DESIGN.md §9).
+
+Three pillars on one operator interface:
+
+  * :mod:`repro.solvers.operators` — the chunked EXACT-kernel operator
+    (``kernel_matvec`` registry stage; K(X,X) never materialized) and the
+    O(n·r) HCK matvec behind the same ``matvec(v)`` surface.
+  * :mod:`repro.solvers.cg` — batched preconditioned CG with injectable
+    inner products; the HCK structured inverse (Algorithm 2) is the
+    intended preconditioner, and :func:`repro.core.krr.fit_exact` is the
+    end-to-end entry point (exact-kernel KRR at iterative cost).
+    :mod:`repro.solvers.eigenpro` is the truncated-eigenspectrum rival.
+  * :mod:`repro.solvers.slq` — stochastic Lanczos quadrature for
+    logdet/trace through any matvec; shift invariance serves a whole
+    ridge grid from one Lanczos pass
+    (``gp.mle_grid(..., logdet="slq")``).
+"""
+from repro.solvers.cg import CGResult, pcg
+from repro.solvers.eigenpro import EigenProPrecond, build_precond, eigenpro_solve
+from repro.solvers.operators import ExactKernelOp, HCKOp
+from repro.solvers.slq import lanczos, slq_logdet, slq_quadrature
+
+__all__ = [
+    "CGResult", "pcg",
+    "EigenProPrecond", "build_precond", "eigenpro_solve",
+    "ExactKernelOp", "HCKOp",
+    "lanczos", "slq_logdet", "slq_quadrature",
+]

@@ -1,0 +1,164 @@
+"""Matvec-free linear operators for the iterative solver subsystem.
+
+Two operators behind one tiny interface (``shape``, ``dtype``,
+``matvec(v)``):
+
+  * :class:`ExactKernelOp` — the EXACT kernel matrix ``K(X, X)`` applied
+    row-chunk by row-chunk through the ``kernel_matvec`` registry stage:
+    each chunk's (b, n) kernel tile is evaluated, contracted against the
+    right-hand sides, and discarded, so the operator costs O(n²·d) flops
+    but only O(n·b) memory.  This is the accuracy ceiling every
+    approximate-kernel comparison implicitly targets (Fig. 5/6): CG on
+    this operator, preconditioned by the HCK structured inverse, trains
+    exact-kernel KRR at million-point scale without ever forming K.
+  * :class:`HCKOp` — the O(n·r) Algorithm-1 matvec of an HCK hierarchy
+    behind the same interface, so solvers, SLQ probes, and benchmarks are
+    generic over which kernel matrix they touch.
+
+Both accept the shared :class:`~repro.kernels.registry.SolveConfig`; the
+exact operator's stage resolves to the fused Pallas body or the
+dtype-preserving jnp reference per shape/dtype like every other stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hck import HCKFactors
+from repro.core.kernels_fn import BaseKernel
+from repro.kernels.registry import (DEFAULT_CONFIG, SolveConfig, get_impl,
+                                    resolve_backend, tile_config)
+
+Array = jax.Array
+
+
+def _as_batch(b: Array) -> tuple[Array, bool]:
+    """(n,) or (n, k) -> ((n, k), squeeze_flag)."""
+    if b.ndim == 1:
+        return b[:, None], True
+    return b, False
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "config", "row_chunk"))
+def _chunked_kernel_matvec(x: Array, y: Array, v: Array, *,
+                           kernel: BaseKernel, config: SolveConfig,
+                           row_chunk: int) -> Array:
+    """z = K(X, Y) @ V by row chunks of X; never materializes K(X, Y).
+
+    x (n, d), y (m, d), v (m, k) -> (n, k).  ``lax.map`` serializes the
+    chunk loop so peak memory stays O(row_chunk · m) regardless of n.
+    """
+    n, d = x.shape
+    k = v.shape[1]
+    chunk = min(row_chunk, max(n, 1))
+    backend = resolve_backend(config, "kernel_matvec", dtype=v.dtype,
+                              n0=chunk, r=y.shape[0], k=k, d=d)
+    impl = get_impl("kernel_matvec", backend)
+    kwargs = {}
+    if backend == "pallas":
+        kwargs["block_n"] = tile_config(
+            "kernel_matvec", n0=chunk, r=y.shape[0], k=k, d=d,
+            itemsize=v.dtype.itemsize, leaf_block=config.leaf_block).block_n0
+
+    pad = (-n) % chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+
+    def one(xc: Array) -> Array:
+        return impl(xc, y, v, name=kernel.name, sigma=kernel.sigma,
+                    interpret=config.interpret, **kwargs).astype(v.dtype)
+
+    out = jax.lax.map(one, xp.reshape(-1, chunk, d))
+    return out.reshape(-1, k)[:n]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactKernelOp:
+    """The exact kernel matrix ``K(X, X) (+ jitter·n I)`` as a matvec.
+
+    ``include_jitter=True`` (default) reproduces
+    :meth:`repro.core.kernels_fn.BaseKernel.gram` exactly — the λ'-split
+    diagonal of §4.3 — so a CG solve against this operator at ridge λ
+    matches the dense ``kernel.gram(x) + λ I`` oracle to solver
+    tolerance.  ``row_chunk`` bounds the transient kernel tile: memory is
+    O(row_chunk · n), flops O(n² d) per matvec.
+    """
+
+    x: Array
+    kernel: BaseKernel
+    config: SolveConfig | None = None
+    row_chunk: int = 1024
+    include_jitter: bool = True
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        """Operator shape (n, n)."""
+        n = self.x.shape[0]
+        return (n, n)
+
+    @property
+    def dtype(self):
+        """Dtype of the point set (preserved end to end)."""
+        return self.x.dtype
+
+    def matvec(self, v: Array) -> Array:
+        """y = (K(X, X) [+ jitter·n I]) @ v for v of shape (n,) or (n, k)."""
+        config = self.config if self.config is not None else DEFAULT_CONFIG
+        vb, squeeze = _as_batch(v)
+        out = _chunked_kernel_matvec(self.x, self.x, vb, kernel=self.kernel,
+                                     config=config, row_chunk=self.row_chunk)
+        if self.include_jitter:
+            out = out + (self.kernel.jitter * self.x.shape[0]) * vb
+        return out[:, 0] if squeeze else out
+
+    def cross_matvec(self, queries: Array, w: Array) -> Array:
+        """z = K(queries, X) @ w, row-chunked over the query batch.
+
+        The predict path of exact-kernel KRR: (q, d), (n, k) -> (q, k);
+        the cross block never sees the jitter delta (distinct sets).
+        """
+        config = self.config if self.config is not None else DEFAULT_CONFIG
+        wb, squeeze = _as_batch(w)
+        out = _chunked_kernel_matvec(queries, self.x, wb, kernel=self.kernel,
+                                     config=config, row_chunk=self.row_chunk)
+        return out[:, 0] if squeeze else out
+
+    def __call__(self, v: Array) -> Array:
+        """Alias for :meth:`matvec` (operators are callables to solvers)."""
+        return self.matvec(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class HCKOp:
+    """The O(n·r) Algorithm-1 HCK matvec behind the operator interface.
+
+    Wraps :func:`repro.core.hmatrix.matvec` so iterative solvers and SLQ
+    probes are generic over exact vs hierarchical kernel matrices (the
+    SLQ logdet path runs its Lanczos recurrence through this operator).
+    """
+
+    factors: HCKFactors
+    config: SolveConfig | None = None
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        """Operator shape (n, n)."""
+        n = self.factors.n
+        return (n, n)
+
+    @property
+    def dtype(self):
+        """Dtype of the hierarchy factors."""
+        return self.factors.adiag.dtype
+
+    def matvec(self, v: Array) -> Array:
+        """y = K_hck @ v via the level-synchronous Algorithm-1 sweeps."""
+        from repro.core import hmatrix
+
+        return hmatrix.matvec(self.factors, v, self.config)
+
+    def __call__(self, v: Array) -> Array:
+        """Alias for :meth:`matvec` (operators are callables to solvers)."""
+        return self.matvec(v)

@@ -54,7 +54,7 @@ err = float(jnp.max(jnp.abs(y.reshape(-1, 1) - A @ b)))
 assert err < 1e-3, err
 def gmv(v):
     return jax.jit(sm)(stacked, top, v.reshape(P_DEV, n_local, 1)).reshape(-1)
-xs = dist_hck.dist_solve_cg(gmv, b[:, 0], ridge=0.5, iters=80)
+xs = dist_hck.dist_solve(gmv, b[:, 0], ridge=0.5, iters=80)
 xr = jnp.linalg.solve(A + 0.5*jnp.eye(A.shape[0]), b[:, 0])
 assert float(jnp.max(jnp.abs(xs - xr))) < 1e-3
 print("DIST_OK")
@@ -154,7 +154,7 @@ def precond(r):
 
 xref = jnp.linalg.solve(A + ridge * jnp.eye(A.shape[0]), b)
 def err_after(iters, pc):
-    xs = dist_hck.dist_solve_cg(mv, b, ridge=ridge, iters=iters, precond=pc)
+    xs = dist_hck.dist_solve(mv, b, ridge=ridge, iters=iters, precond=pc)
     return float(jnp.linalg.norm(xs - xref) / jnp.linalg.norm(xref))
 
 e_plain = err_after(8, None)

@@ -1,0 +1,394 @@
+"""Matvec-free iterative solver subsystem (repro.solvers).
+
+Covers the three pillars against dense oracles:
+  * the chunked exact-kernel operator / kernel_matvec stage (xla vs
+    pallas-interpret vs dense gram, all base kernels, odd shapes),
+  * HCK-preconditioned CG (fit_exact vs jnp.linalg.solve, the >=4x
+    iteration-ratio property, the EigenPro rival, dist_solve parity with
+    the deleted legacy helper),
+  * stochastic Lanczos quadrature (logdet across a ridge grid vs the
+    Algorithm-2 exact recursion, mle_grid logdet="slq" vs the exact
+    surface),
+plus the fit_nystrom lambda-scaling regression pinned to an explicit
+dual solve.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import baselines, gp, hmatrix, krr
+from repro.core.kernels_fn import BaseKernel
+from repro.kernels.registry import SolveConfig, get_impl, registered
+from repro.solvers import (ExactKernelOp, HCKOp, eigenpro_solve, lanczos,
+                           pcg, slq_logdet)
+
+
+# ---------------------------------------------------------------------------
+# kernel_matvec stage + ExactKernelOp
+# ---------------------------------------------------------------------------
+
+def test_kernel_matvec_stage_registered_both_backends():
+    assert ("kernel_matvec", "xla") in registered("kernel_matvec")
+    assert ("kernel_matvec", "pallas") in registered("kernel_matvec")
+
+
+@pytest.mark.parametrize("name", ["gaussian", "laplace", "imq"])
+def test_kernel_matvec_stage_parity(f64, name):
+    """Pallas body == dtype-preserving ref == dense cross @ v (f64)."""
+    key = jax.random.PRNGKey(0)
+    xc = jax.random.normal(key, (70, 5), dtype=jnp.float64)
+    y = jax.random.normal(jax.random.PRNGKey(1), (190, 5), dtype=jnp.float64)
+    v = jax.random.normal(jax.random.PRNGKey(2), (190, 3), dtype=jnp.float64)
+    ker = BaseKernel(name, sigma=1.7)
+    want = ker.cross(xc, y) @ v
+    got_x = get_impl("kernel_matvec", "xla")(xc, y, v, name=name, sigma=1.7)
+    got_p = get_impl("kernel_matvec", "pallas")(
+        xc, y, v, name=name, sigma=1.7, interpret=True)
+    assert float(jnp.max(jnp.abs(got_x - want))) < 1e-10
+    assert float(jnp.max(jnp.abs(got_p - want))) < 1e-10
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_exact_operator_matches_dense_gram(f64, backend):
+    """ExactKernelOp.matvec == (kernel.gram) @ v, odd n, odd chunking."""
+    key = jax.random.PRNGKey(0)
+    n = 333
+    x = jax.random.normal(key, (n, 4), dtype=jnp.float64)
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-7)
+    op = ExactKernelOp(x, ker, SolveConfig(backend=backend), row_chunk=100)
+    v = jax.random.normal(jax.random.PRNGKey(1), (n, 2), dtype=jnp.float64)
+    want = ker.gram(x) @ v
+    assert float(jnp.max(jnp.abs(op.matvec(v) - want))) < 1e-10
+    # 1-D round trip + cross form
+    assert op.matvec(v[:, 0]).shape == (n,)
+    q = jax.random.normal(jax.random.PRNGKey(2), (17, 4), dtype=jnp.float64)
+    want_q = ker.cross(q, x) @ v
+    assert float(jnp.max(jnp.abs(op.cross_matvec(q, v) - want_q))) < 1e-10
+
+
+def test_hck_op_matches_hmatrix(f64, small_problem):
+    _, _, f = small_problem
+    op = HCKOp(f)
+    v = jax.random.normal(jax.random.PRNGKey(3), (f.n, 2), dtype=jnp.float64)
+    assert jnp.allclose(op.matvec(v), hmatrix.matvec(f, v))
+    assert op.shape == (f.n, f.n)
+
+
+# ---------------------------------------------------------------------------
+# PCG engine
+# ---------------------------------------------------------------------------
+
+def test_pcg_matches_dense_solve_multirhs(f64):
+    key = jax.random.PRNGKey(0)
+    n = 300
+    x = jax.random.normal(key, (n, 4), dtype=jnp.float64)
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-8)
+    op = ExactKernelOp(x, ker, row_chunk=128)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, 3), dtype=jnp.float64)
+    lam = 0.1
+    res = pcg(op.matvec, b, ridge=lam, tol=1e-12, maxiter=600)
+    want = jnp.linalg.solve(ker.gram(x) + lam * jnp.eye(n), b)
+    assert bool(res.converged)
+    assert float(jnp.max(jnp.abs(res.x - want))) < 1e-8
+    # trace bookkeeping: starts at 1, frozen past the exit iteration
+    it = int(res.iterations)
+    assert float(res.residuals[0]) == pytest.approx(1.0)
+    assert float(res.residuals[it]) <= 1e-12
+    assert jnp.all(res.residuals[it:] == res.residuals[it])
+
+
+def test_pcg_fixed_iteration_mode(f64):
+    """tol=0 runs exactly maxiter iterations (legacy dist semantics)."""
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (50, 50), dtype=jnp.float64)
+    a = a @ a.T + 50 * jnp.eye(50)
+    b = jnp.ones((50,), jnp.float64)
+    res = pcg(lambda v: a @ v, b, tol=0.0, maxiter=7)
+    assert int(res.iterations) == 7
+
+
+def test_fit_exact_matches_dense_both_backends(f64):
+    """Acceptance gate (scaled down): fit_exact == dense solve to 1e-6."""
+    key = jax.random.PRNGKey(0)
+    n = 512
+    x = jax.random.normal(key, (n, 4), dtype=jnp.float64)
+    y = jnp.sin(x[:, 0]) + 0.25 * jnp.cos(2 * x[:, 1])
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-6)
+    lam = 1e-2
+    want = jnp.linalg.solve(ker.gram(x) + lam * jnp.eye(n), y[:, None])
+    for backend in ("xla", "pallas"):
+        m = krr.fit_exact(x, y, kernel=ker, lam=lam, rank=64,
+                          key=jax.random.PRNGKey(1), tol=1e-9, maxiter=400,
+                          solve_config=SolveConfig(backend=backend))
+        assert bool(m.result.converged), backend
+        assert float(jnp.max(jnp.abs(m.alpha - want))) < 1e-6, backend
+        # predict through the chunked cross operator matches the dense form
+        q = x[:33]
+        pred = m.predict(q)
+        want_q = (ker.cross(q, x) @ want)[:, 0]
+        assert float(jnp.max(jnp.abs(pred - want_q))) < 1e-6, backend
+
+
+def test_fit_exact_odd_n_padded_preconditioner(f64):
+    """n that does not fill the tree: weighted embed/extract stays SPD
+    and converges to the dense solution of the ORIGINAL problem."""
+    key = jax.random.PRNGKey(0)
+    n = 450
+    x = jax.random.normal(key, (n, 4), dtype=jnp.float64)
+    y = jnp.sin(x[:, 0])
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-6)
+    lam = 1e-2
+    m = krr.fit_exact(x, y, kernel=ker, lam=lam, rank=64,
+                      key=jax.random.PRNGKey(1), tol=1e-9, maxiter=600)
+    want = jnp.linalg.solve(ker.gram(x) + lam * jnp.eye(n), y[:, None])
+    assert bool(m.result.converged)
+    assert float(jnp.max(jnp.abs(m.alpha - want))) < 1e-6
+
+
+def _iteration_ratio(n, *, rank, lam, tol, maxiter=3000):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, 4), dtype=jnp.float64)
+    y = jnp.sin(x[:, 0]) + 0.25 * jnp.cos(2 * x[:, 1])
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-6)
+    kwargs = dict(kernel=ker, lam=lam, rank=rank, key=jax.random.PRNGKey(1),
+                  tol=tol, maxiter=maxiter)
+    m_pc = krr.fit_exact(x, y, **kwargs)
+    m_pl = krr.fit_exact(x, y, precondition=False, **kwargs)
+    assert bool(m_pc.result.converged) and bool(m_pl.result.converged)
+    return int(m_pl.result.iterations) / max(int(m_pc.result.iterations), 1)
+
+
+def test_hck_precond_iteration_ratio(f64):
+    """HCK preconditioning cuts CG iterations >=4x (tier-1 scale)."""
+    assert _iteration_ratio(2048, rank=128, lam=1e-2, tol=1e-6) >= 4.0
+
+
+@pytest.mark.slow
+def test_hck_precond_iteration_ratio_4096(f64):
+    """The acceptance-criteria property at full n=4096 scale."""
+    assert _iteration_ratio(4096, rank=128, lam=1e-2, tol=1e-6) >= 4.0
+
+
+def test_eigenpro_solves_exact_krr(f64):
+    """The truncated-eigenspectrum rival reaches the dense solution."""
+    key = jax.random.PRNGKey(0)
+    n = 512
+    x = jax.random.normal(key, (n, 4), dtype=jnp.float64)
+    y = jnp.sin(x[:, 0])[:, None]
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-6)
+    lam = 5e-2
+    op = ExactKernelOp(x, ker, row_chunk=256)
+    res = eigenpro_solve(op, y, ridge=lam, key=jax.random.PRNGKey(2),
+                         n_components=96, subsample=384, tol=1e-8,
+                         maxiter=400)
+    want = jnp.linalg.solve(ker.gram(x) + lam * jnp.eye(n), y)
+    assert bool(res.converged)
+    assert float(jnp.max(jnp.abs(res.x - want))) < 1e-5
+    # the whole point of the preconditioner: far fewer iterations than
+    # the plain-Richardson spectral-radius bound lam1/(lam + tail)
+    assert int(res.iterations) < 200
+
+
+def test_fit_exact_rejects_undersized_preconditioner_tree(f64):
+    """Explicit levels/leaf_size below capacity raise a clear error
+    instead of crashing inside the padding draw."""
+    x = jnp.zeros((600, 3), jnp.float64)
+    y = jnp.zeros((600,), jnp.float64)
+    ker = BaseKernel("gaussian", sigma=1.0)
+    with pytest.raises(ValueError, match="capacity"):
+        krr.fit_exact(x, y, kernel=ker, lam=1e-2, rank=32, levels=2,
+                      maxiter=1)
+
+
+def test_fit_exact_classification_binary(f64):
+    key = jax.random.PRNGKey(0)
+    n = 256
+    x = jax.random.normal(key, (n, 4), dtype=jnp.float64)
+    labels = (x[:, 0] > 0).astype(jnp.int32)
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-6)
+    m = krr.fit_exact(x, labels, kernel=ker, lam=1e-2, rank=32,
+                      key=jax.random.PRNGKey(1), classification=True,
+                      tol=1e-8, maxiter=300)
+    pred = m.predict_class(x)
+    assert float(jnp.mean((pred == labels).astype(jnp.float32))) > 0.95
+
+
+# ---------------------------------------------------------------------------
+# dist_solve parity with the deleted legacy helper
+# ---------------------------------------------------------------------------
+
+def _legacy_dist_solve_cg(matvec_fn, b, *, ridge, iters, precond=None):
+    """Verbatim transcription of the deleted launch.dist_hck.dist_solve_cg."""
+    def amv(v):
+        return matvec_fn(v) + ridge * v
+
+    x = jnp.zeros_like(b)
+    r = b - amv(x)
+    z = precond(r) if precond else r
+    p = z
+
+    def body(_, carry):
+        x, r, z, p = carry
+        ap = amv(p)
+        rz = jnp.sum(r * z)
+        alpha = rz / jnp.maximum(jnp.sum(p * ap), 1e-30)
+        x = x + alpha * p
+        r_new = r - alpha * ap
+        z_new = precond(r_new) if precond else r_new
+        beta = jnp.sum(r_new * z_new) / jnp.maximum(rz, 1e-30)
+        p = z_new + beta * p
+        return x, r_new, z_new, p
+
+    x, r, z, p = jax.lax.fori_loop(0, iters, body, (x, r, z, p))
+    return x
+
+
+def test_dist_solve_parity_with_legacy_helper(f64):
+    """dist_solve(flexible=False) == the old fixed-iteration CG loop."""
+    from repro.launch import dist_hck
+
+    key = jax.random.PRNGKey(0)
+    n = 160
+    a = jax.random.normal(key, (n, n), dtype=jnp.float64)
+    a = a @ a.T / n + 0.5 * jnp.eye(n)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,), dtype=jnp.float64)
+    d_inv = 1.0 / (jnp.diag(a) + 0.3)
+
+    def mv(v):
+        return a @ v
+
+    for pc in (None, lambda r: d_inv * r):
+        for iters in (5, 40):
+            want = _legacy_dist_solve_cg(mv, b, ridge=0.3, iters=iters,
+                                         precond=pc)
+            got = dist_hck.dist_solve(mv, b, ridge=0.3, iters=iters,
+                                      precond=pc, flexible=False)
+            assert float(jnp.max(jnp.abs(got - want))) < 1e-12
+    # default (flexible) form agrees at convergence with the dense solve
+    got = dist_hck.dist_solve(mv, b, ridge=0.3, iters=120)
+    xref = jnp.linalg.solve(a + 0.3 * jnp.eye(n), b)
+    assert float(jnp.max(jnp.abs(got - xref))) < 1e-9
+
+
+def test_dist_solve_injectable_all_reduce(f64):
+    """The injected reduction is USED: a sum-preserving wrapper changes
+    nothing; psum-style doubling over a fake 2-device axis still solves
+    the (block-replicated) system."""
+    from repro.launch import dist_hck
+
+    key = jax.random.PRNGKey(0)
+    n = 96
+    a = jax.random.normal(key, (n, n), dtype=jnp.float64)
+    a = a @ a.T / n + jnp.eye(n)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,), dtype=jnp.float64)
+    calls = []
+
+    def all_reduce(s):
+        calls.append(1)
+        return s
+
+    got = dist_hck.dist_solve(lambda v: a @ v, b, ridge=0.2, iters=60,
+                              all_reduce=all_reduce)
+    xref = jnp.linalg.solve(a + 0.2 * jnp.eye(n), b)
+    assert calls, "all_reduce was never invoked"
+    assert float(jnp.max(jnp.abs(got - xref))) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# SLQ logdet
+# ---------------------------------------------------------------------------
+
+def test_lanczos_recovers_small_dense_spectrum(f64):
+    """Full-reorthogonalized Lanczos at iters=n reproduces eigh exactly."""
+    key = jax.random.PRNGKey(0)
+    n = 24
+    a = jax.random.normal(key, (n, n), dtype=jnp.float64)
+    a = a @ a.T + jnp.eye(n)
+    v0 = jnp.ones((n,), jnp.float64)
+    alphas, betas = lanczos(lambda v: a @ v, v0, n)
+    t = jnp.diag(alphas) + jnp.diag(betas, 1) + jnp.diag(betas, -1)
+    want = jnp.linalg.eigvalsh(a)
+    got = jnp.linalg.eigvalsh(t)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-8
+
+
+def test_slq_logdet_ridge_grid_vs_exact(f64, small_problem):
+    """SLQ through the Algorithm-1 matvec vs the Algorithm-2 exact logdet
+    across a ridge grid — one Lanczos pass serves every ridge."""
+    _, _, f = small_problem
+    ridges = jnp.asarray([1e-2, 1e-1, 1.0], jnp.float64)
+    got = slq_logdet(HCKOp(f).matvec, f.n, ridges=ridges, probes=32,
+                     iters=64, key=jax.random.PRNGKey(7),
+                     dtype=jnp.float64)
+    for g, ridge in enumerate(ridges):
+        want = float(hmatrix.invert(f, ridge).logabsdet)
+        # tolerance per point: logdet is extensive (O(n)), so gate the
+        # nats-per-point error rather than a raw relative (want can
+        # cross zero inside the grid); the small-ridge end carries the
+        # residual Lanczos bias from the near-jitter eigenvalue cluster
+        assert abs(float(got[g]) - want) / f.n < 0.025, \
+            (g, float(got[g]), want)
+
+
+def test_mle_grid_slq_matches_exact_surface(f64):
+    """Acceptance gate: logdet='slq' agrees with the exact path to 1%
+    relative NLL while never running the per-ridge exact recursion."""
+    key = jax.random.PRNGKey(0)
+    n = 1024
+    x = jax.random.normal(key, (n, 4), dtype=jnp.float64)
+    y = jnp.sin(x[:, 0]) + 0.25 * jnp.cos(2 * x[:, 1])
+    kwargs = dict(levels=3, rank=64, key=jax.random.PRNGKey(1),
+                  sigmas=[1.0, 2.0], noises=[1e-2, 1e-1, 1.0])
+    exact = gp.mle_grid(x, y, **kwargs)
+    slq = gp.mle_grid(x, y, logdet="slq", **kwargs)
+    # NLL is EXTENSIVE (O(n) nats): gate the relative error against the
+    # surface's natural scale max(|NLL|, n) — individual entries cross
+    # zero inside the grid (the 0.5·n·log 2π offset nearly cancels
+    # there), where a raw entrywise relative would measure probe noise
+    # against an accidental near-zero denominator
+    rel = jnp.abs(slq - exact) / jnp.maximum(jnp.abs(exact), float(n))
+    assert float(jnp.max(rel)) < 0.01, (exact, slq)
+    # and the surfaces agree on the argmin (what model selection reads)
+    assert jnp.unravel_index(jnp.argmin(exact), exact.shape) == \
+        jnp.unravel_index(jnp.argmin(slq), slq.shape)
+
+
+def test_mle_grid_rejects_unknown_logdet(f64):
+    x = jnp.zeros((16, 2), jnp.float64)
+    y = jnp.zeros((16,), jnp.float64)
+    with pytest.raises(ValueError, match="logdet"):
+        gp.mle_grid(x, y, levels=1, rank=4, key=jax.random.PRNGKey(0),
+                    sigmas=[1.0], noises=[0.1], logdet="nope")
+
+
+# ---------------------------------------------------------------------------
+# fit_nystrom lambda-scaling regression (dense dual oracle)
+# ---------------------------------------------------------------------------
+
+def test_fit_nystrom_matches_explicit_dual_solve(f64):
+    """Pins the ridge convention: predict == k(x, Xl) L^{-T} Phi^T
+    (Phi Phi^T + lam I)^{-1} y with UNSCALED lam (not lam·n)."""
+    key = jax.random.PRNGKey(0)
+    n, r = 400, 40
+    x = jax.random.normal(key, (n, 5), dtype=jnp.float64)
+    y = jnp.sin(x[:, 0])
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-8)
+    lam = 0.05
+    model = baselines.fit_nystrom(x, y, kernel=ker, lam=lam, rank=r,
+                                  key=jax.random.PRNGKey(1))
+    lm = model.landmarks
+    lo = jnp.linalg.cholesky(ker.gram(lm))
+    phi = jax.scipy.linalg.solve_triangular(
+        lo, ker.cross(x, lm).T, lower=True).T
+    q = jax.random.normal(jax.random.PRNGKey(3), (32, 5), dtype=jnp.float64)
+
+    def dual_pred(ridge):
+        alpha = jnp.linalg.solve(phi @ phi.T + ridge * jnp.eye(n), y[:, None])
+        beta = jax.scipy.linalg.solve_triangular(
+            lo.T, phi.T @ alpha, lower=False)
+        return (ker.cross(q, lm) @ beta)[:, 0]
+
+    got = model.predict(q)[:, 0]
+    assert float(jnp.max(jnp.abs(got - dual_pred(lam)))) < 1e-10
+    # the hedge the old docstring carried: lam·n would be a DIFFERENT fit
+    assert float(jnp.max(jnp.abs(got - dual_pred(lam * n)))) > 1e-3
