@@ -1,0 +1,289 @@
+"""Distributed end-to-end benchmark: weak-scaling curves for the
+mesh-sharded build (points/sec) and the device-routed predict engine
+(queries/sec) versus device count, plus float64 parity gates of every
+distributed stage against the single-host path, emitted as
+machine-readable BENCH_dist.json.
+
+The mesh is a host-platform virtual mesh by default: ``--devices P`` is
+parsed BEFORE jax is imported and appended to ``XLA_FLAGS`` as
+``--xla_force_host_platform_device_count=P``, so the benchmark is
+self-contained on a CPU container (on real hardware export
+``JAX_PLATFORMS`` as usual and the flag is a no-op for counts <= the
+physical device count).
+
+Gates (all float64, nonzero exit on miss):
+  * ``dist_build_hck`` factors == single-host ``build_hck`` (key-tree
+    parity makes them the SAME randomness, so the tolerance is roundoff)
+  * ``dist_build_hck_streaming`` factors == single-host ``build_hck``
+  * ``MeshPredictEngine`` predictions == single-host ``PredictEngine``
+  * converged CG on the GSPMD-sharded HCK operator == single-host CG
+    within ``--tol``
+  * HCK-preconditioned CG on the sharded EXACT kernel operator (the
+    ``krr.fit_exact`` configuration) == single-host: solutions within
+    ``--tol`` AND an identical iteration count (mesh invariance of the
+    inner products)
+  * sharded SLQ logdet == single-host SLQ logdet (same probe key)
+
+Usage:
+  python benchmarks/bench_dist.py                 # weak scaling to 8 dev
+  python benchmarks/bench_dist.py --smoke         # CI gate (tiny, f64)
+  python benchmarks/bench_dist.py --devices 4 --n-per-device 16384
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=8,
+                    help="mesh width ceiling; forced onto the host "
+                    "platform before jax initializes")
+    ap.add_argument("--n-per-device", type=int, default=8192,
+                    help="training points per device (weak scaling: the "
+                    "problem grows with the mesh)")
+    ap.add_argument("--rank", type=int, default=64)
+    ap.add_argument("--d", type=int, default=8, help="input dimension")
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "float64"],
+                    help="dtype of the timed scaling runs (gates are f64)")
+    ap.add_argument("--queries", type=int, default=4096,
+                    help="query batch for the serving throughput curve")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--gate-n", type=int, default=1024,
+                    help="problem size for the float64 parity gates")
+    ap.add_argument("--leaf-batch", type=int, default=5,
+                    help="streaming leaves per launch (odd on purpose: "
+                    "exercises the unsharded-remainder fallback)")
+    ap.add_argument("--tol", type=float, default=1e-6,
+                    help="max abs difference allowed by the parity gates")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problem + all parity gates (the CI lane)")
+    ap.add_argument("--out", default="BENCH_dist.json")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.n_per_device, args.rank, args.d = 256, 16, 4
+        args.queries = 512
+        args.gate_n = 1024
+    return args
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv)
+
+    # the virtual mesh must exist before jax initializes
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    jax.config.update("jax_enable_x64", True)   # parity gates run in f64
+
+    from repro.core import hmatrix, oos
+    from repro.core.hck import build_hck
+    from repro.core.kernels_fn import BaseKernel
+    from repro.core.partition import auto_levels_ceil
+    from repro.data.pipeline import ArraySource
+    from repro.kernels.registry import DEFAULT_CONFIG
+    from repro.launch.dist_hck import (device_level, dist_build_hck,
+                                       dist_build_hck_streaming)
+    from repro.launch.mesh import kernel_mesh
+    from repro.serving.predict_service import MeshPredictEngine, PredictEngine
+    from repro.solvers import slq
+    from repro.solvers.cg import pcg
+    from repro.solvers.operators import ExactKernelOp, HCKOp
+
+    def _timeit(fn, repeats=args.repeats):
+        out = fn()
+        jax.block_until_ready(out)      # compile outside the timed region
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out = fn()
+            jax.block_until_ready(out)
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        return times[len(times) // 2], out
+
+    def _max_factor_diff(fa, fb) -> float:
+        diffs = [jnp.max(jnp.abs(fa.u - fb.u)),
+                 jnp.max(jnp.abs(fa.adiag - fb.adiag))]
+        for a, b in zip(fa.sigma, fb.sigma):
+            diffs.append(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(fa.w, fb.w):
+            diffs.append(jnp.max(jnp.abs(a - b)))
+        return float(jnp.max(jnp.stack(diffs)))
+
+    p_max = min(args.devices, jax.device_count())
+    kernel = BaseKernel("gaussian", sigma=2.0, jitter=1e-8)
+    cfg = DEFAULT_CONFIG
+    key = jax.random.PRNGKey(1)
+    dtype = jnp.dtype(args.dtype)
+
+    report = {
+        "problem": {"n_per_device": args.n_per_device, "rank": args.rank,
+                    "d": args.d, "dtype": args.dtype,
+                    "queries": args.queries, "smoke": args.smoke},
+        "device": str(jax.devices()[0]),
+        "device_count": jax.device_count(),
+        "scaling": [],
+        "checks": {},
+    }
+
+    # --- weak-scaling curves: n = n_per_device * P -----------------------
+    p = 1
+    while p <= p_max:
+        mesh = kernel_mesh(p)
+        n = args.n_per_device * p
+        levels = max(1, auto_levels_ceil(n, args.rank), device_level(p))
+        x = jax.random.normal(jax.random.PRNGKey(0), (n, args.d),
+                              dtype=dtype)
+        y = (jnp.sin(x[:, 0]) + 0.25 * jnp.cos(2.0 * x[:, 1]))[:, None]
+
+        t_build, factors = _timeit(
+            lambda x=x, levels=levels, mesh=mesh: dist_build_hck(
+                x, levels=levels, rank=args.rank, key=key, kernel=kernel,
+                mesh=mesh, config=cfg))
+
+        alpha = hmatrix.solve(factors, y[factors.tree.perm], ridge=1e-2,
+                              config=cfg)
+        plan = oos.prepare(factors, alpha, cfg)
+        engine = MeshPredictEngine(factors, plan, kernel, mesh, config=cfg)
+        xq = jax.random.normal(jax.random.PRNGKey(7),
+                               (args.queries, args.d), dtype=dtype)
+        t_serve, _ = _timeit(lambda e=engine, q=xq: e.apply(q))
+
+        entry = {"devices": p, "n": n, "levels": levels,
+                 "build_s": t_build, "points_per_s": n / t_build,
+                 "serve_s": t_serve,
+                 "queries_per_s": args.queries / t_serve}
+        report["scaling"].append(entry)
+        print(f"[ P={p:>2}] n={n:>8,}  build {t_build:7.2f} s "
+              f"({n / t_build:10,.0f} pts/s)   serve {t_serve * 1e3:8.1f} ms "
+              f"({args.queries / t_serve:10,.0f} q/s)")
+        p *= 2
+
+    # --- float64 parity gates vs the single-host path --------------------
+    ok = True
+
+    def gate(name, err, extra=None):
+        nonlocal ok
+        passed = err <= args.tol
+        ok = ok and passed
+        entry = {"max_abs_diff": err, "tol": args.tol, "pass": passed}
+        entry.update(extra or {})
+        report["checks"][name] = entry
+        print(f"[ gate] {name:<18} max abs diff {err:.2e}  "
+              f"{'PASS' if passed else 'FAIL'}")
+
+    mesh = kernel_mesh(p_max)
+    gn = args.gate_n
+    g_levels = max(1, auto_levels_ceil(gn, args.rank), device_level(p_max))
+    x64 = jax.random.normal(jax.random.PRNGKey(0), (gn, args.d),
+                            dtype=jnp.float64)
+    y64 = (jnp.sin(x64[:, 0]) + 0.25 * jnp.cos(2.0 * x64[:, 1]))[:, None]
+
+    f_ref = build_hck(x64, levels=g_levels, rank=args.rank, key=key,
+                      kernel=kernel, config=cfg)
+    f_dist = dist_build_hck(x64, levels=g_levels, rank=args.rank, key=key,
+                            kernel=kernel, mesh=mesh, config=cfg)
+    gate("build", _max_factor_diff(f_dist, f_ref),
+         {"gate_n": gn, "levels": g_levels, "devices": p_max})
+
+    f_str = dist_build_hck_streaming(
+        ArraySource(np.asarray(x64)), levels=g_levels, rank=args.rank,
+        key=key, kernel=kernel, mesh=mesh, config=cfg,
+        leaf_batch=args.leaf_batch)
+    gate("build_streaming", _max_factor_diff(f_str, f_ref),
+         {"leaf_batch": args.leaf_batch})
+
+    # predict: device-routed engine vs the single-host shape-bucketed one
+    alpha = hmatrix.solve(f_ref, y64[f_ref.tree.perm], ridge=1e-2,
+                          config=cfg)
+    plan = oos.prepare(f_ref, alpha, cfg)
+    eng_host = PredictEngine(f_ref, plan, kernel, config=cfg)
+    eng_mesh = MeshPredictEngine(f_dist, oos.prepare(f_dist, alpha, cfg),
+                                 kernel, mesh, config=cfg)
+    xq = jax.random.normal(jax.random.PRNGKey(7), (args.queries, args.d),
+                           dtype=jnp.float64)
+    z_host = eng_host.apply(xq)
+    z_mesh = eng_mesh.apply(xq)
+    gate("predict", float(jnp.max(jnp.abs(z_mesh - z_host))),
+         {"queries": args.queries})
+
+    # solver gates run on a dedicated higher-rank hierarchy: at rank 128
+    # the HCK preconditioner is good enough that CG converges in ~25
+    # iterations with the residual dropping ~2x per step, so the
+    # iteration count is far from any tolerance boundary and the
+    # equality gate below is robust to GSPMD reduction reordering.
+    pc_rank = max(args.rank, 128)
+    pc_levels = max(1, auto_levels_ceil(gn, pc_rank), device_level(p_max))
+    f_pc = build_hck(x64, levels=pc_levels, rank=pc_rank, key=key,
+                     kernel=kernel, config=cfg)
+
+    # solve: converged CG on the GSPMD-sharded HCK operator must match
+    # the single-host solve to ~tol
+    op = HCKOp(f_pc, config=cfg)
+    op_sh = op.sharded(mesh)
+    yp = y64[f_pc.tree.perm]
+    r_host = pcg(op, yp, ridge=1e-2, tol=1e-8, maxiter=400)
+    r_mesh = pcg(op_sh, yp, ridge=1e-2, tol=1e-8, maxiter=400)
+    gate("cg_solve", float(jnp.max(jnp.abs(r_mesh.x - r_host.x))),
+         {"iterations_single_host": int(r_host.iterations),
+          "iterations_distributed": int(r_mesh.iterations),
+          "converged": bool(r_host.converged) and bool(r_mesh.converged)})
+
+    # the fit_exact configuration: HCK-preconditioned CG on the EXACT
+    # kernel operator (tree order, so the structured inverse applies
+    # directly).  Distributed must take EXACTLY as many iterations as
+    # single-host (mesh invariance of the inner products).
+    inv = hmatrix.invert(f_pc, ridge=1e-2, config=cfg)
+
+    def precond(r):
+        return hmatrix.apply_inverse(inv, r, cfg)
+
+    ex = ExactKernelOp(f_pc.x_sorted, kernel, config=cfg)
+    ex_sh = ex.sharded(mesh)
+    e_host = pcg(ex, yp, ridge=1e-2, precond=precond, tol=1e-8, maxiter=100)
+    e_mesh = pcg(ex_sh, yp, ridge=1e-2, precond=precond, tol=1e-8,
+                 maxiter=100)
+    it_host, it_mesh = int(e_host.iterations), int(e_mesh.iterations)
+    gate("cg_exact_precond", float(jnp.max(jnp.abs(e_mesh.x - e_host.x))),
+         {"iterations_single_host": it_host,
+          "iterations_distributed": it_mesh,
+          "converged": bool(e_host.converged) and bool(e_mesh.converged)})
+    if it_host != it_mesh or not bool(e_mesh.converged):
+        ok = False
+        report["checks"]["cg_exact_precond"]["pass"] = False
+        print(f"[ gate] cg iterations {it_mesh} != {it_host} "
+              f"(or not converged)  FAIL")
+    else:
+        print(f"[ gate] cg iterations {it_mesh} == {it_host}  PASS")
+
+    # slq: same probe key, sharded vs single-host operator (GSPMD keeps
+    # the Lanczos recurrence placement-invariant)
+    ld_host = slq.slq_logdet(op, gn, probes=4, iters=20,
+                             key=jax.random.PRNGKey(5), dtype=jnp.float64)
+    ld_mesh = slq.slq_logdet(op_sh, gn, probes=4, iters=20,
+                             key=jax.random.PRNGKey(5), dtype=jnp.float64)
+    gate("slq_logdet", float(jnp.abs(ld_mesh - ld_host)),
+         {"logdet": float(ld_host)})
+
+    report["pass"] = ok
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"wrote {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

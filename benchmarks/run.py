@@ -2,22 +2,57 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all, CPU-scaled
   PYTHONPATH=src python -m benchmarks.run fig3       # one
+  PYTHONPATH=src python -m benchmarks.run --smoke cg # one CI smoke gate
 
 Prints ``name,us_per_call,derived`` CSV blocks per benchmark plus the
-per-figure detail tables.
+per-figure detail tables.  ``--smoke <name>`` (name one of solve, oos,
+build, sweep, cg, dist) is the CI entry point: it runs the matching
+``bench_<name>.py --smoke --out BENCH_<name>.json`` as a subprocess
+(several gates flip ``jax_enable_x64`` globally, so isolation is
+mandatory) and exits with the gate's status — the ci.yml bench matrix
+fans out over exactly these names.
 """
 from __future__ import annotations
 
 import sys
 import time
 
+#: CI smoke gates: --smoke <name> -> bench_<name>.py --smoke
+SMOKE_BENCHES = ("solve", "oos", "build", "sweep", "cg", "dist")
+
 
 def _section(name):
     print(f"\n==== {name} " + "=" * max(0, 60 - len(name)))
 
 
+def run_smoke(name: str) -> int:
+    """Run one bench_<name>.py CI smoke gate in a subprocess.
+
+    Returns the subprocess exit code (nonzero = a parity/perf gate
+    missed; the bench also writes BENCH_<name>.json for the artifact
+    upload either way).
+    """
+    import pathlib
+    import subprocess
+
+    if name not in SMOKE_BENCHES:
+        print(f"unknown smoke bench {name!r}; pick one of "
+              f"{', '.join(SMOKE_BENCHES)}", file=sys.stderr)
+        return 2
+    script = pathlib.Path(__file__).parent / f"bench_{name}.py"
+    return subprocess.run(
+        [sys.executable, str(script), "--smoke",
+         "--out", f"BENCH_{name}.json"]).returncode
+
+
 def main() -> None:
-    which = set(sys.argv[1:])
+    argv = sys.argv[1:]
+    if argv and argv[0] == "--smoke":
+        if len(argv) != 2:
+            print("usage: run.py --smoke <name>", file=sys.stderr)
+            raise SystemExit(2)
+        raise SystemExit(run_smoke(argv[1]))
+    which = set(argv)
 
     def want(name):
         return not which or name in which

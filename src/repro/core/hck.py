@@ -179,6 +179,25 @@ def _stage_build_cross(blocks: Array, lm_parent: Array, linv_parent: Array,
         interpret=config.interpret, **kwargs).astype(blocks.dtype)
 
 
+def leaf_stage_factors(blocks: Array, lm_parent: Array, linv_parent: Array,
+                       kernel: BaseKernel, config: SolveConfig):
+    """Leaf-granularity Adiag + U stage pair for a group of leaf blocks.
+
+    ``blocks`` (B, n0, d) are leaf point blocks, ``lm_parent`` /
+    ``linv_parent`` the PER-LEAF parent landmark and inverse-Cholesky
+    stacks (i.e. already repeated to leaf granularity — leaf groups need
+    not align with sibling pairs).  Returns ``(adiag (B, n0, n0),
+    u (B, n0, r))``.  Both the streaming engine and the mesh-sharded
+    distributed build (``repro.launch.dist_hck``) stage their leaves
+    through this one function: every stage row is independent, so
+    leaf-granularity launches are bit-identical to :func:`build_hck`'s
+    paired-sibling launches — the parity gates rely on that.
+    """
+    adiag, _ = _stage_build_gram(blocks, kernel, config, want_chol=False)
+    u = _stage_build_cross(blocks, lm_parent, linv_parent, kernel, config)
+    return adiag, u
+
+
 def _broadcast_shared_landmarks(landmarks: list, rank: int, d: int) -> list:
     """§4.2 remark: reuse the root landmark set at every node (-> flat
     k_compositional)."""
@@ -710,10 +729,10 @@ def build_hck_streaming(
         rows = perm_np[start * n0:stop * n0]
         blk = jnp.asarray(source.take(rows)).reshape(stop - start, n0, d)
         x_parts.append(blk.reshape(-1, d))
-        a, _ = _stage_build_gram(blk, kernel, config, want_chol=False)
+        a, ub = leaf_stage_factors(blk, lm_parent[start:stop],
+                                   linv_parent[start:stop], kernel, config)
         adiag_parts.append(a)
-        u_parts.append(_stage_build_cross(
-            blk, lm_parent[start:stop], linv_parent[start:stop], kernel, config))
+        u_parts.append(ub)
     adiag = jnp.concatenate(adiag_parts, axis=0)
     u = jnp.concatenate(u_parts, axis=0)
     x_sorted = jnp.concatenate(x_parts, axis=0)

@@ -133,6 +133,36 @@ def prepare(f: HCKFactors, w: Array,
     return OOSPlan(c, wl, c_tilde.astype(wl.dtype))
 
 
+def apply_segments(
+    xl: Array, wl: Array, lm: Array, ct: Array, qs: Array,
+    kernel: BaseKernel, config: SolveConfig | None = None,
+) -> Array:
+    """Phase-2 stage launches on pre-gathered per-query blocks.
+
+    ``xl`` (q, n0, d) / ``wl`` (q, n0, k) are each query's leaf block and
+    leaf weights, ``lm`` (q, r, d) / ``ct`` (q, r, k) its parent
+    landmarks and pushed-down root-path coefficients, ``qs`` (q, d) the
+    queries themselves.  Returns (q, k) — the exact-local term plus the
+    flattened-walk term, one ``oos_local`` and one ``oos_walk`` registry
+    launch.  Hoisted out of :func:`apply_plan` so the mesh prediction
+    engine (:class:`repro.serving.predict_service.MeshPredictEngine`)
+    can run the SAME launches inside a ``shard_map`` body on the blocks
+    each device owns.
+    """
+    config = config if config is not None else DEFAULT_CONFIG
+    n0, r, k = xl.shape[1], lm.shape[1], wl.shape[-1]
+    backend = resolve_backend(config, "oos_local", dtype=qs.dtype,
+                              n0=n0, r=r, k=k)
+    z = get_impl("oos_local", backend)(
+        xl, wl, qs, name=kernel.name, sigma=kernel.sigma,
+        interpret=config.interpret).astype(wl.dtype)
+    backend = resolve_backend(config, "oos_walk", dtype=qs.dtype,
+                              n0=r, r=r, k=k)
+    return z + get_impl("oos_walk", backend)(
+        lm, ct, qs, name=kernel.name, sigma=kernel.sigma,
+        interpret=config.interpret).astype(z.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("kernel", "config"))
 def apply_plan(
     f: HCKFactors, plan: OOSPlan, queries: Array, kernel: BaseKernel,
@@ -144,7 +174,7 @@ def apply_plan(
     (``oos_local`` + ``oos_walk`` registry stages) -> unsort.
     """
     config = config if config is not None else DEFAULT_CONFIG
-    levels, n0, r = f.levels, f.leaf_size, f.rank
+    levels, n0 = f.levels, f.leaf_size
     q = queries.shape[0]
     k = plan.w_leaf.shape[-1]
     if levels == 0:
@@ -156,26 +186,15 @@ def apply_plan(
     qs = queries[order]                                  # leaf-sorted queries
     ls = leaf[order]
 
-    # exact local term: one batched per-leaf contraction over the sorted
-    # segments (the gathers below are coalesced: equal indices are adjacent)
+    # gathers over the sorted segments are coalesced (equal indices are
+    # adjacent); the plan's pushed-down c~ already contains the whole
+    # W-chain and Sigma^{-1}, so the walk term needs only the leaf
+    # parent's landmark kernel values.
     xl = f.x_sorted.reshape(f.num_leaves, n0, -1)[ls]    # (q, n0, d)
     wl = plan.w_leaf[ls]                                 # (q, n0, k)
-    backend = resolve_backend(config, "oos_local", dtype=queries.dtype,
-                              n0=n0, r=r, k=k)
-    z = get_impl("oos_local", backend)(
-        xl, wl, qs, name=kernel.name, sigma=kernel.sigma,
-        interpret=config.interpret).astype(plan.w_leaf.dtype)
-
-    # flattened root path: the plan's pushed-down c~ already contains the
-    # whole W-chain and Sigma^{-1}, so the walk is one more contraction
-    # against the leaf parent's landmark kernel values.
     lm = f.landmarks[levels - 1][ls >> 1]                # (q, r, d)
     ct = plan.c_tilde[ls]                                # (q, r, k)
-    backend = resolve_backend(config, "oos_walk", dtype=queries.dtype,
-                              n0=r, r=r, k=k)
-    z = z + get_impl("oos_walk", backend)(
-        lm, ct, qs, name=kernel.name, sigma=kernel.sigma,
-        interpret=config.interpret).astype(z.dtype)
+    z = apply_segments(xl, wl, lm, ct, qs, kernel, config)
 
     return jnp.zeros((q, k), z.dtype).at[order].set(z)   # unsort
 

@@ -277,6 +277,26 @@ def group_by_leaf(leaf: Array, num_leaves: int) -> tuple[Array, Array, Array]:
     return order, counts, starts
 
 
+def owner_device(leaf: Array, levels: int, n_devices: int):
+    """Owning device of each leaf index under the subtree mesh layout.
+
+    Device p owns the contiguous leaf range whose root-path prefix is p
+    (``repro.launch.dist_hck``), i.e. the top ``log2(n_devices)`` bits of
+    the leaf's L-bit path: ``leaf >> (levels - log2(P))``.  Works on
+    numpy and jax int arrays alike (pure shift); ``n_devices`` must be a
+    power of two no deeper than the tree — the same constraint
+    ``dist_hck.device_level`` enforces for the mesh itself.
+    """
+    t = int(n_devices).bit_length() - 1
+    if (1 << t) != n_devices:
+        raise ValueError(f"device count {n_devices} must be a power of two")
+    if levels < t:
+        raise ValueError(
+            f"levels={levels} too shallow for {n_devices} devices: need >= "
+            f"log2(P)={t} so each device owns at least one leaf")
+    return leaf >> (levels - t)
+
+
 def pad_points(x: Array, y: Array | None, leaf_size: int, levels: int,
                key: Array, *, num_leaves: int | None = None):
     """Pad (x, y) so n == leaf_size * 2**levels.

@@ -238,6 +238,7 @@ def pad_source(source: ChunkSource, y, leaf_size: int, levels: int, key):
 def stream_partition(
     source: ChunkSource, levels: int, key: Array, *,
     method: str = "rp", chunk_rows: int = 1 << 16,
+    mesh=None, mesh_axis: str = "dev",
 ):
     """Streaming level-synchronous partition over a host-resident source.
 
@@ -248,6 +249,14 @@ def stream_partition(
     come from :func:`repro.core.partition.rp_directions` with the same key
     tree as the batched splitter, so the resulting permutation, directions
     and thresholds are identical to ``build_partition`` on the same data.
+
+    With ``mesh`` set (a 1-D device mesh, e.g.
+    :func:`repro.launch.mesh.kernel_mesh`), each projection chunk is
+    committed row-sharded over ``mesh_axis`` before the contraction, so
+    the per-chunk O(chunk * d) projection work spreads across the mesh
+    (the contraction axis d is unsharded — zero communication).  Ragged
+    chunks that don't divide the mesh stay single-device.  The split
+    itself is placement-invariant, so the permutation is unchanged.
 
     Returns ``(perm, tree)``: the host int64 permutation (sorted position
     -> source row) and the device :class:`PartitionTree` routing record.
@@ -262,6 +271,10 @@ def stream_partition(
     n, d = source.n, source.dim
     if n % (1 << levels) != 0:
         raise ValueError(f"n={n} not divisible by 2**levels={1 << levels}")
+    row_sh = None
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        row_sh = NamedSharding(mesh, PartitionSpec(mesh_axis))
     dtype = jnp.asarray(source.chunk(0, 1)).dtype
     perm = np.arange(n, dtype=np.int64)
     dirs, thrs = [], []
@@ -276,6 +289,8 @@ def stream_partition(
             for c0 in range(0, m, chunk_rows):
                 c1 = min(c0 + chunk_rows, m)
                 blk = jnp.asarray(source.take(sl[c0:c1]))
+                if row_sh is not None and (c1 - c0) % mesh.size == 0:
+                    blk = jax.device_put(blk, row_sh)
                 proj[c0:c1] = np.asarray(
                     jnp.einsum("md,d->m", blk, dmat[b]))
             order = np.argsort(proj, kind="stable")

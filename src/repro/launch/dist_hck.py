@@ -24,9 +24,15 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core import hmatrix
-from repro.core.hck import HCKFactors, build_hck
+from repro.core.hck import (HCKFactors, _stage_build_cross, _stage_build_gram,
+                            build_hck, landmark_indices, leaf_stage_factors,
+                            sigma_linv)
 from repro.core.kernels_fn import BaseKernel
 from repro.kernels.registry import (DEFAULT_CONFIG, SolveConfig, get_impl,
                                     resolve_backend)
@@ -277,3 +283,362 @@ def dist_to_dense(local_fs: list, top: TopFactors) -> Array:
             a = a.at[ri, rj].set(cross)
             a = a.at[rj, ri].set(cross.T)
     return a
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded end-to-end build: one controller, P devices, subtree
+# ownership.  Unlike the per-device build above (independent local trees +
+# a separately-sampled top tree), these functions reproduce the EXACT
+# single-host build_hck / build_hck_streaming factors — same key tree, same
+# stage launches — just partitioned over the mesh, so every single-host
+# parity/oracle test doubles as a distributed correctness gate.
+# ---------------------------------------------------------------------------
+
+def shard_by_subtree(tree_like, mesh: Mesh, axis: str = "dev"):
+    """device_put a factor pytree into the subtree layout on ``mesh``.
+
+    Node-stacked leading axes — leaf stacks ``u``/``adiag``, ``x_sorted``
+    rows, landmark/sigma/W levels with at least P nodes — shard over
+    ``axis`` whenever the leading dim divides by P; everything else (the
+    top log2(P) levels whose stacks are smaller than the mesh,
+    permutations, thresholds) replicates.  Works for
+    :class:`~repro.core.hck.HCKFactors`,
+    :class:`~repro.core.hck.SweepPlan`,
+    :class:`~repro.core.oos.OOSPlan` and plain arrays alike.
+    """
+    p = mesh.size
+    node_sh = NamedSharding(mesh, P(axis))
+    rep_sh = NamedSharding(mesh, P())
+
+    def put(a):
+        if (getattr(a, "ndim", 0) >= 2 and a.shape[0] >= p
+                and a.shape[0] % p == 0):
+            return jax.device_put(a, node_sh)
+        return jax.device_put(a, rep_sh)
+
+    return jax.tree.map(put, tree_like)
+
+
+@jax.jit
+def _level_projections(xp: Array, dmat: Array) -> Array:
+    """(n, d) permuted points x (B, d) node directions -> (B, n/B)."""
+    bsz = dmat.shape[0]
+    blocks = xp.reshape(bsz, xp.shape[0] // bsz, xp.shape[1])
+    return jnp.einsum("bmd,bd->bm", blocks, dmat)
+
+
+def dist_partition(x: Array, levels: int, key: Array, mesh: Mesh, *,
+                   method: str = "rp", axis: str = "dev"):
+    """Mesh-parallel balanced partition (distributed ``build_partition``).
+
+    Projections run on the mesh: the permuted points are committed
+    row-sharded over ``axis`` and each level's (B, m, d) x (B, d)
+    contraction partitions under GSPMD with zero communication (the
+    contraction axis d is unsharded).  The median split — stable argsort
+    + threshold per node — runs on the host exactly as
+    :func:`repro.data.pipeline.stream_partition` does.  Both pieces are
+    pinned bit-identical to :func:`repro.core.partition.build_partition`
+    (same :func:`~repro.core.partition.rp_directions` key tree, same
+    stable sort, same threshold arithmetic), so the distributed build's
+    factor-parity gates hold all the way down to the permutation.
+
+    Returns ``(x_sorted, tree)`` with ``x_sorted`` committed row-sharded
+    to the mesh.
+    """
+    from repro.core.partition import PartitionTree, rp_directions
+
+    if method != "rp":
+        raise NotImplementedError(
+            f"dist_partition supports method='rp' only, got {method!r}")
+    n, d = x.shape
+    if n % (1 << levels) != 0:
+        raise ValueError(f"n={n} not divisible by 2**levels={1 << levels}")
+    if n % mesh.size != 0:
+        raise ValueError(f"n={n} not divisible by mesh size {mesh.size}")
+    row_sh = NamedSharding(mesh, P(axis))
+    x_host = np.asarray(x)
+    dtype = jnp.asarray(x[:1]).dtype
+    perm = np.arange(n, dtype=np.int64)
+    dirs, thrs = [], []
+    for lvl in range(levels):
+        key, sub = jax.random.split(key)
+        bsz, m = 1 << lvl, n >> lvl
+        dmat = rp_directions(sub, bsz, d, dtype)
+        xp = jax.device_put(x_host[perm].astype(dtype), row_sh)
+        proj = np.asarray(_level_projections(xp, dmat))
+        thr_lvl = np.empty((bsz,), dtype=proj.dtype)
+        for b in range(bsz):
+            order = np.argsort(proj[b], kind="stable")
+            sp = proj[b][order]
+            thr_lvl[b] = thr_lvl.dtype.type(0.5) * (sp[m // 2 - 1] + sp[m // 2])
+            perm[b * m:(b + 1) * m] = perm[b * m:(b + 1) * m][order]
+        dirs.append(dmat)
+        thrs.append(jnp.asarray(thr_lvl))
+    x_sorted = jax.device_put(x_host[perm].astype(dtype), row_sh)
+    tree = PartitionTree(jnp.asarray(perm, dtype=jnp.int32),
+                         tuple(dirs), tuple(thrs))
+    return x_sorted, tree
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_gram_fn(mesh: Mesh, axis: str, kernel: BaseKernel,
+                     config: SolveConfig, want_chol: bool):
+    """jit(shard_map) wrapper of the ``build_gram`` stage, cached per
+    (mesh, kernel, config) so repeated builds reuse one executable.
+    Returns gram only (``want_chol=False``) or (gram, chol, Linv)."""
+    def body(blocks):
+        gram, chol = _stage_build_gram(blocks, kernel, config,
+                                       want_chol=want_chol)
+        if not want_chol:
+            return gram
+        return gram, chol, sigma_linv(chol)
+
+    spec = P(axis)
+    out = (spec, spec, spec) if want_chol else spec
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,),
+                             out_specs=out))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_cross_fn(mesh: Mesh, axis: str, kernel: BaseKernel,
+                      config: SolveConfig):
+    """jit(shard_map) wrapper of the ``build_cross`` stage at CHILD
+    granularity: parent landmark/Linv stacks arrive pre-repeated per
+    child, so a sibling pair never straddles a device boundary and each
+    device's launch touches only rows it owns."""
+    def body(blocks, lm_parent, linv_parent):
+        return _stage_build_cross(blocks, lm_parent, linv_parent, kernel,
+                                  config)
+
+    spec = P(axis)
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
+                             out_specs=spec))
+
+
+def _dist_middle_factors(landmarks: tuple, kernel: BaseKernel,
+                         config: SolveConfig, mesh: Mesh, axis: str):
+    """Per-level Sigma / Cholesky / Linv with the top-tree split.
+
+    Levels with fewer than P nodes are tiny ((<P) x r x r) and are
+    computed replicated — the distributed analogue of
+    :func:`build_top_factors`' replicated top tree — while levels with
+    at least one node per device run node-sharded under ``shard_map``.
+    Stage rows are independent, so both placements produce the values of
+    :func:`repro.core.hck._middle_factors` exactly.
+    """
+    p = mesh.size
+    sigma, sigma_cho, sigma_li = [], [], []
+    for lm in landmarks:
+        if lm.shape[0] < p:
+            s, c = _stage_build_gram(lm, kernel, config)
+            li = sigma_linv(c)
+        else:
+            s, c, li = _sharded_gram_fn(mesh, axis, kernel, config, True)(lm)
+        sigma.append(s)
+        sigma_cho.append(c)
+        sigma_li.append(li)
+    return tuple(sigma), tuple(sigma_cho), sigma_li
+
+
+def _dist_transfer_ops(landmarks: tuple, sigma_li: list, kernel: BaseKernel,
+                       config: SolveConfig, mesh: Mesh, axis: str) -> tuple:
+    """W factors at levels 1..L-1, mesh-parallel.
+
+    Replicated (top) levels reuse ``build_hck``'s paired-sibling launch;
+    node-sharded levels run at child granularity with parent stacks
+    repeated per child (the streaming engine's leaf layout).  Each stage
+    row is independent, so the two granularities are value-identical.
+    """
+    p = mesh.size
+    rank, d = landmarks[0].shape[1], landmarks[0].shape[2]
+    w = []
+    for lvl in range(1, len(landmarks)):
+        if (1 << lvl) < p:
+            paired = landmarks[lvl].reshape(1 << (lvl - 1), 2 * rank, d)
+            w.append(_stage_build_cross(
+                paired, landmarks[lvl - 1], sigma_li[lvl - 1], kernel,
+                config).reshape(1 << lvl, rank, rank))
+        else:
+            w.append(_sharded_cross_fn(mesh, axis, kernel, config)(
+                landmarks[lvl], jnp.repeat(landmarks[lvl - 1], 2, axis=0),
+                jnp.repeat(sigma_li[lvl - 1], 2, axis=0)))
+    return tuple(w)
+
+
+def dist_build_hck(x: Array, *, levels: int, rank: int, key: Array,
+                   kernel: BaseKernel, mesh: Mesh, method: str = "rp",
+                   config: SolveConfig | None = None,
+                   axis: str = "dev") -> HCKFactors:
+    """Mesh-parallel :func:`repro.core.hck.build_hck` (Algorithm 2).
+
+    Same key tree (partition subkey first, then one landmark subkey per
+    level) and same registry stages as the single-host batched engine,
+    so the returned factors MATCH ``build_hck`` on the same key —
+    ``tests/test_dist_build.py`` pins the parity at 1e-12 in f64.  The
+    layout is the subtree ownership of this module's header: device p
+    owns the contiguous leaf range whose root-path prefix is p, levels
+    with < P nodes are replicated from one gather, deeper levels are
+    node-sharded, and every ``build_gram`` / ``build_cross`` launch runs
+    under ``shard_map`` on local rows only (zero per-stage
+    communication; the U/W stages use child granularity with parents
+    repeated so sibling pairs never straddle devices).
+
+    ``levels`` must be at least max(log2(P), 1) so each device owns at
+    least one leaf.  Returns factors committed via
+    :func:`shard_by_subtree`.
+    """
+    config = config if config is not None else DEFAULT_CONFIG
+    p = mesh.size
+    t = device_level(p)
+    n, d = x.shape
+    n_leaves = 1 << levels
+    if levels < max(t, 1):
+        raise ValueError(
+            f"levels={levels} too shallow for {p} devices: need >= "
+            f"log2(P)={t} so each device owns at least one leaf")
+    if n % n_leaves != 0:
+        raise ValueError(f"n={n} not divisible by 2**levels={n_leaves}")
+    n0 = n // n_leaves
+    if rank > n0:
+        raise ValueError(f"rank {rank} exceeds leaf size {n0} (paper §4.4)")
+
+    kpart, key = jax.random.split(key)
+    x_sorted, tree = dist_partition(x, levels, kpart, mesh, method=method,
+                                    axis=axis)
+    xs_host = np.asarray(x_sorted)
+
+    node_sh = NamedSharding(mesh, P(axis))
+    rep_sh = NamedSharding(mesh, P())
+
+    # landmarks: engine-identical indices (same per-level subkeys as
+    # build_hck); top-tree stacks (< P nodes) replicate on every device
+    # — the one-all_gather "replicate the tree top" move — and deeper
+    # stacks are committed node-sharded.
+    landmarks = []
+    for lvl in range(levels):
+        key, sub = jax.random.split(key)
+        bsz, m = 1 << lvl, n >> lvl
+        idx = np.asarray(landmark_indices(sub, bsz, m, rank))
+        rows = (np.arange(bsz)[:, None] * m + idx).reshape(-1)
+        lm = jnp.asarray(xs_host[rows]).reshape(bsz, rank, d)
+        landmarks.append(jax.device_put(lm, node_sh if bsz >= p else rep_sh))
+    landmarks = tuple(landmarks)
+
+    sigma, sigma_cho, sigma_li = _dist_middle_factors(
+        landmarks, kernel, config, mesh, axis)
+
+    # leaf factors: leaf-granularity stages under shard_map, parent
+    # stacks repeated per leaf (the streaming engine's layout)
+    leaves = x_sorted.reshape(n_leaves, n0, d)
+    adiag = _sharded_gram_fn(mesh, axis, kernel, config, False)(leaves)
+    u = _sharded_cross_fn(mesh, axis, kernel, config)(
+        leaves, jnp.repeat(landmarks[-1], 2, axis=0),
+        jnp.repeat(sigma_li[-1], 2, axis=0))
+
+    w = _dist_transfer_ops(landmarks, sigma_li, kernel, config, mesh, axis)
+    f = HCKFactors(x_sorted, tree, landmarks, tuple(sigma), tuple(sigma_cho),
+                   w, u, adiag)
+    return shard_by_subtree(f, mesh, axis=axis)
+
+
+def dist_build_hck_streaming(source, *, levels: int, rank: int, key: Array,
+                             kernel: BaseKernel, mesh: Mesh,
+                             method: str = "rp",
+                             config: SolveConfig | None = None,
+                             leaf_batch: int = 64, chunk_rows: int = 1 << 16,
+                             axis: str = "dev") -> HCKFactors:
+    """Mesh-parallel :func:`repro.core.hck.build_hck_streaming`.
+
+    Same key tree and stage numerics as the streaming engine (which in
+    turn matches ``build_hck``), so factors agree with BOTH single-host
+    builds at round-off.  The partition streams through
+    :func:`repro.data.pipeline.stream_partition` with its projection
+    chunks committed row-sharded (``mesh=``), landmark rows gather on
+    the host, and leaf batches whose size divides P run the shard_map
+    leaf stages — ragged tails fall back to the local launch (stage rows
+    are independent, so the values are identical either way).
+    """
+    from repro.data.pipeline import stream_partition
+
+    config = config if config is not None else DEFAULT_CONFIG
+    p = mesh.size
+    t = device_level(p)
+    n, d = source.n, source.dim
+    n_leaves = 1 << levels
+    if levels < max(t, 1):
+        raise ValueError(
+            f"levels={levels} too shallow for {p} devices: need >= "
+            f"log2(P)={t} so each device owns at least one leaf")
+    if n % n_leaves != 0:
+        raise ValueError(f"n={n} not divisible by 2**levels={n_leaves}")
+    n0 = n // n_leaves
+    if rank > n0:
+        raise ValueError(f"rank {rank} exceeds leaf size {n0} (paper §4.4)")
+
+    kpart, key = jax.random.split(key)
+    perm_np, tree = stream_partition(source, levels, kpart, method=method,
+                                     chunk_rows=chunk_rows, mesh=mesh,
+                                     mesh_axis=axis)
+
+    landmarks = []
+    for lvl in range(levels):
+        key, sub = jax.random.split(key)
+        bsz, m = 1 << lvl, n >> lvl
+        idx = np.asarray(landmark_indices(sub, bsz, m, rank))
+        rows = perm_np[(np.arange(bsz)[:, None] * m + idx).reshape(-1)]
+        landmarks.append(jnp.asarray(source.take(rows)).reshape(bsz, rank, d))
+    landmarks = tuple(landmarks)
+
+    sigma, sigma_cho, sigma_li = _dist_middle_factors(
+        landmarks, kernel, config, mesh, axis)
+
+    lm_parent = jnp.repeat(landmarks[-1], 2, axis=0)
+    linv_parent = jnp.repeat(sigma_li[-1], 2, axis=0)
+    gram_fn = _sharded_gram_fn(mesh, axis, kernel, config, False)
+    cross_fn = _sharded_cross_fn(mesh, axis, kernel, config)
+    row_sh = NamedSharding(mesh, P(axis))
+    adiag_parts, u_parts, x_parts = [], [], []
+    for start in range(0, n_leaves, leaf_batch):
+        stop = min(start + leaf_batch, n_leaves)
+        rows = perm_np[start * n0:stop * n0]
+        blk = jnp.asarray(source.take(rows)).reshape(stop - start, n0, d)
+        x_parts.append(blk.reshape(-1, d))
+        if (stop - start) % p == 0:
+            blk = jax.device_put(blk, row_sh)
+            a = gram_fn(blk)
+            ub = cross_fn(blk, lm_parent[start:stop],
+                          linv_parent[start:stop])
+        else:
+            a, ub = leaf_stage_factors(blk, lm_parent[start:stop],
+                                       linv_parent[start:stop], kernel,
+                                       config)
+        adiag_parts.append(a)
+        u_parts.append(ub)
+    adiag = jnp.concatenate(adiag_parts, axis=0)
+    u = jnp.concatenate(u_parts, axis=0)
+    x_sorted = jnp.concatenate(x_parts, axis=0)
+
+    w = _dist_transfer_ops(landmarks, sigma_li, kernel, config, mesh, axis)
+    f = HCKFactors(x_sorted, tree, landmarks, tuple(sigma), tuple(sigma_cho),
+                   w, u, adiag)
+    return shard_by_subtree(f, mesh, axis=axis)
+
+
+def dist_sweep_factors(plan, kernel: BaseKernel, mesh: Mesh,
+                       config: SolveConfig | None = None,
+                       axis: str = "dev") -> HCKFactors:
+    """Sweep-engine factor instantiation on a subtree-sharded plan.
+
+    :func:`repro.core.hck.sweep_factors` is already one batched
+    ``build_gram_dist`` / ``build_cross_dist`` stage launch per level
+    inside one jit, so mesh parallelism here is pure data placement:
+    commit the cached distance tiles node-sharded (top levels
+    replicated) via :func:`shard_by_subtree` and GSPMD partitions every
+    stage launch over the mesh.  Values are placement-invariant — the
+    σ-sweep parity tests pass unchanged on the sharded plan.
+    """
+    from repro.core.hck import sweep_factors
+
+    plan = shard_by_subtree(plan, mesh, axis=axis)
+    return shard_by_subtree(sweep_factors(plan, kernel, config), mesh,
+                            axis=axis)

@@ -23,6 +23,29 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
+def kernel_mesh(n_devices: int | None = None, axis: str = "dev") -> Mesh:
+    """1-D device mesh for the distributed HCK pipeline.
+
+    The kernel side shards the hierarchy by SUBTREE — device p owns the
+    contiguous leaf range whose root-path prefix equals p (see
+    ``repro.launch.dist_hck``) — so its mesh is a single axis over the
+    first ``n_devices`` devices (default: all).  The device count must be
+    a power of two: the top ``log2(P)`` tree levels map 1:1 onto mesh
+    coordinates, and a binary tree has no non-power-of-two level widths
+    (``dist_hck.device_level`` raises otherwise).
+    """
+    from repro.launch.dist_hck import device_level
+
+    n = n_devices if n_devices is not None else jax.device_count()
+    if n > jax.device_count():
+        raise ValueError(
+            f"kernel_mesh wants {n} devices but only {jax.device_count()} "
+            "are visible (set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=N for a virtual mesh)")
+    device_level(n)          # validates the power-of-two constraint
+    return jax.make_mesh((n,), (axis,), devices=jax.devices()[:n])
+
+
 def make_mesh(cfg: MeshConfig) -> Mesh:
     return jax.make_mesh(cfg.shape, cfg.axis_names)
 

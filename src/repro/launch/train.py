@@ -22,6 +22,16 @@ Richardson rival); K(X, X) is never materialized.
   PYTHONPATH=src python -m repro.launch.train --task krr --n 8192 \
       --rank 128 --solver exact-cg
 
+``--task krr --mesh P``: the same fit, mesh-parallel — partition,
+build, solve, and serve sharded by subtree over P host-platform (or
+real) devices (repro.launch.dist_hck).  P must be a power of two; on a
+CPU container export ``XLA_FLAGS=--xla_force_host_platform_device_count=P``
+before launching.  Composes with ``--stream``.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.train --task krr --n 65536 \
+      --rank 64 --mesh 8
+
 ``--task krr --grid``: hyperparameter sweep over a σ×λ grid through the
 sweep engine — ONE partition + distance pass (SweepPlan), per σ one
 factor-instantiation launch, per σ ALL λ inverted together
@@ -71,6 +81,11 @@ def run_krr(args):
     y = jnp.sin(x[:, 0]) + 0.25 * jnp.cos(2.0 * x[:, 1])
     ker = BaseKernel("gaussian", sigma=2.0)
 
+    if args.mesh and args.solver != "hck":
+        raise SystemExit("--mesh drives the structured 'hck' path; shard an "
+                         "exact-kernel solve with ExactKernelOp.sharded(mesh)"
+                         " + solvers.cg instead")
+
     if args.solver in ("exact-cg", "eigenpro"):
         # matvec-free iterative subsystem: EXACT-kernel KRR, the HCK
         # hierarchy acting only as CG preconditioner (or the EigenPro
@@ -91,6 +106,54 @@ def run_krr(args):
               f"solver={args.solver} backend={args.solve_backend}: "
               f"fit {t_fit:.2f} s in {it} iterations "
               f"(rel resid {res:.2e}), train rel-err {float(err):.4f}")
+        return
+
+    if args.mesh:
+        # mesh-parallel end-to-end: sharded partition + build
+        # (dist_build_hck), GSPMD Algorithm-2 solve on the subtree-sharded
+        # factors, device-routed Algorithm-3 serving (MeshPredictEngine)
+        from repro.core import hmatrix, oos
+        from repro.core.krr import HCKRegressor
+        from repro.core.partition import auto_levels_ceil, pad_points
+        from repro.launch.dist_hck import (device_level, dist_build_hck,
+                                           dist_build_hck_streaming)
+        from repro.launch.mesh import kernel_mesh
+
+        mesh = kernel_mesh(args.mesh)
+        p = mesh.devices.size
+        levels = max(1, auto_levels_ceil(args.n, args.rank), device_level(p))
+        kpad, kbuild = jax.random.split(jax.random.PRNGKey(1))
+        t0 = time.perf_counter()
+        if args.stream:
+            from repro.data.pipeline import ArraySource, pad_source
+
+            source, yp, _ = pad_source(ArraySource(np.asarray(x)), y,
+                                       args.rank, levels, kpad)
+            factors = dist_build_hck_streaming(
+                source, levels=levels, rank=args.rank, key=kbuild,
+                kernel=ker, mesh=mesh, config=cfg,
+                leaf_batch=args.leaf_batch)
+        else:
+            xp, yp, _ = pad_points(x, y, args.rank, levels, kpad)
+            factors = dist_build_hck(xp, levels=levels, rank=args.rank,
+                                     key=kbuild, kernel=ker, mesh=mesh,
+                                     config=cfg)
+        targets = jnp.asarray(yp)[:, None]
+        alpha = hmatrix.solve(factors, targets[factors.tree.perm],
+                              ridge=1e-2, config=cfg)
+        plan = oos.prepare(factors, alpha, cfg)
+        model = HCKRegressor(ker, factors, plan, alpha, squeeze=True,
+                             solve_config=cfg)
+        engine = model.engine.on_mesh(mesh)
+        jax.block_until_ready(alpha)
+        t_fit = time.perf_counter() - t0
+        m = min(args.n, 2048)
+        err = krr.relative_error(engine.apply(x[:m])[:, 0], y[:m])
+        mode = "streaming" if args.stream else "in-memory"
+        print(f"krr-dist n={args.n} d={args.d} rank={args.rank} "
+              f"devices={p} backend={args.solve_backend} ({mode}): "
+              f"fit {t_fit:.2f} s ({args.n / t_fit:,.0f} points/s), "
+              f"train rel-err {float(err):.4f}")
         return
 
     t0 = time.perf_counter()
@@ -128,6 +191,12 @@ def run_krr_grid(args):
     from repro.kernels.registry import SolveConfig
 
     cfg = SolveConfig(backend=args.solve_backend)
+    mesh = None
+    if args.mesh:
+        from repro.launch.dist_hck import dist_sweep_factors
+        from repro.launch.mesh import kernel_mesh
+
+        mesh = kernel_mesh(args.mesh)
     sigmas = [float(s) for s in args.sigmas.split(",")]
     lams = jnp.asarray([float(v) for v in args.lams.split(",")])
     key = jax.random.PRNGKey(0)
@@ -151,9 +220,11 @@ def run_krr_grid(args):
     t0 = time.perf_counter()
     for s in sigmas:
         ker = BaseKernel("gaussian", sigma=s)
+        factors = (dist_sweep_factors(plan, ker, mesh, cfg)
+                   if mesh is not None else sweep_factors(plan, ker, cfg))
         paths.append(krr.fit_path(
             x, y, kernel=ker, lams=lams, solve_config=cfg,
-            factors=sweep_factors(plan, ker, cfg), x_val=xv, y_val=yv))
+            factors=factors, x_val=xv, y_val=yv))
     jax.block_until_ready(paths[-1].scores)
     t_grid = time.perf_counter() - t0
 
@@ -208,6 +279,11 @@ def main():
                     "preconditioned Richardson on the exact kernel")
     ap.add_argument("--cg-maxiter", type=int, default=300,
                     help="iteration cap for --solver exact-cg/eigenpro")
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="shard the krr build/solve/predict over this many "
+                    "devices (power of two; subtree layout of "
+                    "repro.launch.dist_hck — on CPU export XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=P first)")
     ap.add_argument("--stream", action="store_true",
                     help="ingest through the chunked host-resident pipeline")
     ap.add_argument("--leaf-batch", type=int, default=64,

@@ -21,6 +21,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import oos
 from repro.core.hck import HCKFactors
@@ -124,6 +125,15 @@ class PredictEngine:
 
     __call__ = apply
 
+    def on_mesh(self, mesh, *, axis: str = "dev",
+                **kwargs) -> "MeshPredictEngine":
+        """Distributed twin of this engine: same factors/plan/kernel,
+        queries routed to the owning device
+        (:class:`MeshPredictEngine`)."""
+        return MeshPredictEngine(self.factors, self.plan, self.kernel,
+                                 mesh, config=self.config, axis=axis,
+                                 **kwargs)
+
     def warmup(self) -> list[int]:
         """Compile every bucket up front (queries must match the training
         feature dim, so there is nothing else to warm); returns the bucket
@@ -137,6 +147,150 @@ class PredictEngine:
         for b in buckets:
             jax.block_until_ready(self.apply(jnp.broadcast_to(dummy, (b, d))))
         return buckets
+
+    @property
+    def stats(self) -> dict:
+        """Serving counters (calls, queries, pad waste, bucket hits)."""
+        return {
+            "calls": self._calls,
+            "queries": self._queries,
+            "padded_queries": self._padded,
+            "bucket_hits": dict(sorted(self._bucket_hits.items())),
+        }
+
+
+@dataclasses.dataclass
+class MeshPredictEngine:
+    """Device-routed Algorithm-3 inference on a subtree-sharded hierarchy.
+
+    Under the distributed layout (``repro.launch.dist_hck``) device p
+    owns the contiguous leaf range whose root-path prefix is p, so a
+    query's prediction is computable entirely on the device owning its
+    leaf — the OOS plan's pushed-down ``c_tilde`` already folded the
+    whole root path into per-leaf coefficients.  ``apply`` therefore:
+
+      1. routes the batch on the host (the tree record is replicated)
+         and maps leaves to owners (top log2(P) path bits,
+         :func:`repro.core.partition.owner_device`);
+      2. stable-sorts queries by owner, pads each device's segment to a
+         shared power-of-two bucket, and ships ONE (P, bucket, d) stack
+         plus (P, bucket) device-local leaf indices, row-sharded;
+      3. runs one ``shard_map`` body per bucket size — each device
+         gathers leaf blocks / weights / parent landmarks / ``c_tilde``
+         from the shards it owns and calls
+         :func:`repro.core.oos.apply_segments`, the same launches as the
+         single-host engine;
+      4. gathers the (P, bucket, k) result and unsorts on the host.
+
+    Factors and plan are committed via ``shard_by_subtree`` at
+    construction; values match :class:`PredictEngine` at round-off (the
+    distributed bench/tests pin 1e-6 in f64 end to end).
+    """
+
+    factors: HCKFactors
+    plan: oos.OOSPlan
+    kernel: BaseKernel
+    mesh: object
+    config: SolveConfig | None = None
+    axis: str = "dev"
+    min_bucket: int = 64
+    max_bucket: int = 4096
+
+    def __post_init__(self):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.dist_hck import device_level, shard_by_subtree
+
+        if self.min_bucket < 1 or self.max_bucket < self.min_bucket:
+            raise ValueError(
+                f"bad bucket range [{self.min_bucket}, {self.max_bucket}]")
+        p = self.mesh.size
+        t = device_level(p)
+        levels = self.factors.levels
+        if levels < max(t, 1):
+            raise ValueError(
+                f"levels={levels} too shallow for {p} devices: need >= "
+                f"log2(P)={t} so each device owns at least one leaf")
+        self.factors = shard_by_subtree(self.factors, self.mesh,
+                                        axis=self.axis)
+        self.plan = shard_by_subtree(self.plan, self.mesh, axis=self.axis)
+        f = self.factors
+        n0 = f.leaf_size
+        self._leaves_per_dev = f.num_leaves // p
+        # leaf-granularity shard stacks: everything a device needs for a
+        # query routed to one of its leaves, indexed by LOCAL leaf id
+        spec = NamedSharding(self.mesh, P(self.axis))
+        self._x_leaf = jax.device_put(
+            f.x_sorted.reshape(f.num_leaves, n0, -1), spec)
+        self._lm_leaf = jax.device_put(
+            jnp.repeat(f.landmarks[levels - 1], 2, axis=0), spec)
+        kernel, config = self.kernel, self.config
+
+        def body(x_leaf, w_leaf, lm_leaf, ct_leaf, qs, lleaf):
+            qs, lleaf = qs[0], lleaf[0]
+            z = oos.apply_segments(x_leaf[lleaf], w_leaf[lleaf],
+                                   lm_leaf[lleaf], ct_leaf[lleaf], qs,
+                                   kernel, config)
+            return z[None]
+
+        sp = P(self.axis)
+        self._fn = jax.jit(shard_map(
+            body, mesh=self.mesh, in_specs=(sp,) * 6, out_specs=sp))
+        self._calls = 0
+        self._queries = 0
+        self._padded = 0
+        self._bucket_hits: dict[int, int] = {}
+
+    def apply(self, queries: Array) -> Array:
+        """(q, d) -> (q, k), each query served by its leaf's owner."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.partition import owner_device, route
+
+        q = queries.shape[0]
+        k = self.plan.w_leaf.shape[-1]
+        if q == 0:
+            return jnp.zeros((0, k), self.plan.w_leaf.dtype)
+        if q > self.max_bucket:
+            return jnp.concatenate(
+                [self.apply(queries[i:i + self.max_bucket])
+                 for i in range(0, q, self.max_bucket)], axis=0)
+        p = self.mesh.size
+        levels = self.factors.levels
+        leaf = np.asarray(route(self.factors.tree, queries))
+        dev = np.asarray(owner_device(leaf, levels, p))
+        order = np.argsort(dev, kind="stable")
+        counts = np.bincount(dev, minlength=p)
+        b = bucket_size(max(int(counts.max()), 1), self.min_bucket,
+                        self.max_bucket)
+
+        q_host = np.asarray(queries)
+        stacked_q = np.zeros((p, b, q_host.shape[1]), q_host.dtype)
+        stacked_leaf = np.zeros((p, b), np.int32)
+        starts = np.cumsum(counts) - counts
+        pos = np.arange(q) - starts[dev[order]]          # rank inside segment
+        stacked_q[dev[order], pos] = q_host[order]
+        stacked_leaf[dev[order], pos] = (
+            leaf[order] - dev[order] * self._leaves_per_dev)
+
+        spec = NamedSharding(self.mesh, P(self.axis))
+        z = self._fn(self._x_leaf, self.plan.w_leaf, self._lm_leaf,
+                     self.plan.c_tilde,
+                     jax.device_put(jnp.asarray(stacked_q), spec),
+                     jax.device_put(jnp.asarray(stacked_leaf), spec))
+        zflat = np.asarray(z).reshape(p * b, k)
+        out = np.empty((q, k), zflat.dtype)
+        out[order] = zflat[dev[order] * b + pos]
+        self._calls += 1
+        self._queries += q
+        self._padded += p * b - q
+        self._bucket_hits[b] = self._bucket_hits.get(b, 0) + 1
+        return jnp.asarray(out)
+
+    __call__ = apply
 
     @property
     def stats(self) -> dict:

@@ -68,6 +68,28 @@ def column_dot(u: Array, v: Array) -> Array:
     return jnp.sum(u * v, axis=0)
 
 
+def axis_dot(axis: str) -> Callable[[Array, Array], Array]:
+    """Mesh-wide :func:`column_dot` for ``shard_map`` bodies.
+
+    Returns a ``dot`` suitable for :func:`pcg`'s / the Lanczos
+    recurrence's injectable inner product: the local column sums psum
+    over ``axis``, so α/β (and therefore the iteration count) are
+    IDENTICAL to a single-host solve on the concatenated vectors — the
+    mesh-invariance gate in ``benchmarks/bench_dist.py`` pins this.
+    Outside shard_map (plain jit on sharded arrays) no hook is needed:
+    GSPMD already composes the partial sums.
+
+    A ``shard_map`` body that calls :func:`pcg` must pass
+    ``check_rep=False`` to ``shard_map`` — jax has no replication rule
+    for the solver's ``lax.while_loop`` (the psum'd scalars are in fact
+    replicated; the flag only skips the static check).
+    """
+    def dot(u: Array, v: Array) -> Array:
+        return jax.lax.psum(jnp.sum(u * v, axis=0), axis)
+
+    return dot
+
+
 def run_traced_iteration(step, state0, r0, bb, *, tol: float, maxiter: int,
                          dot=column_dot) -> tuple:
     """Shared scaffolding for residual-traced iterative solvers.

@@ -125,6 +125,20 @@ class ExactKernelOp:
                                      config=config, row_chunk=self.row_chunk)
         return out[:, 0] if squeeze else out
 
+    def sharded(self, mesh, axis: str = "dev") -> "ExactKernelOp":
+        """Copy of the operator with ``x`` committed row-sharded on ``mesh``.
+
+        Each chunked matvec then partitions under GSPMD: the (b, n)
+        kernel tile's column axis and the RHS rows are sharded, the
+        per-chunk contraction reduces with one psum.  Values (and so CG
+        iteration counts) are placement-invariant;
+        ``krr.fit_exact``/``fit_path`` run unchanged on the result.
+        """
+        from repro.launch.dist_hck import shard_by_subtree
+
+        return dataclasses.replace(
+            self, x=shard_by_subtree(self.x, mesh, axis=axis))
+
     def __call__(self, v: Array) -> Array:
         """Alias for :meth:`matvec` (operators are callables to solvers)."""
         return self.matvec(v)
@@ -158,6 +172,19 @@ class HCKOp:
         from repro.core import hmatrix
 
         return hmatrix.matvec(self.factors, v, self.config)
+
+    def sharded(self, mesh, axis: str = "dev") -> "HCKOp":
+        """Copy of the operator with the factors committed to the subtree
+        layout (:func:`repro.launch.dist_hck.shard_by_subtree`): leaf and
+        deep-level stacks node-sharded, the top log2(P) levels
+        replicated.  Every Algorithm-1 sweep then partitions under GSPMD
+        — values are placement-invariant, so solvers, SLQ probes, and
+        ``gp.mle_grid(logdet="slq")`` run unchanged.
+        """
+        from repro.launch.dist_hck import shard_by_subtree
+
+        return dataclasses.replace(
+            self, factors=shard_by_subtree(self.factors, mesh, axis=axis))
 
     def __call__(self, v: Array) -> Array:
         """Alias for :meth:`matvec` (operators are callables to solvers)."""

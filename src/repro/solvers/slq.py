@@ -35,6 +35,8 @@ def lanczos(
     matvec: Callable[[Array], Array],
     v0: Array,
     iters: int,
+    *,
+    all_reduce: Callable[[Array], Array] | None = None,
 ) -> tuple[Array, Array]:
     """Lanczos tridiagonalization of an SPD matvec from one start vector.
 
@@ -43,24 +45,49 @@ def lanczos(
     with full reorthogonalization against the kept basis (O(iters·n)
     memory; iters is small).  The loop is a static python unroll so the
     whole recurrence jits into one graph per (n, iters).
+
+    ``all_reduce`` injects the global reduction for every inner product
+    (α, the reorthogonalization coefficients, and the β norms): under
+    ``shard_map`` pass ``lambda s: jax.lax.psum(s, axis)`` and hand in
+    the LOCAL row slice of v0 — the recurrence then runs on the
+    mesh-wide vector, and the returned (α, β) equal the single-host
+    recurrence on the concatenated vector (the distributed tests pin
+    this).  The default (None) keeps local sums — correct under pjit,
+    where GSPMD already composes the partial sums, and on one device.
     """
+    if all_reduce is None:
+        def vdot(u, w):
+            return jnp.dot(u, w)
+
+        vnorm = jnp.linalg.norm
+
+        def reduce_coeffs(c):
+            return c
+    else:
+        def vdot(u, w):
+            return all_reduce(jnp.dot(u, w))
+
+        def vnorm(u):
+            return jnp.sqrt(all_reduce(jnp.dot(u, u)))
+
+        reduce_coeffs = all_reduce
     n = v0.shape[0]
     dtype = v0.dtype
-    q = v0 / jnp.linalg.norm(v0)
+    q = v0 / vnorm(v0)
     basis = [q]
     alphas, betas = [], []
     for j in range(iters):
         w = matvec(q)
         if w.ndim == 2:                       # operators may return (n, 1)
             w = w[:, 0]
-        alpha = jnp.dot(q, w)
+        alpha = vdot(q, w)
         alphas.append(alpha)
         w = w - alpha * q - (betas[-1] * basis[-2] if j > 0 else 0.0)
         # full reorthogonalization: converged Ritz directions reappear in
         # plain Lanczos and would double-count their f(θ) weight
         qs = jnp.stack(basis)                 # (j+1, n)
-        w = w - qs.T @ (qs @ w)
-        beta = jnp.linalg.norm(w)
+        w = w - qs.T @ reduce_coeffs(qs @ w)
+        beta = vnorm(w)
         if j < iters - 1:
             betas.append(beta)
             # guard breakdown (Krylov space exhausted): keep a zero row,
@@ -80,7 +107,7 @@ def _tridiag_eigh(alphas: Array, betas: Array) -> tuple[Array, Array]:
 
 
 def _slq_nodes(matvec, n: int, iters: int, probes: int, key: Array,
-               dtype) -> tuple[Array, Array]:
+               dtype, all_reduce=None) -> tuple[Array, Array]:
     """Ritz nodes/weights for all probes: ((probes, iters), (probes, iters)).
 
     Rademacher probes (the Hutchinson variance minimizer over ±1
@@ -96,7 +123,7 @@ def _slq_nodes(matvec, n: int, iters: int, probes: int, key: Array,
     z = jax.random.rademacher(key, (probes, n), dtype=dtype)
 
     def one(zp):
-        alphas, betas = lanczos(matvec, zp, iters)
+        alphas, betas = lanczos(matvec, zp, iters, all_reduce=all_reduce)
         return _tridiag_eigh(alphas, betas)
 
     # serial over probes (lax.map) — each probe already saturates the
@@ -113,6 +140,8 @@ def slq_quadrature(
     iters: int = 30,
     key: Array | None = None,
     dtype=jnp.float32,
+    all_reduce: Callable[[Array], Array] | None = None,
+    n_total: int | None = None,
 ) -> Array:
     """tr f(A) ≈ n · mean over probes of Σ_i τ_i² f(θ_i)  (scalar).
 
@@ -121,10 +150,18 @@ def slq_quadrature(
     ``hmatrix.matvec`` qualify.  ``f`` is applied elementwise to the Ritz
     values (e.g. ``jnp.log`` for logdet, ``lambda t: 1/t`` for the trace
     of the inverse).
+
+    Under ``shard_map`` pass the LOCAL row count as ``n``, the GLOBAL
+    one as ``n_total`` (the trace scale), a psum closure as
+    ``all_reduce``, and ``key = jax.random.fold_in(key,
+    jax.lax.axis_index(axis))`` so the per-device probe slices
+    concatenate into independent global Rademacher probes.
     """
     key = key if key is not None else jax.random.PRNGKey(0)
-    theta, tau2 = _slq_nodes(matvec, n, iters, probes, key, dtype)
-    return n * jnp.mean(jnp.sum(tau2 * f(theta), axis=-1))
+    theta, tau2 = _slq_nodes(matvec, n, iters, probes, key, dtype,
+                             all_reduce)
+    scale = n_total if n_total is not None else n
+    return scale * jnp.mean(jnp.sum(tau2 * f(theta), axis=-1))
 
 
 def slq_logdet(
@@ -137,6 +174,8 @@ def slq_logdet(
     key: Array | None = None,
     dtype=jnp.float32,
     floor: float = 1e-12,
+    all_reduce: Callable[[Array], Array] | None = None,
+    n_total: int | None = None,
 ) -> Array:
     """logdet(A + λI) for a whole ridge grid from ONE Lanczos pass.
 
@@ -146,13 +185,21 @@ def slq_logdet(
     beyond the base ``probes · iters`` matvecs.  ``floor`` clamps
     θ + λ away from 0 (round-off can push the smallest Ritz value of a
     barely-PD operator slightly negative).
+
+    ``all_reduce`` / ``n_total`` give the estimator mesh-wide inner
+    products under ``shard_map`` — same contract as
+    :func:`slq_quadrature` (local ``n``, global ``n_total``, per-device
+    ``fold_in`` of the probe key).  Sharded-operator callers under plain
+    jit need neither: GSPMD composes the partial sums already.
     """
     key = key if key is not None else jax.random.PRNGKey(0)
-    theta, tau2 = _slq_nodes(matvec, n, iters, probes, key, dtype)
+    theta, tau2 = _slq_nodes(matvec, n, iters, probes, key, dtype,
+                             all_reduce)
+    scale = n_total if n_total is not None else n
     if ridges is None:
         vals = jnp.log(jnp.maximum(theta, floor))
-        return n * jnp.mean(jnp.sum(tau2 * vals, axis=-1))
+        return scale * jnp.mean(jnp.sum(tau2 * vals, axis=-1))
     ridges = jnp.asarray(ridges, dtype=theta.dtype)
     shifted = theta[None, :, :] + ridges[:, None, None]    # (G, probes, it)
     vals = jnp.log(jnp.maximum(shifted, floor))
-    return n * jnp.mean(jnp.sum(tau2[None] * vals, axis=-1), axis=-1)
+    return scale * jnp.mean(jnp.sum(tau2[None] * vals, axis=-1), axis=-1)

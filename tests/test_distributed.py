@@ -245,3 +245,152 @@ print("ELASTIC_OK", loss)
 """
     out = _run(restore_code, devices=8)
     assert "ELASTIC_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# In-process multi-device tests: the CI ``test-multidevice`` lane runs this
+# file under XLA_FLAGS=--xla_force_host_platform_device_count=8, where
+# these execute directly (no subprocess); a 1-device session skips them.
+# ---------------------------------------------------------------------------
+
+import jax
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@needs_mesh
+def test_axis_dot_cg_mesh_invariance(f64):
+    """pcg inside an explicit shard_map body with the psum inner product
+    (axis_dot) == the single-host solve: SAME iteration count, same x.
+    check_rep=False is required (no replication rule for while_loop)."""
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import kernel_mesh
+    from repro.solvers.cg import axis_dot, pcg
+
+    n = 512
+    diag = jnp.linspace(1.0, 5.0, n, dtype=jnp.float64)
+    b = jax.random.normal(jax.random.PRNGKey(0), (n, 2), dtype=jnp.float64)
+
+    r_host = pcg(lambda v: diag[:, None] * v, b, ridge=0.1, tol=1e-10,
+                 maxiter=200)
+
+    mesh = kernel_mesh(8)
+
+    def body(d_loc, b_loc):
+        r = pcg(lambda v: d_loc[:, None] * v, b_loc, ridge=0.1, tol=1e-10,
+                maxiter=200, dot=axis_dot("dev"))
+        return r.x, r.iterations
+
+    x_mesh, it_mesh = jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(P("dev"), P("dev")),
+        out_specs=(P("dev"), P()), check_rep=False))(diag, b)
+    assert int(it_mesh) == int(r_host.iterations)
+    assert bool(r_host.converged)
+    assert float(jnp.max(jnp.abs(x_mesh - r_host.x))) < 1e-10
+
+
+@needs_mesh
+def test_slq_logdet_shard_map_contract(f64):
+    """slq_logdet under shard_map (local n, global n_total, psum
+    all_reduce, per-device fold_in of the probe key) recovers the exact
+    logdet of a diagonal operator with few distinct eigenvalues (the
+    quadrature is exact once iters exceeds the spectrum size)."""
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import kernel_mesh
+    from repro.solvers import slq
+
+    n = 512
+    vals = jnp.asarray([1.0, 2.0, 4.0, 8.0], dtype=jnp.float64)
+    diag = jnp.tile(vals, n // 4)
+    exact = float(jnp.sum(jnp.log(diag)))
+    mesh = kernel_mesh(8)
+
+    def body(d_loc):
+        key = jax.random.fold_in(jax.random.PRNGKey(3),
+                                 jax.lax.axis_index("dev"))
+        return slq.slq_logdet(
+            lambda v: d_loc * v, d_loc.shape[0], probes=4, iters=8,
+            key=key, dtype=jnp.float64,
+            all_reduce=lambda s: jax.lax.psum(s, "dev"), n_total=n)
+
+    ld = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("dev"),),
+                           out_specs=P(), check_rep=False))(diag)
+    assert abs(float(ld) - exact) < 1e-8 * abs(exact)
+
+
+@needs_mesh
+def test_sharded_operator_gspmd_solve(f64):
+    """pcg + hmatrix.solve on subtree-sharded inputs (plain jit, GSPMD)
+    match their single-host results — no hooks needed on this path."""
+    import jax.numpy as jnp
+
+    from repro.core import hmatrix
+    from repro.core.hck import build_hck
+    from repro.core.kernels_fn import BaseKernel
+    from repro.launch.dist_hck import shard_by_subtree
+    from repro.launch.mesh import kernel_mesh
+    from repro.solvers.cg import pcg
+    from repro.solvers.operators import HCKOp
+
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (1024, 4),
+                          dtype=jnp.float64)
+    f = build_hck(x, levels=3, rank=64, key=jax.random.PRNGKey(1),
+                  kernel=ker)
+    y = (jnp.sin(x[:, 0]) + 0.25 * jnp.cos(2.0 * x[:, 1]))[:, None]
+    ys = y[f.tree.perm]
+    mesh = kernel_mesh(8)
+
+    op = HCKOp(f)
+    r_host = pcg(op, ys, ridge=1e-2, tol=1e-8, maxiter=400)
+    r_mesh = pcg(op.sharded(mesh), ys, ridge=1e-2, tol=1e-8, maxiter=400)
+    assert bool(r_host.converged) and bool(r_mesh.converged)
+    assert float(jnp.max(jnp.abs(r_mesh.x - r_host.x))) < 1e-6
+
+    a_host = hmatrix.solve(f, ys, ridge=1e-2)
+    a_mesh = hmatrix.solve(shard_by_subtree(f, mesh), ys, ridge=1e-2)
+    assert float(jnp.max(jnp.abs(a_mesh - a_host))) < 1e-8
+
+
+@needs_mesh
+def test_mesh_predict_engine_matches_single_host(f64):
+    """Device-routed serving == the single-host shape-bucketed engine,
+    including an empty batch and a batch above max_bucket."""
+    import jax.numpy as jnp
+
+    from repro.core import hmatrix, oos
+    from repro.core.hck import build_hck
+    from repro.core.kernels_fn import BaseKernel
+    from repro.launch.mesh import kernel_mesh
+    from repro.serving.predict_service import PredictEngine
+
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (1024, 4),
+                          dtype=jnp.float64)
+    f = build_hck(x, levels=5, rank=16, key=jax.random.PRNGKey(1),
+                  kernel=ker)
+    y = (jnp.sin(x[:, 0]) + 0.25 * jnp.cos(2.0 * x[:, 1]))[:, None]
+    alpha = hmatrix.solve(f, y[f.tree.perm], ridge=1e-2)
+    plan = oos.prepare(f, alpha)
+    eng = PredictEngine(f, plan, ker)
+    mesh = kernel_mesh(8)
+    m_eng = eng.on_mesh(mesh, min_bucket=16, max_bucket=128)
+
+    assert m_eng.apply(jnp.zeros((0, 4), jnp.float64)).shape == (0, 1)
+    for q in (1, 37, 300):          # 300 > max_bucket: micro-batches
+        xq = jax.random.normal(jax.random.PRNGKey(q), (q, 4),
+                               dtype=jnp.float64)
+        z_host = eng.apply(xq)
+        z_mesh = m_eng.apply(xq)
+        assert z_mesh.shape == z_host.shape
+        assert float(jnp.max(jnp.abs(z_mesh - z_host))) < 1e-10
+
+
