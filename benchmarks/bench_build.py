@@ -18,6 +18,12 @@ Usage:
 """
 from __future__ import annotations
 
+try:                     # package import (python -m benchmarks.run)
+    from benchmarks import common
+except ImportError:      # script run: benchmarks/ is sys.path[0]
+    import common
+# common sets the platform/XLA flags before the first jax import below
+
 import argparse
 import json
 import resource
@@ -27,6 +33,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core import hmatrix
 from repro.core.hck import (_sample_landmarks, _stage_build_gram,
                             _stage_build_cross, build_hck,
                             build_hck_reference, build_hck_streaming,
@@ -34,6 +41,15 @@ from repro.core.hck import (_sample_landmarks, _stage_build_gram,
 from repro.core.kernels_fn import BaseKernel
 from repro.core.partition import auto_levels_ceil, build_partition
 from repro.kernels.registry import DEFAULT_CONFIG, SolveConfig
+
+#: mixed-precision oracle gates (vs the f64 reference build, gaussian
+#: kernel with jitter 1e-4 so kappa(Sigma) is bounded — the bounds
+#: documented in SolveConfig.precision): Gram-family factors element-wise,
+#: the Sigma^{-1}-projected bases operator-level via a matvec.
+PRECISION_TOLS = {
+    "f32": {"factors": 1e-4, "matvec": 1e-4},
+    "bf16": {"factors": 2e-2, "matvec": 5e-2},
+}
 
 
 def _timeit(fn, *args, repeats: int = 3):
@@ -166,6 +182,7 @@ def main(argv=None) -> int:
         "problem": {"n": args.n, "levels": levels, "rank": args.rank,
                     "d": args.d, "dtype": args.dtype, "smoke": args.smoke},
         "device": str(jax.devices()[0]),
+        "platform": common.platform_record(dtype),
         "results": [],
         "checks": {},
     }
@@ -201,6 +218,22 @@ def main(argv=None) -> int:
                  if t_ref is not None else "")
         print(f"[{backend:>6}] build {t_build:8.2f} s "
               f"({args.n / t_build:10,.0f} pts/s){extra}")
+
+    # per-stage roofline: achieved fraction of the device model for the
+    # leaf-level launches of the first backend's breakdown (the build's
+    # dominant cost: Adiag build_gram + U build_cross)
+    leaf_row = report["results"][0]["levels"][-1]
+    n_leaves = 1 << levels
+    n0_leaf = args.n >> levels
+    report["roofline"] = common.roofline_block({
+        "build_gram": (leaf_row["gram_s"],
+                       {"batch": n_leaves, "n0": n0_leaf, "r": n0_leaf,
+                        "d": args.d, "itemsize": dtype.itemsize}),
+        "build_cross": (leaf_row["cross_s"],
+                        {"batch": n_leaves // 2, "n0": 2 * n0_leaf,
+                         "r": args.rank, "d": args.d,
+                         "itemsize": dtype.itemsize}),
+    })
 
     # peak memory: host RSS high-water mark + factor footprint estimate
     n0 = args.n >> levels
@@ -240,6 +273,50 @@ def main(argv=None) -> int:
         }
         print(f"[{backend:>6}] parity ({gn} pts, f64): max factor diff "
               f"{err:.2e}  {'PASS' if passed else 'FAIL'}")
+
+    # --- mixed-precision column: bf16/f32 build vs the f64 oracle --------
+    # Same tree (the partition/landmark draw happens before any precision
+    # cast), well-conditioned kernel (jitter 1e-4) so the documented
+    # bounds measure arithmetic error, not kappa(Sigma) blow-up.  The
+    # Gram-family factors gate element-wise; the Sigma^{-1}-projected
+    # bases gate operator-level (matvec), per the SolveConfig.precision
+    # contract.
+    mp_kernel = BaseKernel("gaussian", sigma=2.0, jitter=1e-4)
+    f_mp64 = build_hck(x64, levels=g_levels, rank=args.rank, key=key,
+                       kernel=mp_kernel)
+    b_mp = jax.random.normal(jax.random.PRNGKey(7), (gn, 2), jnp.float64)
+    y_mp64 = hmatrix.matvec(f_mp64, b_mp)
+
+    def _rel(a, b):
+        scale = float(jnp.linalg.norm(jnp.asarray(b, jnp.float64)))
+        return float(jnp.linalg.norm(jnp.asarray(a, jnp.float64) - b)) / scale
+
+    report["mixed_precision"] = {}
+    for prec, tols in PRECISION_TOLS.items():
+        cfg = SolveConfig(precision=prec)
+        t_mp, f_mp = _timeit(
+            lambda c=cfg: build_hck(x64, levels=g_levels, rank=args.rank,
+                                    key=key, kernel=mp_kernel, config=c),
+            repeats=args.repeats)
+        factor_err = max(
+            [_rel(f_mp.adiag, f_mp64.adiag)]
+            + [_rel(a, b) for a, b in zip(f_mp.sigma, f_mp64.sigma)]
+            + [_rel(a, b) for a, b in zip(f_mp.sigma_cho, f_mp64.sigma_cho)])
+        matvec_err = _rel(hmatrix.matvec(f_mp, b_mp.astype(f_mp.u.dtype)),
+                          y_mp64)
+        passed = factor_err <= tols["factors"] and matvec_err <= tols["matvec"]
+        ok = ok and passed
+        report["mixed_precision"][prec] = {
+            "gate_n": gn, "jitter": 1e-4, "build_s": t_mp,
+            "points_per_s": gn / t_mp,
+            "factor_rel_err": factor_err, "factor_tol": tols["factors"],
+            "matvec_rel_err": matvec_err, "matvec_tol": tols["matvec"],
+            "pass": passed,
+        }
+        print(f"[{prec:>6}] mixed precision ({gn} pts): factors "
+              f"{factor_err:.2e} (tol {tols['factors']:.0e}), matvec "
+              f"{matvec_err:.2e} (tol {tols['matvec']:.0e})  "
+              f"{'PASS' if passed else 'FAIL'}")
 
     # streaming ingestion must reproduce the in-memory engine
     if g_levels >= 1:

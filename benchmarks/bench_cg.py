@@ -24,6 +24,12 @@ Usage:
 """
 from __future__ import annotations
 
+try:                     # package import (python -m benchmarks.run)
+    from benchmarks import common
+except ImportError:      # script run: benchmarks/ is sys.path[0]
+    import common
+# common sets the platform/XLA flags before the first jax import below
+
 import argparse
 import json
 import sys
@@ -130,6 +136,7 @@ def main(argv=None) -> int:
                     "sigma": args.sigma, "lam": args.lam, "tol": args.tol,
                     "dtype": args.dtype, "smoke": args.smoke},
         "device": str(jax.devices()[0]),
+        "platform": common.platform_record(dtype),
         "results": [],
         "checks": {},
     }
@@ -148,6 +155,23 @@ def main(argv=None) -> int:
               f"{r['pcg_s']:7.2f} s   plain {r['plain_iters']:4d} it "
               f"{r['plain_s']:7.2f} s   ratio {r['iteration_ratio']:.1f}x"
               + ep)
+
+    # per-stage roofline: one exact-kernel operator matvec — the entire
+    # per-iteration cost of the CG inner loop — charged to the
+    # kernel_matvec stage (row_chunk-sized launches over the full column
+    # space, first backend)
+    from repro.kernels.registry import SolveConfig
+    from repro.solvers.operators import ExactKernelOp
+
+    op = ExactKernelOp(
+        x, kernel, SolveConfig(backend=args.backends.split(",")[0].strip()))
+    t_mv, _ = common.timeit(op.matvec, y[:, None])
+    chunk = min(op.row_chunk, args.n)
+    report["roofline"] = common.roofline_block({
+        "kernel_matvec": (t_mv, {
+            "batch": -(-args.n // chunk), "n0": chunk, "r": args.n,
+            "k": 1, "d": args.d, "itemsize": dtype.itemsize}),
+    })
 
     ok = True
     if args.smoke:

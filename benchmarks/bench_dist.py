@@ -33,7 +33,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import sys
 import time
 
@@ -75,16 +74,20 @@ def _parse_args(argv=None):
 def main(argv=None) -> int:
     args = _parse_args(argv)
 
-    # the virtual mesh must exist before jax initializes
-    flags = os.environ.get("XLA_FLAGS", "")
-    if "host_platform_device_count" not in flags:
-        os.environ["XLA_FLAGS"] = (
-            flags + f" --xla_force_host_platform_device_count={args.devices}"
-        ).strip()
+    # the virtual mesh must exist before jax initializes; setup_platform
+    # merges the flag without duplicating a hand-set XLA_FLAGS entry
+    from repro.launch.platform import setup_platform
+
+    setup_platform(host_devices=args.devices)
 
     import jax
     import jax.numpy as jnp
     import numpy as np
+
+    try:                     # package import (python -m benchmarks.run)
+        from benchmarks import common
+    except ImportError:      # script run: benchmarks/ is sys.path[0]
+        import common
 
     jax.config.update("jax_enable_x64", True)   # parity gates run in f64
 
@@ -135,6 +138,7 @@ def main(argv=None) -> int:
                     "queries": args.queries, "smoke": args.smoke},
         "device": str(jax.devices()[0]),
         "device_count": jax.device_count(),
+        "platform": common.platform_record(dtype),
         "scaling": [],
         "checks": {},
     }
@@ -171,6 +175,21 @@ def main(argv=None) -> int:
               f"({n / t_build:10,.0f} pts/s)   serve {t_serve * 1e3:8.1f} ms "
               f"({args.queries / t_serve:10,.0f} q/s)")
         p *= 2
+
+    # per-stage roofline from the widest-mesh scaling point: the sharded
+    # build is leaf-Gram-dominated and the routed serve is one oos_local
+    # launch per query, so the end-to-end times are charged to those
+    # stages (upper-bounds the stage time -> conservative achieved_frac)
+    last = report["scaling"][-1]
+    n0 = last["n"] >> last["levels"]
+    report["roofline"] = common.roofline_block({
+        "build_gram": (last["build_s"], {
+            "batch": 1 << last["levels"], "n0": n0, "r": n0, "d": args.d,
+            "itemsize": dtype.itemsize}),
+        "oos_local": (last["serve_s"], {
+            "batch": args.queries, "n0": n0, "r": args.rank, "k": 1,
+            "d": args.d, "itemsize": dtype.itemsize}),
+    })
 
     # --- float64 parity gates vs the single-host path --------------------
     ok = True

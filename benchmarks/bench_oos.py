@@ -17,6 +17,12 @@ Usage:
 """
 from __future__ import annotations
 
+try:                     # package import (python -m benchmarks.run)
+    from benchmarks import common
+except ImportError:      # script run: benchmarks/ is sys.path[0]
+    import common
+# common sets the platform/XLA flags before the first jax import below
+
 import argparse
 import json
 import sys
@@ -31,6 +37,10 @@ from repro.core.kernels_fn import BaseKernel
 from repro.core.partition import auto_levels_ceil
 from repro.kernels.registry import SolveConfig
 from repro.serving.predict_service import PredictEngine, bucket_size
+
+#: mixed-precision prediction gates vs the f64 engine (f64 factors +
+#: policy apply; bounds documented in SolveConfig.precision)
+PRECISION_TOLS = {"f32": 1e-4, "bf16": 5e-2}
 
 
 def _timeit(fn, *args, repeats: int = 3):
@@ -134,6 +144,7 @@ def main(argv=None) -> int:
                     "dtype": args.dtype, "leaf_size": f.leaf_size,
                     "smoke": args.smoke},
         "device": str(jax.devices()[0]),
+        "platform": common.platform_record(dtype),
         "prepare_s": t_prep,
         "results": [],
         "checks": {},
@@ -157,6 +168,35 @@ def main(argv=None) -> int:
               f"{r['speedup_vs_walk']:5.1f}x vs walk  "
               f"micro p50 {r['micro_p50_s']*1e3:7.2f} ms "
               f"p99 {r['micro_p99_s']*1e3:7.2f} ms")
+
+    # per-stage roofline: the two phase-2 registry launches timed in
+    # isolation on representative per-query blocks (first backend)
+    from repro.kernels.registry import get_impl, resolve_backend
+
+    cfg0 = SolveConfig(backend=args.backends.split(",")[0].strip())
+    n0 = f.leaf_size
+    xl = jnp.broadcast_to(
+        f.x_sorted.reshape(f.num_leaves, n0, args.d)[0],
+        (args.q, n0, args.d))
+    wl = jnp.broadcast_to(plan.w_leaf[0], (args.q, n0, args.k))
+    lm = jnp.broadcast_to(f.landmarks[-1][0], (args.q, args.rank, args.d))
+    ct = jnp.broadcast_to(plan.c_tilde[0], (args.q, args.rank, args.k))
+    stage_times = {}
+    for stage, (pts, wts, csize) in {
+            "oos_local": (xl, wl, n0),
+            "oos_walk": (lm, ct, args.rank)}.items():
+        impl = get_impl(stage, resolve_backend(
+            cfg0, stage, dtype=queries.dtype, n0=csize, r=args.rank,
+            k=args.k))
+        t_stage, _ = _timeit(
+            lambda i=impl, p=pts, w_=wts: i(
+                p, w_, queries, name=ker.name, sigma=ker.sigma,
+                interpret=cfg0.interpret),
+            repeats=args.repeats)
+        stage_times[stage] = (t_stage, {
+            "batch": args.q, "n0": csize, "r": args.rank, "k": args.k,
+            "d": args.d, "itemsize": dtype.itemsize})
+    report["roofline"] = common.roofline_block(stage_times)
 
     ok = True
     if args.oracle_queries > 0:
@@ -189,6 +229,28 @@ def main(argv=None) -> int:
             print(f"[{backend.strip():>6}] oracle ({oq} q, f64): "
                   f"engine err {err:.2e}  walk err {walk_err:.2e}  "
                   f"{'PASS' if passed else 'FAIL'}")
+
+        # --- mixed-precision column: f64 factors + bf16/f32 predict ------
+        # (the policy casts the kernel-evaluation data per query block;
+        # gated against the same dense OOS oracle, relative error)
+        scale = float(jnp.linalg.norm(want))
+        report["mixed_precision"] = {}
+        for prec, tol in PRECISION_TOLS.items():
+            cfg = SolveConfig(precision=prec)
+            t_mp, z_mp = _timeit(
+                lambda c=cfg: oos.apply_plan(f64, plan64, q64, ker64, c),
+                repeats=args.repeats)
+            err = float(jnp.linalg.norm(
+                jnp.asarray(z_mp, jnp.float64) - want)) / scale
+            passed = err <= tol
+            ok = ok and passed
+            report["mixed_precision"][prec] = {
+                "oracle_queries": oq, "apply_s": t_mp,
+                "queries_per_s": oq / t_mp,
+                "rel_err_vs_oracle": err, "tol": tol, "pass": passed,
+            }
+            print(f"[{prec:>6}] mixed precision ({oq} q): rel err "
+                  f"{err:.2e} (tol {tol:.0e})  {'PASS' if passed else 'FAIL'}")
 
     report["pass"] = ok
     with open(args.out, "w") as fh:

@@ -13,6 +13,12 @@ Usage:
 """
 from __future__ import annotations
 
+try:                     # package import (python -m benchmarks.run)
+    from benchmarks import common
+except ImportError:      # script run: benchmarks/ is sys.path[0]
+    import common
+# common sets the platform/XLA flags before the first jax import below
+
 import argparse
 import json
 import sys
@@ -142,6 +148,7 @@ def main(argv=None) -> int:
                     "d": args.d, "ridge": args.ridge, "dtype": args.dtype,
                     "leaf_size": f.leaf_size, "smoke": args.smoke},
         "device": str(jax.devices()[0]),
+        "platform": common.platform_record(dtype),
         "roofline_model": {"peak_flops": roofline.PEAK_FLOPS,
                            "hbm_bw": roofline.HBM_BW},
         "results": [],
@@ -155,6 +162,20 @@ def main(argv=None) -> int:
               f"({r['matvec_achieved_gbps']:6.2f} GB/s model)  "
               f"solve {r['solve_s']*1e3:8.2f} ms  "
               f"resid {r['solve_rel_residual']:.2e}")
+
+    # per-stage roofline: the matvec hot path is one leaf_matvec launch
+    # over every leaf plus the middle-factor GEMM chain; the inverse apply
+    # is leaf-stage-dominated too.  Achieved fractions use the (tile-DB-
+    # calibrated, when present) device model.
+    r0 = report["results"][0]
+    report["roofline"] = common.roofline_block({
+        "leaf_matvec": (r0["matvec_s"], {
+            "batch": f.num_leaves, "n0": f.leaf_size, "r": args.rank,
+            "k": args.k, "itemsize": dtype.itemsize}),
+        "leaf_solve": (r0["apply_inverse_s"], {
+            "batch": f.num_leaves, "n0": f.leaf_size, "r": args.rank,
+            "k": args.k, "itemsize": dtype.itemsize}),
+    })
 
     ok = True
     if args.smoke:

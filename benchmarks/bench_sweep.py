@@ -40,6 +40,12 @@ Usage:
 """
 from __future__ import annotations
 
+try:                     # package import (python -m benchmarks.run)
+    from benchmarks import common
+except ImportError:      # script run: benchmarks/ is sys.path[0]
+    import common
+# common sets the platform/XLA flags before the first jax import below
+
 import argparse
 import json
 import sys
@@ -165,6 +171,7 @@ def main(argv=None) -> int:
                     "sigmas": sigmas, "lams": lams_f,
                     "grid_points": grid_points},
         "device": str(jax.devices()[0]),
+        "platform": common.platform_record(dtype),
         "results": [],
         "checks": {},
     }
@@ -283,6 +290,34 @@ def main(argv=None) -> int:
         print(f"[{backend:>6}] parity ({gn} pts, f64): factors "
               f"{factor_diff:.2e}  nll {nll_diff:.2e}  invert_multi "
               f"{multi_diff:.2e}  {'PASS' if passed else 'FAIL'}")
+
+    # per-stage roofline: the per-σ ``sweep_factors`` hot path is two
+    # registry launches over cached distance tiles; time the leaf-level
+    # launches in isolation on the gate-size plan (first backend).
+    # ``linv`` is an identity stand-in with the production shape — the
+    # stage's flop/byte mix does not depend on its values.
+    from repro.core.hck import _stage_cross_dist, _stage_gram_dist
+
+    cfg0 = SolveConfig(backend=args.backends.split(",")[0].strip())
+    ker0 = BaseKernel("gaussian", sigma=sigmas[0], jitter=jitter)
+    n0 = plan.leaf_size
+    linv = jnp.broadcast_to(
+        jnp.eye(args.rank, dtype=jnp.float64),
+        (plan.num_leaves // 2, args.rank, args.rank))
+    t_gram, _ = _timeit(
+        lambda: _stage_gram_dist(plan.leaf_self, ker0, cfg0),
+        repeats=args.repeats)
+    t_cross, _ = _timeit(
+        lambda: _stage_cross_dist(plan.leaf_cross, linv, ker0, cfg0),
+        repeats=args.repeats)
+    report["roofline"] = common.roofline_block({
+        "build_gram_dist": (t_gram, {
+            "batch": plan.num_leaves, "n0": n0, "r": n0, "d": args.d,
+            "itemsize": 8}),
+        "build_cross_dist": (t_cross, {
+            "batch": plan.num_leaves // 2, "n0": 2 * n0, "r": args.rank,
+            "d": args.d, "itemsize": 8}),
+    })
 
     report["pass"] = ok
     with open(args.out, "w") as fh:

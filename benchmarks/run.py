@@ -6,11 +6,12 @@
 
 Prints ``name,us_per_call,derived`` CSV blocks per benchmark plus the
 per-figure detail tables.  ``--smoke <name>`` (name one of solve, oos,
-build, sweep, cg, dist) is the CI entry point: it runs the matching
-``bench_<name>.py --smoke --out BENCH_<name>.json`` as a subprocess
-(several gates flip ``jax_enable_x64`` globally, so isolation is
-mandatory) and exits with the gate's status — the ci.yml bench matrix
-fans out over exactly these names.
+build, sweep, cg, dist, roofline) is the CI entry point: it runs the
+matching ``bench_<name>.py --smoke --out BENCH_<name>.json`` as a
+subprocess (several gates flip ``jax_enable_x64`` globally, so isolation
+is mandatory) and exits with the gate's status — the ci.yml bench matrix
+fans out over exactly these names.  ``roofline`` maps to
+``roofline_report.py --smoke`` (the autotune tile-DB cache-hit gate).
 """
 from __future__ import annotations
 
@@ -18,7 +19,10 @@ import sys
 import time
 
 #: CI smoke gates: --smoke <name> -> bench_<name>.py --smoke
-SMOKE_BENCHES = ("solve", "oos", "build", "sweep", "cg", "dist")
+SMOKE_BENCHES = ("solve", "oos", "build", "sweep", "cg", "dist", "roofline")
+
+#: smoke benches whose gate lives outside the bench_<name>.py convention
+SMOKE_SCRIPTS = {"roofline": "roofline_report.py"}
 
 
 def _section(name):
@@ -39,7 +43,8 @@ def run_smoke(name: str) -> int:
         print(f"unknown smoke bench {name!r}; pick one of "
               f"{', '.join(SMOKE_BENCHES)}", file=sys.stderr)
         return 2
-    script = pathlib.Path(__file__).parent / f"bench_{name}.py"
+    script = (pathlib.Path(__file__).parent
+              / SMOKE_SCRIPTS.get(name, f"bench_{name}.py"))
     return subprocess.run(
         [sys.executable, str(script), "--smoke",
          "--out", f"BENCH_{name}.json"]).returncode
@@ -142,11 +147,12 @@ def main() -> None:
         summary.append(("cost_scaling", time.perf_counter() - t0))
 
     if want("roofline"):
-        _section("roofline table (from dry-run artifacts)")
+        _section("roofline table (dry-run artifacts + BENCH_*.json)")
         from benchmarks import roofline_report
 
         t0 = time.perf_counter()
         roofline_report.run()
+        roofline_report.bench_table(".")
         summary.append(("roofline_report", time.perf_counter() - t0))
 
     _section("summary")

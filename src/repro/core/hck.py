@@ -44,7 +44,8 @@ import numpy as np
 from repro.core.kernels_fn import KERNEL_METRIC, BaseKernel
 from repro.core.partition import PartitionTree, build_partition
 from repro.kernels.registry import (DEFAULT_CONFIG, SolveConfig, get_impl,
-                                    resolve_backend, tile_config)
+                                    precision_policy, resolve_backend,
+                                    tile_config)
 
 Array = jax.Array
 
@@ -126,15 +127,25 @@ def _sample_landmarks(key: Array, blocks: Array, r: int) -> Array:
 
 def _stage_build_gram(blocks: Array, kernel: BaseKernel,
                       config: SolveConfig, *, want_chol: bool = True):
-    """Dispatch one level's node blocks through the ``build_gram`` stage."""
+    """Dispatch one level's node blocks through the ``build_gram`` stage.
+
+    Under a mixed-precision policy (``config.precision``) the point
+    blocks are cast to the GEMM data dtype before dispatch (every backend
+    accumulates in >= float32) and the Gram/Cholesky outputs are stored in
+    the factor dtype; without a policy the stage is dtype-preserving.
+    """
+    pol = precision_policy(config)
+    out_dt = blocks.dtype if pol is None else pol[1]
+    if pol is not None:
+        blocks = blocks.astype(pol[0])
     _, m, d = blocks.shape
     backend = resolve_backend(config, "build_gram", dtype=blocks.dtype,
                               n0=m, r=m, d=d)
     gram, chol = get_impl("build_gram", backend)(
         blocks, name=kernel.name, sigma=kernel.sigma, jitter=kernel.jitter,
         want_chol=want_chol, interpret=config.interpret)
-    gram = gram.astype(blocks.dtype)
-    return gram, None if chol is None else chol.astype(blocks.dtype)
+    gram = gram.astype(out_dt)
+    return gram, None if chol is None else chol.astype(out_dt)
 
 
 def sigma_linv(chol: Array) -> Array:
@@ -163,7 +174,20 @@ def sigma_linv(chol: Array) -> Array:
 
 def _stage_build_cross(blocks: Array, lm_parent: Array, linv_parent: Array,
                        kernel: BaseKernel, config: SolveConfig) -> Array:
-    """Dispatch one level's cross blocks through the ``build_cross`` stage."""
+    """Dispatch one level's cross blocks through the ``build_cross`` stage.
+
+    Mixed precision: the kernel-evaluation *data* (points + landmarks) is
+    cast to the policy's GEMM dtype; ``linv_parent`` is a factor (already
+    factor-dtype from ``_stage_build_gram``) and stays >= float32 so the
+    Sigma^{-1} application keeps triangular-solve-grade accuracy.  The
+    projected basis is stored in the factor dtype.
+    """
+    pol = precision_policy(config)
+    out_dt = blocks.dtype if pol is None else pol[1]
+    if pol is not None:
+        blocks = blocks.astype(pol[0])
+        lm_parent = lm_parent.astype(pol[0])
+        linv_parent = linv_parent.astype(pol[1])
     _, m, d = blocks.shape
     r = lm_parent.shape[1]
     backend = resolve_backend(config, "build_cross", dtype=blocks.dtype,
@@ -176,7 +200,7 @@ def _stage_build_cross(blocks: Array, lm_parent: Array, linv_parent: Array,
             leaf_block=config.leaf_block).block_n0
     return get_impl("build_cross", backend)(
         blocks, lm_parent, linv_parent, name=kernel.name, sigma=kernel.sigma,
-        interpret=config.interpret, **kwargs).astype(blocks.dtype)
+        interpret=config.interpret, **kwargs).astype(out_dt)
 
 
 def leaf_stage_factors(blocks: Array, lm_parent: Array, linv_parent: Array,
@@ -477,20 +501,38 @@ def build_sweep_plan(
 
 def _stage_gram_dist(dist: Array, kernel: BaseKernel, config: SolveConfig,
                      *, want_chol: bool = True):
-    """Dispatch cached distance tiles through the ``build_gram_dist`` stage."""
+    """Dispatch cached distance tiles through the ``build_gram_dist`` stage.
+
+    Mixed precision mirrors :func:`_stage_build_gram`: distance tiles are
+    the kernel-evaluation data (GEMM dtype), Gram/Cholesky outputs are
+    stored in the factor dtype.
+    """
+    pol = precision_policy(config)
+    out_dt = dist.dtype if pol is None else pol[1]
+    if pol is not None:
+        dist = dist.astype(pol[0])
     _, m, _ = dist.shape
     backend = resolve_backend(config, "build_gram_dist", dtype=dist.dtype,
                               n0=m, r=m)
     gram, chol = get_impl("build_gram_dist", backend)(
         dist, name=kernel.name, sigma=kernel.sigma, jitter=kernel.jitter,
         want_chol=want_chol, interpret=config.interpret)
-    gram = gram.astype(dist.dtype)
-    return gram, None if chol is None else chol.astype(dist.dtype)
+    gram = gram.astype(out_dt)
+    return gram, None if chol is None else chol.astype(out_dt)
 
 
 def _stage_cross_dist(dist: Array, linv_parent: Array, kernel: BaseKernel,
                       config: SolveConfig) -> Array:
-    """Dispatch cached cross tiles through the ``build_cross_dist`` stage."""
+    """Dispatch cached cross tiles through the ``build_cross_dist`` stage.
+
+    Mixed precision mirrors :func:`_stage_build_cross`: distance data in
+    the GEMM dtype, inverse-Cholesky factor and output in factor dtype.
+    """
+    pol = precision_policy(config)
+    out_dt = dist.dtype if pol is None else pol[1]
+    if pol is not None:
+        dist = dist.astype(pol[0])
+        linv_parent = linv_parent.astype(pol[1])
     _, m, r = dist.shape
     backend = resolve_backend(config, "build_cross_dist", dtype=dist.dtype,
                               n0=m, r=r)
@@ -502,7 +544,7 @@ def _stage_cross_dist(dist: Array, linv_parent: Array, kernel: BaseKernel,
             leaf_block=config.leaf_block).block_n0
     return get_impl("build_cross_dist", backend)(
         dist, linv_parent, name=kernel.name, sigma=kernel.sigma,
-        interpret=config.interpret, **kwargs).astype(dist.dtype)
+        interpret=config.interpret, **kwargs).astype(out_dt)
 
 
 @functools.partial(jax.jit, static_argnames=("kernel", "config"))

@@ -42,7 +42,7 @@ from repro.core.hck import HCKFactors
 from repro.core.kernels_fn import BaseKernel
 from repro.core.partition import group_by_leaf, route
 from repro.kernels.registry import (DEFAULT_CONFIG, SolveConfig, get_impl,
-                                    resolve_backend)
+                                    precision_policy, resolve_backend)
 
 Array = jax.Array
 
@@ -150,6 +150,14 @@ def apply_segments(
     each device owns.
     """
     config = config if config is not None else DEFAULT_CONFIG
+    pol = precision_policy(config)
+    if pol is not None:
+        # mixed-precision predict: cast the kernel-evaluation DATA (leaf
+        # points, landmarks, queries) to the policy's GEMM dtype; weights
+        # and pushed-down coefficients are factors and stay >= float32, as
+        # do the contraction accumulators inside every backend.
+        xl, lm, qs = (a.astype(pol[0]) for a in (xl, lm, qs))
+        wl, ct = wl.astype(pol[1]), ct.astype(pol[1])
     n0, r, k = xl.shape[1], lm.shape[1], wl.shape[-1]
     backend = resolve_backend(config, "oos_local", dtype=qs.dtype,
                               n0=n0, r=r, k=k)

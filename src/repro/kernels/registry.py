@@ -22,11 +22,16 @@ consumers (krr/gp/kpca/oos/launch); it is a static jit argument.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax.numpy as jnp
 
 BACKENDS = ("xla", "pallas")
+
+#: mixed-precision policies for build + predict (see SolveConfig.precision):
+#: policy -> (GEMM data dtype, factor/output dtype).
+PRECISIONS = ("bf16", "f32", "f64")
 
 #: stages of the hierarchical solve engine (plus the other kernel packages'
 #: hot spots, so one registry covers every custom kernel in the repo).
@@ -63,37 +68,106 @@ BUILD_STAGES = ("build_gram", "build_cross",
 # SolveConfig — the one shared knob object
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
+def accelerator_present() -> bool:
+    """True when the default jax backend is a real accelerator (not CPU)."""
+    import jax
+
+    try:
+        return jax.default_backend() not in ("cpu",)
+    except Exception:   # noqa: BLE001 — backend init failure == no device
+        return False
+
+
 @dataclasses.dataclass(frozen=True)
 class SolveConfig:
     """Hashable solve-engine configuration (static under jit).
 
     backend         "auto" picks per stage from dtype/shape (float32 +
                     tile-friendly leaves -> pallas, else xla); "xla"/"pallas"
-                    force a backend for every stage.
-    interpret       run Pallas bodies in interpret mode (CPU containers);
-                    flip to False on a real TPU.
+                    force a backend for every stage.  When the autotune tile
+                    DB (repro.kernels.autotune) holds a measured winner for
+                    the (stage, shape bucket, device, dtype), "auto" uses it
+                    instead of the heuristics.
+    interpret       run Pallas bodies in interpret mode.  The default None
+                    auto-detects at construction: interpret only when no
+                    accelerator is attached (CPU containers emulate the
+                    kernels; on a real GPU/TPU the bodies compile).  Pass an
+                    explicit bool to force either mode — parity tests force
+                    True, compiled smoke paths force False.  After
+                    construction the field is always a concrete bool, so
+                    configs stay hashable/static under jit.
     refine_steps    iterative-refinement rounds in :func:`repro.core.
                     hmatrix.solve` (each is one matvec + one inverse apply).
-    leaf_block      override the leaf tile size (None = whole leaf per
-                    program; see :func:`tile_config`).
+    leaf_block      override the leaf tile size (None = autotuned when the
+                    tile DB has this shape, else whole leaf per program; see
+                    :func:`tile_config`).
     min_pallas_leaf leaf sizes must be a multiple of this for "auto" to
                     pick pallas (float32 sublane granularity).
+    precision       mixed-precision policy for build + predict.  None keeps
+                    today's dtype-preserving behavior (compute in the input
+                    dtype).  "bf16": kernel/Gram/cross GEMM *data* is cast
+                    to bfloat16 (accumulation stays >= float32 in every
+                    backend) and all stored factors / Cholesky / triangular
+                    solves run in float32.  "f32": data and factors in
+                    float32.  "f64": everything in float64 (requires
+                    jax_enable_x64; the oracle policy).  Tree construction
+                    (partitioning, landmark draws) always runs in the input
+                    dtype *before* any cast, so a mixed-precision build is
+                    bitwise the same tree as the f64 oracle and the parity
+                    gates measure pure arithmetic error.  Documented bounds
+                    vs the f64 oracle (gaussian kernel, jitter 1e-4 smoke
+                    problems; gated in benchmarks/bench_build.py /
+                    bench_oos.py): Gram-family factors (adiag, sigma,
+                    sigma_cho) rel err <= 2e-2 bf16 / <= 1e-4 f32; the
+                    Sigma^{-1}-projected bases (u, w) are kappa(Sigma)-
+                    amplified and NOT gated element-wise — the meaningful
+                    bounds are operator-level: matvec and OOS predictions
+                    rel err <= 5e-2 bf16 / <= 1e-4 f32.  INVERSION of
+                    bf16-built factors additionally needs ridge >~
+                    n0 * eps_bf16 (~1e-1 at n0=32): the leaf Schur
+                    complement inherits the O(eps) factor error and goes
+                    indefinite under a smaller ridge, NaN-ing the
+                    Cholesky.  f32 builds invert at any ridge the f64
+                    oracle tolerates.
     """
 
     backend: str = "auto"
-    interpret: bool = True
+    interpret: bool | None = None
     refine_steps: int = 2
     leaf_block: int | None = None
     min_pallas_leaf: int = 8
+    precision: str | None = None
 
     def __post_init__(self):
         if self.backend not in ("auto",) + BACKENDS:
             raise ValueError(
                 f"backend {self.backend!r} not in {('auto',) + BACKENDS}")
+        if self.precision is not None and self.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision {self.precision!r} not in {PRECISIONS} (or None)")
+        if self.interpret is None:
+            object.__setattr__(self, "interpret", not accelerator_present())
 
     def with_backend(self, backend: str) -> "SolveConfig":
         """Copy of this config with ``backend`` replaced."""
         return dataclasses.replace(self, backend=backend)
+
+
+def precision_policy(config: "SolveConfig | None"):
+    """(GEMM data dtype, factor/output dtype) of ``config.precision``.
+
+    Returns None when no policy is set (dtype-preserving behavior).  The
+    GEMM dtype is what kernel-evaluation inputs are cast to before the
+    stage dispatch; the factor dtype is what stage outputs (Gram blocks,
+    Cholesky factors, bases) are stored and solved in.
+    """
+    if config is None or config.precision is None:
+        return None
+    gemm = {"bf16": jnp.bfloat16, "f32": jnp.float32,
+            "f64": jnp.float64}[config.precision]
+    fac = jnp.float64 if config.precision == "f64" else jnp.float32
+    return jnp.dtype(gemm), jnp.dtype(fac)
 
 
 DEFAULT_CONFIG = SolveConfig()
@@ -114,6 +188,38 @@ class TileConfig:
     def fits(self) -> bool:
         """Whether the working set fits the per-program VMEM budget."""
         return self.vmem_bytes <= _VMEM_BUDGET
+
+
+def _autotuned_block(stage: str, *, n0: int, r: int, k: int, d: int,
+                     itemsize: int) -> int | None:
+    """Measured tile for this shape bucket from the autotune DB, or None.
+
+    Any failure (missing DB, corrupt file, import problem) degrades to
+    None so the heuristics below stay the cold-cache behavior.
+    """
+    try:
+        from repro.kernels import autotune
+
+        if not autotune.lookups_enabled():
+            return None
+        return autotune.lookup_block(stage, n0=n0, r=r, k=k, d=d,
+                                     itemsize=itemsize)
+    except Exception:   # noqa: BLE001 — autotune is strictly best-effort
+        return None
+
+
+def _measured_backend(stage: str, *, dtype, n0: int, r: int, k: int,
+                      d: int) -> str | None:
+    """Measured backend winner from the autotune DB, or None."""
+    try:
+        from repro.kernels import autotune
+
+        if not autotune.lookups_enabled():
+            return None
+        return autotune.lookup_backend(stage, dtype=dtype, n0=n0, r=r,
+                                       k=k, d=d)
+    except Exception:   # noqa: BLE001 — autotune is strictly best-effort
+        return None
 
 
 def tile_config(stage: str, *, n0: int, r: int, k: int, d: int = 0,
@@ -143,7 +249,16 @@ def tile_config(stage: str, *, n0: int, r: int, k: int, d: int = 0,
     gram + Cholesky (3 n0^2), ``build_cross_dist`` holds dist (bn, r) +
     Linv (r, r) + out (bn, r).  ``leaf_factor`` factorizes the whole (n0,
     n0) leaf Schur tile in place (dist-in, chol + inverse out: 3 n0^2).
+
+    When no explicit ``leaf_block`` is given and the autotune tile DB
+    (:mod:`repro.kernels.autotune`) holds a measured winner for this
+    (stage, shape bucket, device, dtype), that tile is used as the
+    override — still snapped to a divisor and VMEM-checked — so the
+    heuristics below are only the cold-cache fallback.
     """
+    if leaf_block is None:
+        leaf_block = _autotuned_block(stage, n0=n0, r=r, k=k, d=d,
+                                      itemsize=itemsize)
 
     if stage in ("build_gram", "build_gram_dist", "leaf_factor"):
         if stage == "build_gram":
@@ -261,6 +376,12 @@ def resolve_backend(config: SolveConfig | None, stage: str, *,
     """Map ``config.backend`` ("auto" included) to a concrete backend for
     one stage at one shape.
 
+    When the autotune tile DB holds a measured winner for this (stage,
+    shape bucket, device, dtype), "auto" returns it (a measured "pallas"
+    still requires compiled execution and sublane-granular leaves — the
+    hard correctness constraints are never overridden by timings).  On a
+    cold cache the heuristics below apply:
+
     "auto" picks pallas only where the fused kernels win and stay exact
     enough: compiled execution (``interpret=False`` — interpret mode is CPU
     emulation, an order of magnitude slower than the XLA einsums, so it is
@@ -296,6 +417,11 @@ def resolve_backend(config: SolveConfig | None, stage: str, *,
         return "xla"
     if r <= 0:
         return "xla"
+    measured = _measured_backend(stage, dtype=dtype, n0=n0, r=r, k=k, d=d)
+    if measured == "xla":
+        return "xla"
+    if measured == "pallas" and n0 % config.min_pallas_leaf == 0:
+        return "pallas"
     if jnp.dtype(dtype) != jnp.float32:
         return "xla"
     if n0 % config.min_pallas_leaf != 0:

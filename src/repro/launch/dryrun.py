@@ -17,10 +17,13 @@ proves the real program shards and fits.
 """
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The line above MUST run before jax is imported (jax locks the device
+from repro.launch.platform import setup_platform
+
+setup_platform(host_devices=512)
+# The call above MUST run before jax is imported (jax locks the device
 # count at first init).  This module is the ONLY place the 512 placeholder
-# devices exist — tests and benches see 1 device.
+# devices exist — tests and benches see 1 device.  setup_platform merges
+# the flag into XLA_FLAGS without clobbering anything set by hand.
 
 import argparse
 import dataclasses
@@ -165,11 +168,18 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
             rec["bytes_per_dev"] = cost["bytes"]
             rec["collectives"] = cost["coll"]
 
+            # peaks come from the (autotune-tile-DB-calibrated, when
+            # measurements exist) device model rather than the nominal
+            # constants, and the record says which source won
+            hw = roofline.hw_model()
             terms = roofline.RooflineTerms(
                 flops=cost["flops"], hbm_bytes=cost["bytes"],
                 coll_bytes_per_dev=cost["coll"]["total"],
-                chips=mcfg.num_devices)
+                chips=mcfg.num_devices, peak_flops=hw["peak_flops"],
+                hbm_bw=hw["hbm_bw"], link_bw=hw["link_bw"])
             rec["roofline"] = terms.as_dict()
+            rec["roofline"]["calibration"] = hw["calibration"]
+            rec["roofline"]["device_kind"] = hw["device_kind"]
             tokens = shape.global_batch * (
                 shape.seq_len if shape.kind != "decode" else 1)
             rec["model_flops"] = roofline.model_flops(

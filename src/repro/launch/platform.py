@@ -1,0 +1,88 @@
+"""Process-level platform setup: XLA flags BEFORE the first jax import.
+
+jax locks its platform list and XLA flag set at first backend init, so
+every entry point (launch/train.py, benchmarks/*) must route through
+:func:`setup_platform` before importing jax.  The module itself imports
+no jax for the same reason.
+
+What it sets:
+
+  * ``JAX_PLATFORMS`` — from the ``platform`` argument or the
+    ``REPRO_PLATFORM`` env var (cpu / gpu / tpu).  Unset means jax's own
+    auto-detection order.
+  * the GPU XLA flag set (triton gemm/softmax fusion, async collectives,
+    latency-hiding scheduler) — applied when targeting gpu, either
+    explicitly or because an NVIDIA driver is visible.
+  * ``--xla_force_host_platform_device_count`` — from ``host_devices`` or
+    ``REPRO_HOST_DEVICES``, for virtual-mesh CPU runs.
+
+Flags already present in ``XLA_FLAGS`` are never duplicated or
+overridden, so callers can still pre-set anything by hand.  Idempotent;
+returns a record of what was applied for logging.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import warnings
+
+#: XLA flags that pay off on CUDA GPUs (fusion + comm/compute overlap).
+GPU_XLA_FLAGS = (
+    "--xla_gpu_enable_triton_softmax_fusion=true",
+    "--xla_gpu_triton_gemm_any=True",
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+
+def gpu_visible() -> bool:
+    """Best-effort NVIDIA-driver detection without importing jax."""
+    return shutil.which("nvidia-smi") is not None
+
+
+def _merge_xla_flags(new_flags) -> list:
+    existing = os.environ.get("XLA_FLAGS", "")
+    present = {f.split("=")[0] for f in existing.split() if f}
+    added = [f for f in new_flags if f.split("=")[0] not in present]
+    if added:
+        os.environ["XLA_FLAGS"] = " ".join(
+            ([existing] if existing else []) + added)
+    return added
+
+
+def setup_platform(platform: str | None = None,
+                   host_devices: int | None = None) -> dict:
+    """Configure the jax platform/XLA flags for this process.
+
+    Call before the first ``import jax``; warns (but still applies the
+    env, for any later-spawned subprocess) when jax is already imported.
+    Arguments beat the ``REPRO_PLATFORM`` / ``REPRO_HOST_DEVICES`` env
+    vars, which beat auto-detection.
+    """
+    if "jax" in sys.modules:
+        warnings.warn(
+            "setup_platform() called after jax import; XLA flags may not "
+            "take effect in this process", RuntimeWarning, stacklevel=2)
+
+    platform = platform or os.environ.get("REPRO_PLATFORM") or None
+    if host_devices is None:
+        hd = os.environ.get("REPRO_HOST_DEVICES")
+        host_devices = int(hd) if hd else None
+
+    applied = {"platform": platform, "host_devices": host_devices,
+               "flags": []}
+    if platform:
+        os.environ.setdefault("JAX_PLATFORMS", platform)
+        applied["platform"] = os.environ["JAX_PLATFORMS"]
+    targets_gpu = (platform == "gpu"
+                   or (platform is None
+                       and os.environ.get("JAX_PLATFORMS") in (None, "")
+                       and gpu_visible()))
+    if targets_gpu:
+        applied["flags"] += _merge_xla_flags(GPU_XLA_FLAGS)
+    if host_devices:
+        applied["flags"] += _merge_xla_flags(
+            (f"--xla_force_host_platform_device_count={host_devices}",))
+    return applied

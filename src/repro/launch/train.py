@@ -55,13 +55,26 @@ from __future__ import annotations
 
 import argparse
 
-import jax
+from repro.launch.platform import setup_platform
 
-from repro.configs import TrainConfig, get_arch
-from repro.data.pipeline import TokenPipeline
-from repro.models.transformer import N_CODEBOOKS
-from repro.training.checkpoint import CheckpointManager
-from repro.training.train_loop import train_loop
+setup_platform()    # JAX_PLATFORMS/XLA flags must land before jax loads
+
+import jax  # noqa: E402
+
+from repro.configs import TrainConfig, get_arch  # noqa: E402
+from repro.data.pipeline import TokenPipeline  # noqa: E402
+from repro.models.transformer import N_CODEBOOKS  # noqa: E402
+from repro.training.checkpoint import CheckpointManager  # noqa: E402
+from repro.training.train_loop import train_loop  # noqa: E402
+
+
+def _solve_config(args):
+    """SolveConfig from the shared --solve-backend/--precision flags."""
+    from repro.kernels.registry import SolveConfig
+
+    return SolveConfig(backend=args.solve_backend,
+                       precision=None if args.precision == "none"
+                       else args.precision)
 
 
 def run_krr(args):
@@ -73,18 +86,26 @@ def run_krr(args):
 
     from repro.core import krr
     from repro.core.kernels_fn import BaseKernel
-    from repro.kernels.registry import SolveConfig
 
-    cfg = SolveConfig(backend=args.solve_backend)
+    cfg = _solve_config(args)
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (args.n, args.d))
     y = jnp.sin(x[:, 0]) + 0.25 * jnp.cos(2.0 * x[:, 1])
-    ker = BaseKernel("gaussian", sigma=2.0)
+    # bf16 rounds a 1e-5-rate jitter off the unit Gram diagonal entirely
+    # (eps ~ 8e-3), so the leaf Cholesky needs the larger λ'-split the
+    # precision contract is specified at (SolveConfig.precision docs)
+    ker = BaseKernel("gaussian", sigma=2.0,
+                     jitter=1e-4 if args.precision == "bf16" else 1e-5)
 
     if args.mesh and args.solver != "hck":
         raise SystemExit("--mesh drives the structured 'hck' path; shard an "
                          "exact-kernel solve with ExactKernelOp.sharded(mesh)"
                          " + solvers.cg instead")
+
+    # inversion of bf16-BUILT factors needs ridge ≳ n0·eps_bf16: the leaf
+    # Schur complement inherits O(eps) factor error and goes indefinite
+    # under a smaller ridge (SolveConfig.precision documents the bound)
+    lam = 1e-1 if args.precision == "bf16" else 1e-2
 
     if args.solver in ("exact-cg", "eigenpro"):
         # matvec-free iterative subsystem: EXACT-kernel KRR, the HCK
@@ -92,7 +113,7 @@ def run_krr(args):
         # truncated-spectrum rival) — K(X, X) is never materialized
         t0 = time.perf_counter()
         model = krr.fit_exact(
-            x, y, kernel=ker, lam=1e-2, rank=args.rank,
+            x, y, kernel=ker, lam=lam, rank=args.rank,
             key=jax.random.PRNGKey(1), solve_config=cfg,
             solver="cg" if args.solver == "exact-cg" else "eigenpro",
             tol=1e-4, maxiter=args.cg_maxiter)  # f32 demo: CG floors ~1e-5
@@ -140,7 +161,7 @@ def run_krr(args):
                                      config=cfg)
         targets = jnp.asarray(yp)[:, None]
         alpha = hmatrix.solve(factors, targets[factors.tree.perm],
-                              ridge=1e-2, config=cfg)
+                              ridge=lam, config=cfg)
         plan = oos.prepare(factors, alpha, cfg)
         model = HCKRegressor(ker, factors, plan, alpha, squeeze=True,
                              solve_config=cfg)
@@ -161,11 +182,11 @@ def run_krr(args):
         from repro.data.pipeline import ArraySource
 
         model = krr.fit_streaming(
-            ArraySource(np.asarray(x)), y, kernel=ker, lam=1e-2,
+            ArraySource(np.asarray(x)), y, kernel=ker, lam=lam,
             rank=args.rank, key=jax.random.PRNGKey(1), solve_config=cfg,
             leaf_batch=args.leaf_batch)
     else:
-        model = krr.fit(x, y, kernel=ker, lam=1e-2, rank=args.rank,
+        model = krr.fit(x, y, kernel=ker, lam=lam, rank=args.rank,
                         key=jax.random.PRNGKey(1), solve_config=cfg)
     jax.block_until_ready(model.alpha)
     t_fit = time.perf_counter() - t0
@@ -188,9 +209,8 @@ def run_krr_grid(args):
     from repro.core.hck import build_sweep_plan, sweep_factors
     from repro.core.kernels_fn import BaseKernel
     from repro.core.partition import auto_levels_ceil, pad_points
-    from repro.kernels.registry import SolveConfig
 
-    cfg = SolveConfig(backend=args.solve_backend)
+    cfg = _solve_config(args)
     mesh = None
     if args.mesh:
         from repro.launch.dist_hck import dist_sweep_factors
@@ -270,6 +290,12 @@ def main():
     ap.add_argument("--solve-backend", choices=["auto", "xla", "pallas"],
                     default="auto", help="SolveConfig backend for the build "
                     "engine + Algorithm-2 solve (krr task)")
+    ap.add_argument("--precision", choices=["none", "bf16", "f32", "f64"],
+                    default="none",
+                    help="mixed-precision policy for the krr build/predict "
+                    "stages (SolveConfig.precision; 'none' preserves input "
+                    "dtypes — see docs/kernel-authoring.md for the f64-"
+                    "oracle error bounds)")
     ap.add_argument("--solver", choices=["hck", "exact-cg", "eigenpro"],
                     default="hck",
                     help="krr fit path: 'hck' = structured Algorithm-2 "

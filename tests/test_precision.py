@@ -1,0 +1,146 @@
+"""Mixed-precision policies vs the f64 oracle, per the SolveConfig contract.
+
+Gates the documented bounds (registry.SolveConfig.precision docstring) at
+test scale: Gram-family factors element-wise (<= 2e-2 bf16 / 1e-4 f32),
+matvec + OOS predictions operator-level (<= 5e-2 bf16 / 1e-4 f32), the
+bf16 inversion ridge floor (ridge >~ n0 * eps_bf16), and the interpret
+auto-detection / compiled-mode contract satellites.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import hmatrix, oos
+from repro.core.hck import build_hck
+from repro.core.kernels_fn import BaseKernel
+from repro.kernels.registry import (PRECISIONS, SolveConfig,
+                                    accelerator_present, precision_policy)
+
+#: (factor tol, operator tol) — the documented bounds vs the f64 oracle
+TOLS = {"f32": (1e-4, 1e-4), "bf16": (2e-2, 5e-2)}
+
+
+def _rel(a, b):
+    b = jnp.asarray(b, jnp.float64)
+    return float(jnp.linalg.norm(jnp.asarray(a, jnp.float64) - b)
+                 / jnp.linalg.norm(b))
+
+
+@pytest.fixture(scope="module")
+def mp_problem(f64):
+    """256-point f64 problem with the jitter the precision gates assume."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 5), jnp.float64)
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-4)
+    f64_fac = build_hck(x, levels=3, rank=16, key=jax.random.PRNGKey(1),
+                        kernel=ker)
+    b = jax.random.normal(jax.random.PRNGKey(2), (256, 2), jnp.float64)
+    return x, ker, f64_fac, b
+
+
+# ---------------------------------------------------------------------------
+# policy plumbing
+# ---------------------------------------------------------------------------
+
+def test_precision_policy_mapping():
+    assert precision_policy(None) is None
+    assert precision_policy(SolveConfig()) is None
+    assert precision_policy(SolveConfig(precision="bf16")) == (
+        jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float32))
+    assert precision_policy(SolveConfig(precision="f32")) == (
+        jnp.dtype(jnp.float32), jnp.dtype(jnp.float32))
+    assert precision_policy(SolveConfig(precision="f64")) == (
+        jnp.dtype(jnp.float64), jnp.dtype(jnp.float64))
+
+
+def test_invalid_precision_rejected():
+    with pytest.raises(ValueError, match="precision"):
+        SolveConfig(precision="fp16")
+    assert set(TOLS) < set(PRECISIONS) | {"f64"}
+
+
+def test_interpret_auto_detection():
+    # default None resolves to a concrete bool at construction (hashable
+    # static jit arg): interpret exactly when no accelerator is attached
+    cfg = SolveConfig()
+    assert cfg.interpret is (not accelerator_present())
+    # explicit values are always honored
+    assert SolveConfig(interpret=True).interpret is True
+    assert SolveConfig(interpret=False).interpret is False
+
+
+def test_compiled_mode_xla_smoke(mp_problem):
+    # the compiled-path contract: interpret=False must be constructible and
+    # runnable everywhere — on CPU the xla backend simply ignores it
+    x, ker, f_ref, b = mp_problem
+    cfg = SolveConfig(backend="xla", interpret=False)
+    f = build_hck(x, levels=3, rank=16, key=jax.random.PRNGKey(1),
+                  kernel=ker, config=cfg)
+    assert _rel(hmatrix.matvec(f, b, cfg), hmatrix.matvec(f_ref, b)) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# build + matvec bounds vs the f64 oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prec", ["f32", "bf16"])
+def test_build_precision_bounds(mp_problem, prec):
+    x, ker, f_ref, b = mp_problem
+    ftol, otol = TOLS[prec]
+    cfg = SolveConfig(precision=prec)
+    f = build_hck(x, levels=3, rank=16, key=jax.random.PRNGKey(1),
+                  kernel=ker, config=cfg)
+
+    # tree construction precedes the cast: same shapes leaf-for-leaf
+    assert f.adiag.shape == f_ref.adiag.shape
+
+    # Gram-family factors gate element-wise
+    factor_err = max(
+        [_rel(f.adiag, f_ref.adiag)]
+        + [_rel(a, b_) for a, b_ in zip(f.sigma, f_ref.sigma)]
+        + [_rel(a, b_) for a, b_ in zip(f.sigma_cho, f_ref.sigma_cho)])
+    assert factor_err <= ftol, f"{prec} factors: {factor_err:.2e} > {ftol}"
+
+    # the Sigma^{-1}-projected bases gate operator-level (matvec)
+    matvec_err = _rel(hmatrix.matvec(f, b.astype(f.u.dtype)),
+                      hmatrix.matvec(f_ref, b))
+    assert matvec_err <= otol, f"{prec} matvec: {matvec_err:.2e} > {otol}"
+
+
+@pytest.mark.parametrize("prec", ["f32", "bf16"])
+def test_predict_precision_bounds(mp_problem, prec):
+    # f64 factors + mixed-precision apply: the serving-side policy
+    x, ker, f_ref, b = mp_problem
+    _, otol = TOLS[prec]
+    w = jax.random.normal(jax.random.PRNGKey(3), (256, 2), jnp.float64)
+    q = jax.random.normal(jax.random.PRNGKey(4), (64, 5), jnp.float64)
+    want = oos.predict(f_ref, w, q, ker)
+    got = oos.predict(f_ref, w, q, ker, SolveConfig(precision=prec))
+    err = _rel(got, want)
+    assert err <= otol, f"{prec} predict: {err:.2e} > {otol}"
+
+
+# ---------------------------------------------------------------------------
+# inversion: the bf16 ridge floor
+# ---------------------------------------------------------------------------
+
+def test_inversion_ridge_floor(mp_problem):
+    x, ker, f_ref, b = mp_problem
+
+    # f32 builds invert at any ridge the f64 oracle tolerates
+    f32f = build_hck(x, levels=3, rank=16, key=jax.random.PRNGKey(1),
+                     kernel=ker, config=SolveConfig(precision="f32"))
+    z32 = hmatrix.solve(f32f, b.astype(f32f.u.dtype), ridge=1e-2)
+    z64 = hmatrix.solve(f_ref, b, ridge=1e-2)
+    assert bool(jnp.all(jnp.isfinite(z32)))
+    assert _rel(z32, z64) <= 5e-3
+
+    # bf16-built factors need ridge >~ n0 * eps_bf16 (~1e-1 at n0=32):
+    # below it the leaf Schur complement can go indefinite (NaN Cholesky),
+    # so the contract only promises finiteness at the documented floor
+    fbf = build_hck(x, levels=3, rank=16, key=jax.random.PRNGKey(1),
+                    kernel=ker, config=SolveConfig(precision="bf16"))
+    zbf = hmatrix.solve(fbf, b.astype(fbf.u.dtype), ridge=1e-1)
+    assert bool(jnp.all(jnp.isfinite(zbf)))
+    # inverse application amplifies the 5e-2 forward bound by kappa, so
+    # the solve is gated an octave looser than matvec/predict
+    assert _rel(zbf, hmatrix.solve(f_ref, b, ridge=1e-1)) <= 1e-1

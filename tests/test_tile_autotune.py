@@ -1,0 +1,213 @@
+"""Tile-config properties and the autotune tile-DB lifecycle.
+
+Properties (hypothesis, deterministic fallback without it):
+
+  * ``tile_config`` tiles always fit the VMEM budget (or report not-fits
+    honestly for the whole-node stages that cannot shrink);
+  * row-tiled stages snap the block to a divisor of ``n0``;
+  * degenerate shapes (r > n0 buckets, d = 0, k = 1) never crash.
+
+Autotune lifecycle (against a tmp-path ``REPRO_TILE_DB``):
+
+  * sweep -> save -> fresh DB object -> same key is a ``cached: True``
+    hit with identical winner (the acceptance criterion's round-trip);
+  * measured winners steer ``resolve_backend`` / ``tile_config``;
+  * a corrupt DB file degrades to heuristics instead of raising.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.kernels import autotune
+from repro.kernels.registry import (SolveConfig, _VMEM_BUDGET,
+                                    resolve_backend, tile_config)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+ROW_TILED = ["leaf_matvec", "leaf_solve", "build_cross", "build_cross_dist"]
+WHOLE_NODE = ["build_gram", "build_gram_dist", "leaf_factor"]
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _isolated_db(tmp_path_factory):
+    """Shield every test here from the user's real ~/.cache tile DB.
+
+    Module-scoped (not function-scoped monkeypatch) so the hypothesis
+    property tests can use it without tripping the function-scoped
+    fixture health check.
+    """
+    path = tmp_path_factory.mktemp("autotune") / "tile_db.json"
+    saved = {k: os.environ.get(k) for k in ("REPRO_TILE_DB", "REPRO_AUTOTUNE")}
+    os.environ["REPRO_TILE_DB"] = str(path)
+    os.environ.pop("REPRO_AUTOTUNE", None)
+    autotune.reset_db()
+    yield path
+    for k, v in saved.items():
+        if v is None:
+            os.environ.pop(k, None)
+        else:
+            os.environ[k] = v
+    autotune.reset_db()
+
+
+@pytest.fixture
+def tile_db(tmp_path, monkeypatch):
+    """Point the autotune DB at a throwaway per-test file."""
+    path = tmp_path / "tile_db.json"
+    monkeypatch.setenv("REPRO_TILE_DB", str(path))
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    autotune.reset_db()
+    yield path
+    autotune.reset_db()
+
+
+# ---------------------------------------------------------------------------
+# tile_config properties
+# ---------------------------------------------------------------------------
+
+@given(stage=st.sampled_from(ROW_TILED),
+       n0=st.integers(8, 2048), r=st.integers(1, 256),
+       k=st.integers(1, 8), itemsize=st.sampled_from([2, 4, 8]))
+@settings(**SETTINGS)
+def test_row_tiled_fits_and_divides(stage, n0, r, k, itemsize):
+    cfg = tile_config(stage, n0=n0, r=r, k=k, d=8, itemsize=itemsize,
+                      leaf_block=None)
+    assert 1 <= cfg.block_n0 <= max(n0, 8)
+    if stage in ("leaf_matvec", "leaf_solve", "build_cross",
+                 "build_cross_dist"):
+        assert n0 % cfg.block_n0 == 0, "tile must divide the leaf"
+    # shrink-to-fit: any shape small enough to shrink must land in budget
+    if cfg.block_n0 > 8:
+        assert cfg.fits, (stage, n0, r, k, itemsize, cfg)
+
+
+@given(stage=st.sampled_from(ROW_TILED + ["oos_local", "oos_walk",
+                                          "kernel_matvec"]),
+       n0=st.integers(8, 512), block=st.integers(1, 512))
+@settings(**SETTINGS)
+def test_explicit_leaf_block_snaps(stage, n0, block):
+    cfg = tile_config(stage, n0=n0, r=16, k=2, d=8, leaf_block=block)
+    if stage in ROW_TILED:
+        assert n0 % cfg.block_n0 == 0
+        assert cfg.block_n0 <= n0
+    else:   # query/row-padded stages take the block as given (>= floor)
+        assert cfg.block_n0 >= 1
+
+
+@given(stage=st.sampled_from(WHOLE_NODE), n0=st.integers(8, 1024))
+@settings(**SETTINGS)
+def test_whole_node_stages_report_honest_vmem(stage, n0):
+    cfg = tile_config(stage, n0=n0, r=n0, k=1, d=8)
+    assert cfg.block_n0 == n0, "whole-node stages cannot row-tile"
+    assert cfg.fits == (cfg.vmem_bytes <= _VMEM_BUDGET)
+
+
+@pytest.mark.parametrize("stage", ROW_TILED + WHOLE_NODE
+                         + ["oos_local", "oos_walk", "kernel_matvec"])
+def test_degenerate_shapes_do_not_crash(stage):
+    # r > n0, d = 0, k = 1 — the corners the builders can hand over
+    for n0, r, k, d in [(8, 32, 1, 0), (8, 1, 1, 0), (16, 16, 1, 0)]:
+        cfg = tile_config(stage, n0=n0, r=r, k=k, d=d)
+        assert cfg.block_n0 >= 1
+        assert cfg.vmem_bytes >= 0
+
+
+# ---------------------------------------------------------------------------
+# autotune DB lifecycle
+# ---------------------------------------------------------------------------
+
+def test_bucket_key_pow2_and_stable():
+    k1 = autotune.bucket_key("leaf_matvec", "cpu", "float32",
+                             n0=100, r=17, k=3, d=5)
+    k2 = autotune.bucket_key("leaf_matvec", "cpu", "float32",
+                             n0=128, r=32, k=4, d=8)
+    assert k1 == k2, "shapes in one pow2 bucket share a key"
+    assert "n0=128" in k1 and "r=32" in k1
+
+
+def test_sweep_then_cache_hit_roundtrip(tile_db):
+    rec = autotune.autotune_stage("leaf_matvec", n0=32, r=8, k=1, d=4,
+                                  batch=2, repeats=1)
+    assert rec["cached"] is False
+    assert rec["backend"] in ("xla", "pallas")
+    assert rec["best_s"] > 0
+    assert os.path.exists(tile_db), "sweep must persist the DB"
+
+    autotune.reset_db()     # force a re-read from disk
+    hit = autotune.autotune_stage("leaf_matvec", n0=32, r=8, k=1, d=4,
+                                  batch=2, repeats=1)
+    assert hit["cached"] is True
+    assert hit["backend"] == rec["backend"]
+    assert hit["block"] == rec["block"]
+    assert hit["best_s"] == rec["best_s"], "hit returns the stored record"
+
+    # a nearby shape in the same pow2 bucket is the same cache line
+    near = autotune.autotune_stage("leaf_matvec", n0=30, r=7, k=1, d=3,
+                                   batch=2, repeats=1)
+    assert near["cached"] is True
+
+
+def test_measured_winner_steers_registry(tile_db):
+    db = autotune.get_db()
+    key = autotune.bucket_key("leaf_matvec", autotune.device_kind(),
+                              "float32", n0=64, r=16, k=1, d=0)
+    db.put(key, {"stage": "leaf_matvec", "backend": "xla", "block": None,
+                 "pallas_block": 16, "platform": "cpu",
+                 "rates": {"flops_per_s": 1e9, "bytes_per_s": 1e9}})
+    db.save()
+
+    cfg = SolveConfig(backend="auto", interpret=False)
+    got = resolve_backend(cfg, "leaf_matvec", dtype=jnp.float32,
+                          n0=64, r=16, k=1)
+    assert got == "xla", "measured xla winner must override heuristics"
+    tc = tile_config("leaf_matvec", n0=64, r=16, k=1, d=0)
+    assert tc.block_n0 == 16, "measured pallas tile steers tile_config"
+
+    # flip the record to pallas: auto must follow (divisibility holding)
+    db.put(key, {"stage": "leaf_matvec", "backend": "pallas", "block": 16,
+                 "pallas_block": 16, "platform": "cpu", "rates": {}})
+    assert resolve_backend(cfg, "leaf_matvec", dtype=jnp.float32,
+                           n0=64, r=16, k=1) == "pallas"
+
+
+def test_repro_autotune_0_disables_lookups(tile_db, monkeypatch):
+    db = autotune.get_db()
+    key = autotune.bucket_key("leaf_matvec", autotune.device_kind(),
+                              "float32", n0=64, r=16, k=1, d=0)
+    db.put(key, {"stage": "leaf_matvec", "backend": "pallas", "block": 8,
+                 "pallas_block": 8, "platform": "cpu", "rates": {}})
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    assert autotune.lookup_block("leaf_matvec", n0=64, r=16, k=1) is None
+    tc = tile_config("leaf_matvec", n0=64, r=16, k=1, d=0)
+    assert tc.block_n0 == 64, "lookups off -> heuristic whole leaf"
+
+
+def test_corrupt_db_degrades_to_heuristics(tile_db):
+    tile_db.write_text("{not json at all")
+    autotune.reset_db()
+    db = autotune.get_db()
+    assert db.corrupt is True
+    assert db.entries == {}
+    # registry consults must not raise and must fall back
+    assert autotune.lookup_block("leaf_matvec", n0=64, r=16, k=1) is None
+    tc = tile_config("leaf_matvec", n0=64, r=16, k=1, d=0)
+    assert tc.block_n0 == 64
+    # a fresh sweep repairs the file
+    autotune.autotune_stage("leaf_project", n0=16, r=8, k=1, batch=2,
+                            repeats=1, db=db)
+    blob = json.loads(tile_db.read_text())
+    assert blob["entries"], "save() rewrites a corrupt file"
+
+
+def test_calibrated_peaks_aggregates_platform(tile_db):
+    db = autotune.get_db()
+    for i, (plat, f, b) in enumerate([("cpu", 1e9, 2e9), ("cpu", 3e9, 1e9),
+                                      ("gpu", 9e12, 9e11)]):
+        db.put(f"k{i}", {"stage": "s", "platform": plat,
+                         "rates": {"flops_per_s": f, "bytes_per_s": b}})
+    peaks = autotune.calibrated_peaks("cpu")
+    assert peaks == {"flops_per_s": 3e9, "bytes_per_s": 2e9}
+    assert autotune.calibrated_peaks("tpu") is None
