@@ -6,7 +6,7 @@
 
 Prints ``name,us_per_call,derived`` CSV blocks per benchmark plus the
 per-figure detail tables.  ``--smoke <name>`` (name one of solve, oos,
-build, sweep, cg, dist, roofline) is the CI entry point: it runs the
+build, sweep, cg, dist, update, roofline) is the CI entry point: it runs the
 matching ``bench_<name>.py --smoke --out BENCH_<name>.json`` as a
 subprocess (several gates flip ``jax_enable_x64`` globally, so isolation
 is mandatory) and exits with the gate's status — the ci.yml bench matrix
@@ -19,7 +19,8 @@ import sys
 import time
 
 #: CI smoke gates: --smoke <name> -> bench_<name>.py --smoke
-SMOKE_BENCHES = ("solve", "oos", "build", "sweep", "cg", "dist", "roofline")
+SMOKE_BENCHES = ("solve", "oos", "build", "sweep", "cg", "dist", "update",
+                 "roofline")
 
 #: smoke benches whose gate lives outside the bench_<name>.py convention
 SMOKE_SCRIPTS = {"roofline": "roofline_report.py"}

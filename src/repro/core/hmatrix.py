@@ -325,6 +325,104 @@ def invert(f: HCKFactors, ridge: Array | float = 0.0,
 
 
 @functools.partial(jax.jit, static_argnames=("config",))
+def invert_with_leaf(f: HCKFactors, ridge: Array | float = 0.0,
+                     config: SolveConfig | None = None,
+                     ) -> tuple[InverseFactors, Array]:
+    """:func:`invert` that also returns the leaf Schur Cholesky ``lo``.
+
+    ``(inv, lo)`` with ``inv == invert(f, ridge, config)`` and ``lo`` the
+    (2**L, n0, n0) lower Cholesky factors of the ridged leaf Schur
+    complements (``inv.linv`` is their inverse).  Holding ``lo`` is what
+    makes the online-update path cheap: :func:`invert_extend` borders the
+    pair in O(k n0^2) per leaf instead of re-running the O(n0^3)
+    factorization.  Requires levels >= 1 (the 0-level dense block has no
+    leaf stage to extend).
+    """
+    config = config if config is not None else DEFAULT_CONFIG
+    if f.levels == 0:
+        raise ValueError("invert_with_leaf needs levels >= 1; use invert "
+                         "for the dense 0-level hierarchy")
+    eye_n0 = jnp.eye(f.leaf_size, dtype=f.adiag.dtype)
+    dleaf = _leaf_schur(f) + ridge * eye_n0
+    lo, linv = _stage_leaf_factor(dleaf, f.rank, config)
+    return _invert_tail(f, lo, linv), lo
+
+
+def _stage_leaf_update(lo: Array, linv: Array, b: Array, c: Array,
+                       r: int, config: SolveConfig) -> tuple[Array, Array]:
+    """Dispatch the bordered extension through the ``leaf_update`` stage:
+    (P, n0, n0) factor pair + (P, k, n0) cross + (P, k, k) appended block
+    -> extended (P, n0+k, n0+k) pair, leading quadrants untouched."""
+    backend = resolve_backend(config, "leaf_update", dtype=lo.dtype,
+                              n0=lo.shape[-1], r=r, k=b.shape[1])
+    lo_ext, linv_ext = get_impl("leaf_update", backend)(
+        lo, linv, b, c, interpret=config.interpret)
+    return lo_ext.astype(lo.dtype), linv_ext.astype(lo.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n0_base",))
+def extension_blocks(f: HCKFactors, *, n0_base: int,
+                     ridge: Array | float = 0.0) -> tuple[Array, Array]:
+    """Appended Schur blocks of row-extended leaves.
+
+    For a hierarchy whose leaves grew from ``n0_base`` to ``n0_base + k``
+    rows (:mod:`repro.core.update`), returns the (P, k, n0_base) cross
+    block and (P, k, k) appended diagonal block of the ridged leaf Schur
+    complement ``adiag - U Sigma_parent U^T + ridge I`` — the inputs of
+    the ``leaf_update`` bordered extension, also used by the online
+    warm-start preconditioner's appended-row lift.  The ridge lands on
+    the appended diagonal only (the old block already carries it).
+    """
+    sig_p = _rep2(f.sigma[f.levels - 1])
+    u_old = f.u[:, :n0_base]
+    u_app = f.u[:, n0_base:]
+    k = f.leaf_size - n0_base
+    b = f.adiag[:, n0_base:, :n0_base] - jnp.einsum(
+        "pkr,prs,pns->pkn", u_app, sig_p, u_old)
+    c = (f.adiag[:, n0_base:, n0_base:]
+         - jnp.einsum("pkr,prs,pls->pkl", u_app, sig_p, u_app)
+         + ridge * jnp.eye(k, dtype=f.adiag.dtype))
+    return b, c
+
+
+@functools.partial(jax.jit, static_argnames=("n0_base", "config"))
+def invert_extend(f: HCKFactors, lo: Array, linv: Array, *,
+                  n0_base: int, ridge: Array | float = 0.0,
+                  config: SolveConfig | None = None,
+                  ) -> tuple[InverseFactors, Array]:
+    """Algorithm 2 on row-extended factors, reusing the old leaf Cholesky.
+
+    ``f`` is a hierarchy whose leaves grew from ``n0_base`` to
+    ``n0_base + k`` rows by an online insert (:mod:`repro.core.update`):
+    the leading leaf blocks, landmarks, ``Sigma`` and ``W`` are unchanged,
+    so the ridged leaf Schur complement of every leaf is a bordered
+    extension of the one ``(lo, linv)`` already factor — the appended
+    cross/diagonal Schur blocks are formed here from ``f`` and pushed
+    through the ``leaf_update`` registry stage (O(k n0^2) per leaf), and
+    only the O(2**l r^3) middle-factor tail of Algorithm 2 re-runs.
+
+    ``ridge`` MUST equal the ridge ``(lo, linv)`` were factored with
+    (:func:`invert_with_leaf`); it is re-added to the appended diagonal
+    block only — the old block already carries it.
+
+    Returns ``(inv, lo_ext)`` matching ``invert_with_leaf(f, ridge)`` up
+    to round-off, with the extended Cholesky pair ready for the next
+    insert round.
+    """
+    config = config if config is not None else DEFAULT_CONFIG
+    n0 = f.leaf_size
+    k = n0 - n0_base
+    if k < 0:
+        raise ValueError(f"extended leaf size {n0} smaller than base "
+                         f"{n0_base}")
+    if k == 0:
+        return _invert_tail(f, lo, linv), lo
+    b, c = extension_blocks(f, n0_base=n0_base, ridge=ridge)
+    lo_ext, linv_ext = _stage_leaf_update(lo, linv, b, c, f.rank, config)
+    return _invert_tail(f, lo_ext, linv_ext), lo_ext
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
 def invert_multi(f: HCKFactors, ridges: Array,
                  config: SolveConfig | None = None) -> InverseFactors:
     """Algorithm 2 vmapped over a ridge grid: one build, G inversions.

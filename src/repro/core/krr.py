@@ -53,9 +53,31 @@ class HCKRegressor:
     classes: Array | None = None
     squeeze: bool = False
     solve_config: SolveConfig | None = None
+    lam: float | None = None            # fit ridge (needed by online updates)
+    base_leaf_size: int | None = None   # leaf size the λ' diagonal froze at
+    inverse: hmatrix.InverseFactors | None = None  # cached Algorithm-2 inverse
+    leaf_lo: Array | None = None        # its leaf Schur Cholesky (update path)
 
     def __post_init__(self):
         self._engine = None
+        self._leaf_linv = None
+
+    @property
+    def leaf_linv(self) -> Array:
+        """Leaf-granularity inverse Cholesky of the last-level ``Sigma``.
+
+        The hierarchy's landmark factors are FROZEN, so this (P, r, r)
+        stack never changes across online inserts — it is computed once
+        on first use and handed to :func:`repro.core.update.insert`,
+        keeping the structural insert free of the per-call triangular
+        inversion.
+        """
+        if self._leaf_linv is None:
+            from repro.core.hck import sigma_linv
+
+            self._leaf_linv = jnp.repeat(
+                sigma_linv(self.factors.sigma_cho[-1]), 2, axis=0)
+        return self._leaf_linv
 
     @property
     def engine(self):
@@ -78,6 +100,15 @@ class HCKRegressor:
         if z.shape[1] == 1:  # binary ±1
             return jnp.where(z[:, 0] > 0, self.classes[1], self.classes[0])
         return self.classes[jnp.argmax(z, axis=1)]
+
+    def update(self, x_new: Array, y_new: Array, **kwargs):
+        """Absorb new points online: ``fit_incremental(self, ...)``.
+
+        Returns ``(model, info)`` — the model is a NEW instance (this one
+        is untouched, so serving registries can keep it live while the
+        update builds).  See :func:`fit_incremental`.
+        """
+        return fit_incremental(self, x_new, y_new, **kwargs)
 
 
 def fit(
@@ -132,10 +163,18 @@ def fit(
         method=method, shared_landmarks=shared_landmarks, config=solve_config,
     )
     y_sorted = targets[factors.tree.perm]
-    alpha = hmatrix.solve(factors, y_sorted, ridge=lam, config=solve_config)
+    # solve via the leaf-aware inverse and CACHE it on the model: the pair
+    # is what fit_incremental's bordered extension reuses, so the FIRST
+    # online update is as cheap as the rest (inv equals hmatrix.invert's,
+    # so alpha is the same solve as before)
+    inv, lo = hmatrix.invert_with_leaf(factors, lam, solve_config)
+    alpha = hmatrix.solve_with_inverse(factors, inv, y_sorted, ridge=lam,
+                                       config=solve_config)
     plan = oos.prepare(factors, alpha, solve_config)
     return HCKRegressor(kernel, factors, plan, alpha, classes,
-                        squeeze=squeeze, solve_config=solve_config)
+                        squeeze=squeeze, solve_config=solve_config,
+                        lam=lam, base_leaf_size=factors.leaf_size,
+                        inverse=inv, leaf_lo=lo)
 
 
 def fit_streaming(
@@ -182,10 +221,220 @@ def fit_streaming(
         config=solve_config, leaf_batch=leaf_batch, chunk_rows=chunk_rows,
     )
     y_sorted = targets[factors.tree.perm]
-    alpha = hmatrix.solve(factors, y_sorted, ridge=lam, config=solve_config)
+    # cache the leaf-aware inverse exactly as fit() does, so streamed-in
+    # models take online updates without re-running Algorithm 2 first
+    inv, lo = hmatrix.invert_with_leaf(factors, lam, solve_config)
+    alpha = hmatrix.solve_with_inverse(factors, inv, y_sorted, ridge=lam,
+                                       config=solve_config)
     plan = oos.prepare(factors, alpha, solve_config)
     return HCKRegressor(kernel, factors, plan, alpha, classes,
-                        squeeze=squeeze, solve_config=solve_config)
+                        squeeze=squeeze, solve_config=solve_config,
+                        lam=lam, base_leaf_size=factors.leaf_size,
+                        inverse=inv, leaf_lo=lo)
+
+
+@dataclasses.dataclass
+class UpdateInfo:
+    """Diagnostics of one :func:`fit_incremental` round.
+
+    ``iterations``/``residual``/``converged`` describe the re-solve
+    (warm-started CG counts for ``refresh="stale"``; refinement-polished
+    structured solve for ``refresh="inverse"``, where ``iterations`` is
+    0).  ``cold_iterations`` is the unwarmed CG count when
+    ``measure_cold=True`` (the warm-vs-cold gate of bench_update).
+    ``needs_rebuild`` is the :class:`repro.core.update.RebuildPolicy`
+    verdict — True means schedule a full :func:`fit` rebuild.
+    """
+
+    record: object             # repro.core.update.InsertRecord
+    refresh: str
+    iterations: int
+    residual: float
+    converged: bool
+    cold_iterations: int | None = None
+    needs_rebuild: bool = False
+
+
+def fit_incremental(
+    model: HCKRegressor,
+    x_new: Array,
+    y_new: Array,
+    *,
+    refresh: str = "inverse",
+    policy=None,
+    key: Array | None = None,
+    tol: float = 1e-8,
+    maxiter: int = 200,
+    measure_cold: bool = False,
+) -> tuple[HCKRegressor, UpdateInfo]:
+    """Absorb a batch of new points into a fitted model without rebuilding.
+
+    The online-update path (DESIGN.md §10): new points are routed down
+    the FROZEN tree and appended to their owning leaves
+    (:func:`repro.core.update.insert` — landmarks, ``Sigma``, ``W`` and
+    the fit-time λ′ diagonal are all untouched), then the dual
+    coefficients are re-solved on the union:
+
+    ``refresh="inverse"`` (default, the parity path): the cached leaf
+      Schur Cholesky pair is extended by the bordered ``leaf_update``
+      stage (:func:`repro.core.hmatrix.invert_extend` — O(k n0^2) per
+      leaf, never re-factoring the old block) and the refreshed exact
+      structured inverse solves as in :func:`fit`.  Predictions match a
+      from-scratch :func:`repro.core.update.refit_frozen` rebuild to
+      float64 round-off.
+
+    ``refresh="stale"`` (the cheap path): NO re-factorization at all —
+      CG on the extended operator, warm-started from the previous
+      ``alpha`` (lifted with zeros on the appended rows) and
+      preconditioned by the STALE structured inverse lifted the same way
+      (old rows through the old inverse, appended rows Jacobi-scaled;
+      block-diagonal, hence still SPD).  The preconditioner's staleness
+      contract: it was exact for the pre-insert operator, so its quality
+      degrades with accumulated growth — :class:`RebuildPolicy` watches
+      the iteration count for exactly this drift.
+
+    The fit-time targets are reconstructed exactly from the model itself
+    (``y = (K_hck + λ)α``, one Algorithm-1 matvec) so nothing beyond the
+    fitted state is needed.  ``y_new`` uses the model's fit-time
+    encoding (regression columns, or ±1 against ``model.classes``; new
+    class labels are rejected).  Returns ``(model_new, info)`` — the
+    input model is untouched and stays servable during the update.
+    """
+    from repro.core.update import RebuildPolicy, insert
+    from repro.solvers.cg import pcg
+
+    if model.lam is None:
+        raise ValueError("model carries no fit ridge (built before the "
+                         "online-update engine?) — refit with krr.fit")
+    f = model.factors
+    lam = model.lam
+    cfg = model.solve_config
+    base = model.base_leaf_size or f.leaf_size
+    key = key if key is not None else jax.random.PRNGKey(f.n)
+    policy = policy if policy is not None else RebuildPolicy()
+
+    # encode arrivals with the FIT-TIME convention
+    if model.classes is not None:
+        known = jnp.isin(y_new, model.classes)
+        if not bool(jnp.all(known)):
+            raise ValueError("y_new contains labels outside the fitted "
+                             "classes; a full refit is required")
+        if model.classes.shape[0] == 2:
+            targets_new = jnp.where(y_new == model.classes[1], 1.0, -1.0)[:, None]
+        else:
+            targets_new = jnp.where(
+                y_new[:, None] == model.classes[None, :], 1.0, -1.0)
+    else:
+        targets_new = y_new if y_new.ndim > 1 else y_new[:, None]
+
+    # exact fit-time targets, reconstructed: y_sorted = (K_hck + lam) alpha
+    y_sorted = hmatrix.matvec(f, model.alpha, cfg) + lam * model.alpha
+
+    f_new, y_sorted_new, rec = insert(
+        f, x_new, model.kernel, key=key, config=cfg,
+        y_new=targets_new, y_sorted=y_sorted, jitter_rows=base,
+        linv_leaf=model.leaf_linv)
+    if rec.k == 0:  # empty batch: exact no-op
+        info = UpdateInfo(rec, refresh, 0, 0.0, True)
+        return model, info
+
+    n0_old = f.leaf_size
+    inv_base, lo_base = model.inverse, model.leaf_lo
+    if inv_base is None or lo_base is None or inv_base.leaf_size != n0_old:
+        inv_base, lo_base = hmatrix.invert_with_leaf(f, lam, cfg)
+
+    cold_iters = None
+    if refresh == "inverse":
+        inv_new, lo_new = hmatrix.invert_extend(
+            f_new, lo_base, inv_base.linv, n0_base=n0_old, ridge=lam,
+            config=cfg)
+        alpha_new = hmatrix.solve_with_inverse(
+            f_new, inv_new, y_sorted_new, ridge=lam, config=cfg)
+        iters = 0
+    elif refresh == "stale":
+        p_leaves, n0_new = f_new.num_leaves, f_new.leaf_size
+        kcols = model.alpha.shape[1]
+        # lifted stale preconditioner: the 2x2 block-inverse congruence
+        #   P = [I -A⁻¹Bᵀ; 0 I] blkdiag(A⁻¹, S~⁻¹) [I 0; -BA⁻¹ I]
+        # with A⁻¹ the UNREFRESHED old structured inverse, B the exact
+        # old/appended operator coupling (read off two Algorithm-1
+        # matvecs — no block is ever materialized), and S~ the
+        # leaf-local appended Schur complement from blocks already in
+        # hand.  SPD by congruence; exact up to the inter-leaf coupling
+        # S~ drops.  A block-diagonal lift (dropping the off-diagonal
+        # congruence) was measured WORSE than no preconditioner for
+        # near-duplicate arrivals — the omitted A⁻¹BᵀS⁻¹BA⁻¹ mass is
+        # exactly what resolves a duplicated row.
+        bb, cc = hmatrix.extension_blocks(f_new, n0_base=n0_old, ridge=lam)
+        l21 = jnp.einsum("pkn,pmn->pkm", bb, inv_base.linv)
+        s_inv = jnp.linalg.inv(cc - jnp.einsum("pij,pkj->pik", l21, l21))
+
+        def _split(v: Array) -> tuple[Array, Array]:
+            vb = v.reshape(p_leaves, n0_new, -1)
+            return vb[:, :n0_old], vb[:, n0_old:]
+
+        def _join(v_old: Array, v_app: Array, ncols: int) -> Array:
+            return jnp.concatenate([v_old, v_app], axis=1).reshape(-1, ncols)
+
+        def precond(r: Array) -> Array:
+            ncols = r.shape[-1] if r.ndim > 1 else 1
+            r_old, r_app = _split(r)
+            z1 = hmatrix.apply_inverse(
+                inv_base, r_old.reshape(-1, ncols), cfg)
+            z1b = z1.reshape(p_leaves, n0_old, ncols)
+            # B z1 = appended rows of (A + lam)(z1; 0)
+            _, bz1 = _split(hmatrix.matvec(
+                f_new, _join(z1b, jnp.zeros_like(r_app), ncols), cfg)
+                + lam * _join(z1b, jnp.zeros_like(r_app), ncols))
+            z_app = jnp.einsum("pij,pjc->pic", s_inv, r_app - bz1)
+            # Bᵀ z_app = old rows of (A + lam)(0; z_app)
+            btz, _ = _split(hmatrix.matvec(
+                f_new, _join(jnp.zeros_like(z1b), z_app, ncols), cfg)
+                + lam * _join(jnp.zeros_like(z1b), z_app, ncols))
+            z_old = z1b - hmatrix.apply_inverse(
+                inv_base, btz.reshape(-1, ncols), cfg).reshape(
+                    p_leaves, n0_old, ncols)
+            return _join(z_old, z_app, ncols).reshape(r.shape)
+
+        x0 = jnp.zeros((p_leaves, n0_new, kcols), model.alpha.dtype)
+        x0 = x0.at[:, :n0_old].set(
+            model.alpha.reshape(p_leaves, n0_old, kcols)).reshape(-1, kcols)
+
+        def amv(v: Array) -> Array:
+            return hmatrix.matvec(f_new, v, cfg)
+
+        res = pcg(amv, y_sorted_new, ridge=lam, precond=precond,
+                  x0=x0, tol=tol, maxiter=maxiter)
+        alpha_new, iters = res.x, int(res.iterations)
+        if measure_cold:
+            # cold = no carried state at all: neither the stale inverse
+            # nor the previous alpha (what a from-scratch CG would pay)
+            res_cold = pcg(amv, y_sorted_new, ridge=lam,
+                           tol=tol, maxiter=maxiter)
+            cold_iters = int(res_cold.iterations)
+        inv_new, lo_new = inv_base, lo_base  # kept stale for the next lift
+    else:
+        raise ValueError(f"unknown refresh {refresh!r}; use 'inverse' or "
+                         "'stale'")
+
+    resid = y_sorted_new - (hmatrix.matvec(f_new, alpha_new, cfg)
+                            + lam * alpha_new)
+    rel = float(jnp.linalg.norm(resid.reshape(-1))
+                / jnp.linalg.norm(y_sorted_new.reshape(-1)))
+    plan = oos.prepare(f_new, alpha_new, cfg)
+    model_new = HCKRegressor(
+        model.kernel, f_new, plan, alpha_new, model.classes,
+        squeeze=model.squeeze, solve_config=cfg, lam=lam,
+        base_leaf_size=base, inverse=inv_new, leaf_lo=lo_new)
+    model_new._leaf_linv = model._leaf_linv  # frozen landmarks: carry over
+    needs_rebuild = policy.should_rebuild(
+        base_leaf_size=base, leaf_size=f_new.leaf_size,
+        warm_iters=iters if refresh == "stale" else None,
+        update_error=rel)
+    info = UpdateInfo(rec, refresh, iters, rel,
+                      converged=(rel <= max(tol, 1e-6) or refresh == "inverse"),
+                      cold_iterations=cold_iters, needs_rebuild=needs_rebuild)
+    return model_new, info
 
 
 @dataclasses.dataclass
@@ -215,7 +464,9 @@ class KRRPath:
         plan = oos.prepare(self.factors, self.alphas[g], self.solve_config)
         return HCKRegressor(self.kernel, self.factors, plan, self.alphas[g],
                             self.classes, squeeze=self.squeeze,
-                            solve_config=self.solve_config)
+                            solve_config=self.solve_config,
+                            lam=float(self.lams[g]),
+                            base_leaf_size=self.factors.leaf_size)
 
     def best(self) -> HCKRegressor:
         """Model at the validation-score argmin (requires scores)."""

@@ -1,0 +1,331 @@
+"""Online updates of a frozen HCK hierarchy (DESIGN.md §10).
+
+Absorbing new points into a fitted hierarchy without the full
+Algorithm-2 rebuild: the partition tree, landmark sets, middle factors
+``Sigma`` and transfer operators ``W`` are all FROZEN; new points are
+routed down the recorded hyperplanes (:func:`repro.core.partition.route`
+— the same on-threshold tie rule as query routing: a projection exactly
+on a threshold goes LEFT), appended to their owning leaf blocks, and
+only the leaf-local factors change:
+
+  * ``Adiag`` grows by a cross row-block and an appended diagonal block
+    (plain kernel evaluations — O(k n0 d) per leaf);
+  * ``U`` grows by the appended rows' Nyström projection against the
+    frozen parent landmarks (one ``build_cross`` stage launch);
+  * the leaf Schur-complement Cholesky factors of an existing structured
+    inverse are extended by the bordered ``leaf_update`` registry stage
+    (O(k n0^2) per leaf — never re-factoring the old block), after which
+    the O(2^l r^3) middle-factor tail of Algorithm 2 is re-run.
+
+The λ′ conditioning diagonal (``kernel.jitter``, size-scaled by
+``BaseKernel.gram``) is FROZEN AT FIT TIME: the base build added
+``jitter * n0_base`` to each leaf diagonal, and online growth keeps that
+absolute value on old and appended rows alike — rescaling it with the
+growing leaf would perturb the old diagonal and break the exact bordered
+extension.  :func:`refit_frozen` is the from-scratch oracle under the
+same convention (it rebuilds the leaf stages on the union with the
+jitter rescaled so ``jitter' * n0_new == jitter * n0_base``).
+
+Uniform leaf shapes are kept by padding every leaf's insert slab to the
+same ``k = max(per-leaf arrivals)`` rows with the duplicate-and-jitter
+rule of :func:`repro.core.partition.pad_points` (duplicated rows copy
+their source targets).  The padding makes :func:`downdate` an exact
+truncation: removing the last ``k`` appended rows restores the previous
+factors bitwise.
+
+:class:`RebuildPolicy` bounds the drift: when leaf growth, warm-start
+iteration counts, or the accumulated update error cross the thresholds,
+the caller should schedule a full :func:`repro.core.krr.fit` rebuild
+(``krr.fit_incremental`` surfaces the flag; ``launch/train.py --update``
+and the serving registry act on it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hck import (HCKFactors, _stage_build_cross,
+                            leaf_stage_factors, sigma_linv)
+from repro.core.kernels_fn import BaseKernel
+from repro.core.partition import PartitionTree, group_by_leaf, route
+from repro.kernels.registry import DEFAULT_CONFIG, SolveConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RebuildPolicy:
+    """Thresholds that trigger a full rebuild of an online-updated model.
+
+    max_leaf_growth   appended rows per leaf as a fraction of the
+                      fit-time leaf size; beyond it the O(k n0^2) update
+                      cost approaches the O(n0^3) re-factorization and
+                      the frozen tree's balance degrades.
+    max_warm_iters    warm-started CG iterations of the last re-solve
+                      (refresh="stale" path); a climbing count means the
+                      stale preconditioner has drifted too far.  None
+                      disables the check.
+    max_update_error  relative residual of the last re-solve; None
+                      disables the check.
+    """
+
+    max_leaf_growth: float = 0.5
+    max_warm_iters: int | None = None
+    max_update_error: float | None = None
+
+    def should_rebuild(self, *, base_leaf_size: int, leaf_size: int,
+                       warm_iters: int | None = None,
+                       update_error: float | None = None) -> bool:
+        """Whether the accumulated online updates warrant a full rebuild."""
+        growth = (leaf_size - base_leaf_size) / max(base_leaf_size, 1)
+        if growth > self.max_leaf_growth:
+            return True
+        if (self.max_warm_iters is not None and warm_iters is not None
+                and warm_iters > self.max_warm_iters):
+            return True
+        if (self.max_update_error is not None and update_error is not None
+                and update_error > self.max_update_error):
+            return True
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class InsertRecord:
+    """Host-side record of one insert batch (consumed by the re-solve).
+
+    ``k`` appended rows per leaf (0 = no-op), ``base_leaf_size`` the leaf
+    size BEFORE this insert, ``counts[p]`` the real (non-padding)
+    arrivals routed to leaf ``p``, ``real_rows`` the (P, k) mask of
+    non-padding appended slots.
+    """
+
+    k: int
+    base_leaf_size: int
+    counts: np.ndarray
+    real_rows: np.ndarray
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "config", "k"))
+def _insert_device(x_sorted, adiag, u, perm, x_new_sorted, leaf_sorted, pos,
+                   lm_rep, linv_rep, y_sorted, y_new_sorted, lam_abs, key,
+                   *, kernel, config, k):
+    """One fused launch extending every leaf block by ``k`` rows.
+
+    The host caller has already routed/grouped the arrivals; everything
+    shape-dependent is static here (``k``), so steady-state serving pays
+    one cached executable per batch shape instead of ~20 dispatches.
+    """
+    p_leaves, n0, _ = adiag.shape
+    n_old, d = x_sorted.shape
+    x_leaves = x_sorted.reshape(p_leaves, n0, d)
+
+    # padding: duplicate-and-jitter rows drawn from each leaf's own block
+    # (the pad_points rule), overwritten by the real arrivals where present
+    kidx, knoise = jax.random.split(key)
+    idx = jax.random.randint(kidx, (p_leaves, k), 0, n0)
+    noise = 1e-4 * jax.random.normal(knoise, (p_leaves, k, d),
+                                     dtype=x_sorted.dtype)
+    x_app = jnp.take_along_axis(x_leaves, idx[..., None], axis=1) + noise
+    x_app = x_app.at[leaf_sorted, pos].set(x_new_sorted)
+
+    # Adiag extension: cross block + appended diagonal block with the
+    # frozen λ' diagonal (lam_abs on the new rows only; the old block
+    # keeps the value the base build added)
+    kcross = jax.vmap(kernel.cross)(x_app, x_leaves)            # (P, k, n0)
+    kdiag = jax.vmap(kernel.cross)(x_app, x_app)                # (P, k, k)
+    kdiag = kdiag + lam_abs * jnp.eye(k, dtype=kdiag.dtype)
+    adiag_new = jnp.concatenate([
+        jnp.concatenate([adiag, kcross.swapaxes(1, 2)], axis=2),
+        jnp.concatenate([kcross, kdiag], axis=2),
+    ], axis=1)
+
+    # U extension: one build_cross stage launch against the frozen parent
+    # landmarks/Linv (pre-repeated to leaf granularity by the caller)
+    u_app = _stage_build_cross(x_app, lm_rep, linv_rep, kernel, config)
+    u_new = jnp.concatenate([u, u_app.astype(u.dtype)], axis=1)
+
+    x_sorted_new = jnp.concatenate([x_leaves, x_app], axis=1).reshape(-1, d)
+    perm_app = (n_old + jnp.arange(p_leaves * k, dtype=perm.dtype)
+                ).reshape(p_leaves, k)
+    perm_new = jnp.concatenate(
+        [perm.reshape(p_leaves, n0), perm_app], axis=1).reshape(-1)
+
+    y_sorted_new = None
+    if y_sorted is not None:
+        y_leaves = y_sorted.reshape(p_leaves, n0, -1)
+        y_app = jnp.take_along_axis(y_leaves, idx[..., None], axis=1)
+        if y_new_sorted is not None:
+            y_app = y_app.at[leaf_sorted, pos].set(
+                y_new_sorted.astype(y_app.dtype))
+        y_sorted_new = jnp.concatenate([y_leaves, y_app], axis=1).reshape(
+            -1, y_sorted.shape[-1])
+    return x_sorted_new, adiag_new, u_new, perm_new, y_sorted_new
+
+
+def insert(
+    factors: HCKFactors,
+    x_new: Array,
+    kernel: BaseKernel,
+    *,
+    key: Array,
+    config: SolveConfig | None = None,
+    y_new: Array | None = None,
+    y_sorted: Array | None = None,
+    jitter_rows: int | None = None,
+    linv_leaf: Array | None = None,
+) -> tuple[HCKFactors, Array | None, InsertRecord]:
+    """Append ``x_new`` to the frozen hierarchy's owning leaves.
+
+    Routes the batch down the recorded tree (on-threshold ties go LEFT,
+    like query routing — points far outside the training hull still land
+    in a well-defined boundary leaf), pads every leaf's slab to the batch
+    maximum ``k`` with duplicate-and-jitter rows, and extends ``Adiag``
+    / ``U`` / ``x_sorted`` / ``perm`` in place of a rebuild.  Landmarks,
+    ``Sigma`` and ``W`` are untouched.
+
+    Parameters
+    ----------
+    factors:     fitted hierarchy (levels >= 1).
+    x_new:       (q, d) arrivals; q == 0 is an exact no-op.
+    kernel:      the fit kernel; its ``jitter`` is interpreted at the
+                 FIT-TIME leaf size (see ``jitter_rows``).
+    key:         PRNG key for the padding duplicates and jitter.
+    config:      stage backends for the appended rows' ``build_cross``.
+    y_new:       (q,) or (q, k) encoded targets of the arrivals; requires
+                 ``y_sorted``.
+    y_sorted:    (n, k) current targets in tree order (padding rows copy
+                 their duplication source's targets, as in ``pad_points``).
+    jitter_rows: row count the λ′ diagonal was frozen at (default: the
+                 CURRENT leaf size — correct for the first insert after a
+                 fit; repeated inserts must pass the fit-time leaf size).
+    linv_leaf:   optional (P, r, r) leaf-granularity inverse Cholesky of
+                 the last-level ``Sigma`` (``HCKRegressor.leaf_linv``).
+                 The landmark factors are frozen, so callers that insert
+                 repeatedly should pass the cached stack and skip the
+                 per-call triangular inversion; None recomputes it.
+
+    Returns
+    -------
+    (factors_new, y_sorted_new, record):  extended factors, extended
+    tree-order targets (None when ``y_new`` is None), and the
+    :class:`InsertRecord`.  ``perm`` is extended consistently: appended
+    rows get virtual input indices ``n_old + leaf*k + slot``, so
+    ``targets_virtual[perm_new]`` reproduces ``y_sorted_new``.
+    """
+    config = config if config is not None else DEFAULT_CONFIG
+    if factors.levels < 1:
+        raise ValueError("insert needs a real hierarchy (levels >= 1); "
+                         "rebuild the dense 0-level block directly")
+    q = x_new.shape[0]
+    n0 = factors.leaf_size
+    rec_empty = InsertRecord(0, n0, np.zeros((factors.num_leaves,), np.int64),
+                             np.zeros((factors.num_leaves, 0), bool))
+    if q == 0:
+        return factors, y_sorted, rec_empty
+    if y_new is not None and y_sorted is None:
+        raise ValueError("y_new requires y_sorted (current tree-order "
+                         "targets) so padding rows can copy their source "
+                         "targets")
+
+    p_leaves = factors.num_leaves
+    jitter_rows = n0 if jitter_rows is None else jitter_rows
+
+    leaf = route(factors.tree, x_new)
+    order, counts, starts = group_by_leaf(leaf, p_leaves)
+    order_np = np.asarray(order)
+    counts_np = np.asarray(counts)
+    starts_np = np.asarray(starts)
+    k = int(counts_np.max())
+    leaf_sorted = np.asarray(leaf)[order_np]
+    pos = np.arange(q) - starts_np[leaf_sorted]
+
+    lm_rep = jnp.repeat(factors.landmarks[-1], 2, axis=0)       # (P, r, d)
+    if linv_leaf is None:
+        linv_leaf = jnp.repeat(sigma_linv(factors.sigma_cho[-1]), 2, axis=0)
+
+    yk = yn_sorted = None
+    if y_sorted is not None:
+        yk = y_sorted if y_sorted.ndim > 1 else y_sorted[:, None]
+        if y_new is not None:
+            yn = y_new if y_new.ndim > 1 else y_new[:, None]
+            yn_sorted = yn[order_np]
+    lam_abs = jnp.asarray(kernel.jitter * jitter_rows,
+                          dtype=factors.adiag.dtype)
+    x_sorted_new, adiag_new, u_new, perm_new, y_sorted_new = _insert_device(
+        factors.x_sorted, factors.adiag, factors.u, factors.tree.perm,
+        x_new[order_np], jnp.asarray(leaf_sorted), jnp.asarray(pos),
+        lm_rep, linv_leaf, yk, yn_sorted, lam_abs, key,
+        kernel=kernel, config=config, k=k)
+    if y_sorted is not None and y_sorted.ndim == 1:
+        y_sorted_new = y_sorted_new[:, 0]
+    tree_new = PartitionTree(perm_new, factors.tree.directions,
+                             factors.tree.thresholds)
+
+    real = np.zeros((p_leaves, k), bool)
+    real[leaf_sorted, pos] = True
+    factors_new = HCKFactors(
+        x_sorted_new, tree_new, factors.landmarks, factors.sigma,
+        factors.sigma_cho, factors.w, u_new, adiag_new)
+    return factors_new, y_sorted_new, InsertRecord(k, n0, counts_np, real)
+
+
+def downdate(factors: HCKFactors, k: int) -> HCKFactors:
+    """Remove the last ``k`` appended rows of every leaf (exact truncation).
+
+    The bordered extension leaves the leading blocks of every factor
+    untouched, so reversing an :func:`insert` of ``k`` rows per leaf is a
+    pure slice — the returned factors equal the pre-insert factors
+    BITWISE (the round-trip property test pins this).
+    """
+    if k == 0:
+        return factors
+    n0 = factors.leaf_size - k
+    if n0 < 1:
+        raise ValueError(f"cannot remove {k} rows from leaves of size "
+                         f"{factors.leaf_size}")
+    p_leaves, d = factors.num_leaves, factors.x_sorted.shape[1]
+    x_sorted = factors.x_sorted.reshape(p_leaves, -1, d)[:, :n0].reshape(-1, d)
+    perm = factors.tree.perm.reshape(p_leaves, -1)[:, :n0].reshape(-1)
+    tree = PartitionTree(perm, factors.tree.directions,
+                         factors.tree.thresholds)
+    return HCKFactors(
+        x_sorted, tree, factors.landmarks, factors.sigma, factors.sigma_cho,
+        factors.w, factors.u[:, :n0], factors.adiag[:, :n0, :n0])
+
+
+def refit_frozen(
+    factors: HCKFactors,
+    kernel: BaseKernel,
+    config: SolveConfig | None = None,
+    *,
+    jitter_rows: int | None = None,
+) -> HCKFactors:
+    """From-scratch leaf stages on the SAME frozen hierarchy (the oracle).
+
+    Recomputes ``Adiag`` and ``U`` from ``x_sorted`` with the tree,
+    landmarks, ``Sigma`` and ``W`` frozen — exactly what :func:`insert`
+    extends incrementally, so the two must agree to stage round-off (the
+    update property tests gate factors at 1e-10 and predictions at 1e-6
+    in float64).  ``jitter_rows`` pins the frozen λ′ convention: the
+    kernel's jitter is rescaled so the size-scaled Gram diagonal equals
+    ``kernel.jitter * jitter_rows`` regardless of the current leaf size
+    (default: the current leaf size, i.e. a fresh build's convention).
+    """
+    config = config if config is not None else DEFAULT_CONFIG
+    n0 = factors.leaf_size
+    jitter_rows = n0 if jitter_rows is None else jitter_rows
+    ker = dataclasses.replace(
+        kernel, jitter=kernel.jitter * jitter_rows / n0)
+    p_leaves, d = factors.num_leaves, factors.x_sorted.shape[1]
+    leaves = factors.x_sorted.reshape(p_leaves, n0, d)
+    lm_rep = jnp.repeat(factors.landmarks[-1], 2, axis=0)
+    linv_rep = jnp.repeat(sigma_linv(factors.sigma_cho[-1]), 2, axis=0)
+    adiag, u = leaf_stage_factors(leaves, lm_rep, linv_rep, ker, config)
+    return HCKFactors(
+        factors.x_sorted, factors.tree, factors.landmarks, factors.sigma,
+        factors.sigma_cho, factors.w, u.astype(factors.u.dtype),
+        adiag.astype(factors.adiag.dtype))

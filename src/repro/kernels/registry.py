@@ -39,6 +39,7 @@ STAGES = (
     "leaf_matvec",     # y_i = A_ii b_i            ; c_i = U_i^T b_i
     "leaf_solve",      # x_i = A_ii^{-1} b_i (+lr) ; c_i = U_i^T b_i
     "leaf_factor",     # D_i -> chol(D_i), chol(D_i)^{-1}  (Algorithm-2 inv)
+    "leaf_update",     # bordered rank-k extension of (chol, chol^{-1})
     "leaf_project",    # c_i = U_i^T b_i           (OOS common-upward)
     "oos_local",       # z_i = w_i^T k(Xleaf_i, x_i)   (Algorithm-3 exact term)
     "oos_walk",        # z_i = c~_i^T k(Xl_i, x_i)     (flattened root path)
@@ -249,6 +250,9 @@ def tile_config(stage: str, *, n0: int, r: int, k: int, d: int = 0,
     gram + Cholesky (3 n0^2), ``build_cross_dist`` holds dist (bn, r) +
     Linv (r, r) + out (bn, r).  ``leaf_factor`` factorizes the whole (n0,
     n0) leaf Schur tile in place (dist-in, chol + inverse out: 3 n0^2).
+    ``leaf_update`` (the bordered rank-k extension) also processes whole
+    leaves; here ``k`` is the number of appended rows, so the working set
+    is 2 n0^2 + k n0 + k^2 in plus two (n0+k)^2 extended factors out.
 
     When no explicit ``leaf_block`` is given and the autotune tile DB
     (:mod:`repro.kernels.autotune`) holds a measured winner for this
@@ -260,9 +264,15 @@ def tile_config(stage: str, *, n0: int, r: int, k: int, d: int = 0,
         leaf_block = _autotuned_block(stage, n0=n0, r=r, k=k, d=d,
                                       itemsize=itemsize)
 
-    if stage in ("build_gram", "build_gram_dist", "leaf_factor"):
+    if stage in ("build_gram", "build_gram_dist", "leaf_factor",
+                 "leaf_update"):
         if stage == "build_gram":
             usage_g = (n0 * d + 2 * n0 * n0) * itemsize
+        elif stage == "leaf_update":
+            # old factors (2 n0^2) + cross/appended blocks (k n0 + k^2)
+            # + two extended (n0+k, n0+k) outputs, whole-leaf per program
+            usage_g = (2 * n0 * n0 + k * n0 + k * k
+                       + 2 * (n0 + k) * (n0 + k)) * itemsize
         else:   # dist tile (or SPD tile) in, two (n0, n0) factors out
             usage_g = 3 * n0 * n0 * itemsize
         return TileConfig(n0, usage_g)
@@ -427,7 +437,7 @@ def resolve_backend(config: SolveConfig | None, stage: str, *,
     if n0 % config.min_pallas_leaf != 0:
         return "xla"
     if stage in ("leaf_solve", "build_gram", "build_gram_dist",
-                 "leaf_factor"):
+                 "leaf_factor", "leaf_update"):
         whole = tile_config(stage, n0=n0, r=r, k=k, d=d,
                             itemsize=jnp.dtype(dtype).itemsize,
                             leaf_block=n0)
@@ -497,6 +507,21 @@ def _leaf_factor_xla(dleaf, *, interpret: bool = True):
     return lo.astype(dleaf.dtype), linv.astype(dleaf.dtype)
 
 
+@register("leaf_update", "xla")
+def _leaf_update_xla(lo, linv, b, c, *, interpret: bool = True):
+    """Bordered rank-k extension of batched leaf Cholesky factors.
+
+    (P,n0,n0) lo/linv, (P,k,n0) cross block, (P,k,k) appended block ->
+    (lo_ext, linv_ext), both (P,n0+k,n0+k); the leading (n0,n0)
+    quadrants are the inputs unchanged (exact-truncation downdate).
+    """
+    del interpret
+    from repro.kernels.update_stage.ref import leaf_update_ref
+
+    lo_ext, linv_ext = leaf_update_ref(lo, linv, b, c)
+    return lo_ext.astype(lo.dtype), linv_ext.astype(lo.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Pallas implementations — lazy imports so plain-XLA users never pay the
 # pallas import, and so this module has no import cycle with the kernel
@@ -530,6 +555,13 @@ def _leaf_factor_pallas(dleaf, *, interpret: bool = True):
     from repro.kernels.hck_leaf.ops import leaf_factor
 
     return leaf_factor(dleaf, interpret=interpret)
+
+
+@register("leaf_update", "pallas")
+def _leaf_update_pallas(lo, linv, b, c, *, interpret: bool = True):
+    from repro.kernels.update_stage.ops import leaf_update
+
+    return leaf_update(lo, linv, b, c, interpret=interpret)
 
 
 @register("oos_local", "xla")

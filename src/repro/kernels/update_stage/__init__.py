@@ -1,0 +1,11 @@
+"""Bordered leaf-factor extension stage: rank-k Cholesky up/downdates.
+
+The leaf primitive of the online-update engine (:mod:`repro.core.update`):
+appending rows to a leaf extends its Schur-complement Cholesky factor and
+inverse in O(k n0^2) without re-factoring the old (n0, n0) block, and the
+downdate is an exact truncation of the extended factors.
+"""
+from repro.kernels.update_stage.ops import leaf_update
+from repro.kernels.update_stage.ref import leaf_update_ref
+
+__all__ = ["leaf_update", "leaf_update_ref"]

@@ -1,0 +1,38 @@
+"""Jit'd wrapper for the fused bordered leaf-update stage.
+
+The "pallas" backend entry of :mod:`repro.kernels.registry` (lazily
+imported so XLA-only users never trace a Pallas call).  Inputs at or
+below 32-bit are computed on the f32 MXU path; float64 inputs stay
+float64 (interpret-mode oracle parity).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.update_stage.ref import leaf_update_ref
+from repro.kernels.update_stage.update_stage import hck_leaf_update
+
+Array = jax.Array
+
+
+def _compute_dtype(*arrays: Array):
+    if any(a.dtype == jnp.float64 for a in arrays):
+        return jnp.float64
+    return jnp.float32
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def leaf_update(
+    lo: Array, linv: Array, b: Array, c: Array, *,
+    interpret: bool = True, use_pallas: bool = True,
+) -> tuple[Array, Array]:
+    """Fused bordered extension of batched leaf Cholesky factors."""
+    if not use_pallas:
+        return leaf_update_ref(lo, linv, b, c)
+    ct = _compute_dtype(lo, linv, b, c)
+    return hck_leaf_update(
+        lo.astype(ct), linv.astype(ct), b.astype(ct), c.astype(ct),
+        interpret=interpret)

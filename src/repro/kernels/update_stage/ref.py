@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the bordered leaf-factor extension (rank-k update).
+
+Appending ``k`` rows to a leaf whose Schur complement was factored as
+``A11 = lo lo^T`` extends the factorization without retouching the old
+block: with ``B (k, n0)`` the cross block against the existing rows and
+``C (k, k)`` the new rows' own block,
+
+  L21   = B lo^{-T}          = B linv^T
+  S     = C - L21 L21^T        (the appended rows' Schur complement)
+  L22   = chol(S)
+  lo'   = [[lo, 0], [L21, L22]]
+  linv' = [[linv, 0], [-L22^{-1} L21 linv, L22^{-1}]]
+
+The leading ``(n0, n0)`` blocks of ``lo'``/``linv'`` are the inputs
+UNCHANGED — which is what makes the downdate (remove the same k rows)
+an exact truncation, and the insert/remove round-trip bitwise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hck_leaf.ref import _f, blocked_cholesky, tril_inverse
+
+Array = jax.Array
+
+
+def leaf_update_ref(
+    lo: Array, linv: Array, b: Array, c: Array,
+) -> tuple[Array, Array]:
+    """Bordered extension of batched leaf Cholesky factors.
+
+    (P, n0, n0) ``lo``/``linv`` (lower triangular, ``linv = lo^{-1}``),
+    (P, k, n0) cross block ``b``, (P, k, k) appended block ``c`` ->
+    ``(lo_ext, linv_ext)``, both (P, n0+k, n0+k), with the leading
+    (n0, n0) quadrants equal to the inputs.  A non-SPD appended Schur
+    complement fails loudly: NaNs from the base Cholesky propagate.
+    """
+    lo, linv, b, c = _f(lo), _f(linv), _f(b), _f(c)
+    p, n0, _ = lo.shape
+    k = b.shape[1]
+    l21 = jnp.einsum("pkn,pmn->pkm", b, linv)              # B linv^T
+    s = c - jnp.einsum("pij,pkj->pik", l21, l21)
+    l22 = blocked_cholesky(s)
+    linv22 = tril_inverse(l22)
+    linv21 = -jnp.einsum("pij,pjn,pnm->pim", linv22, l21, linv)
+    z_tr = jnp.zeros((p, n0, k), lo.dtype)
+    lo_ext = jnp.concatenate([
+        jnp.concatenate([lo, z_tr], axis=2),
+        jnp.concatenate([l21, l22], axis=2),
+    ], axis=1)
+    linv_ext = jnp.concatenate([
+        jnp.concatenate([linv, z_tr], axis=2),
+        jnp.concatenate([linv21, linv22], axis=2),
+    ], axis=1)
+    return lo_ext, linv_ext

@@ -7,12 +7,15 @@ arch-appropriate cache (exact KV or the paper's HCK Algorithm-3 state).
       --reduced --prompt-len 64 --gen 32 --batch 2
 
 ``--task krr``: fit an HCK kernel ridge model and serve a stream of query
-micro-batches through the shape-bucketed prediction engine
-(repro.serving.predict_service), reporting queries/sec and latency
-percentiles.
+micro-batches through the versioned hot-swap registry
+(repro.serving.predict_service.ModelRegistry), reporting queries/sec and
+latency percentiles.  ``--update-batch N`` absorbs N new points online
+mid-stream (krr.fit_incremental) and hot-swaps the new version under the
+running stream — zero downtime, swap latency reported; ``--rollback``
+additionally rolls back to v1 for the tail of the stream.
 
   PYTHONPATH=src python -m repro.launch.serve --task krr --n 16384 \
-      --rank 64 --queries 4096
+      --rank 64 --queries 4096 --update-batch 256 --rollback
 """
 from __future__ import annotations
 
@@ -65,6 +68,8 @@ def run_krr(args):
     from repro.core import krr
     from repro.core.kernels_fn import BaseKernel
     from repro.kernels.registry import SolveConfig
+    from repro.serving.predict_service import ModelRegistry
+    from repro.serving.serve_loop import KRRServeLoop
 
     cfg = SolveConfig(backend=args.solve_backend)
     key = jax.random.PRNGKey(0)
@@ -78,29 +83,55 @@ def run_krr(args):
     jax.block_until_ready(model.alpha)
     t_fit = time.perf_counter() - t0
 
-    engine = model.engine
     t0 = time.perf_counter()
-    engine.warmup()
+    registry = ModelRegistry(model, tag="fit", warmup=True)
     t_warm = time.perf_counter() - t0
+    loop = KRRServeLoop(registry)
 
     qkey = jax.random.PRNGKey(2)
     queries = jax.random.normal(qkey, (args.queries, args.d))
-    lat = []
+    batches = [queries[i:i + args.micro_batch]
+               for i in range(0, args.queries, args.micro_batch)]
+    swap_at = len(batches) // 2 if args.update_batch else None
+    rollback_at = (3 * len(batches)) // 4 if args.rollback else None
+    t_swap = t_rollback = None
+    info = None
     t0 = time.perf_counter()
-    for i in range(0, args.queries, args.micro_batch):
-        t1 = time.perf_counter()
-        jax.block_until_ready(engine(queries[i:i + args.micro_batch]))
-        lat.append(time.perf_counter() - t1)
+    for i, batch in enumerate(batches):
+        if swap_at is not None and i == swap_at:
+            # online update + hot swap, mid-stream: the live version keeps
+            # serving while the new one builds and warms; the swap itself
+            # is one atomic reference store
+            ukey = jax.random.PRNGKey(5)
+            xu = jax.random.normal(ukey, (args.update_batch, args.d))
+            yu = jnp.sin(xu[:, 0]) + 0.25 * jnp.cos(xu[:, 1] * 2.0)
+            t1 = time.perf_counter()
+            _, info = registry.update_and_publish(xu, yu, tag="update",
+                                                  warmup=True)
+            t_swap = time.perf_counter() - t1
+        if rollback_at is not None and i == rollback_at:
+            t1 = time.perf_counter()
+            registry.rollback(1)
+            t_rollback = time.perf_counter() - t1
+        loop.serve(batch)
     total = time.perf_counter() - t0
-    lat.sort()
+    lat = sorted(r.latency_s for r in loop.responses)
     p50 = lat[len(lat) // 2]
     p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))]
     print(f"krr n={args.n} rank={args.rank} d={args.d}: "
-          f"fit {t_fit:.2f} s, warmup {t_warm:.2f} s "
-          f"(buckets {sorted(engine.stats['bucket_hits'])})")
+          f"fit {t_fit:.2f} s, publish+warmup {t_warm:.2f} s "
+          f"(versions served {loop.versions_served})")
     print(f"served {args.queries} queries in micro-batches of "
           f"{args.micro_batch}: {args.queries / total:,.0f} queries/s, "
           f"latency p50 {p50*1e3:.2f} ms  p99 {p99*1e3:.2f} ms")
+    if t_swap is not None:
+        print(f"online update of {args.update_batch} points mid-stream: "
+              f"build+warm+swap {t_swap*1e3:.1f} ms "
+              f"(insert k={info.record.k}/leaf, resid {info.residual:.2e}, "
+              f"rebuild={info.needs_rebuild})")
+    if t_rollback is not None:
+        print(f"rollback to v1 mid-stream: {t_rollback*1e3:.2f} ms "
+              f"(stored engine reused — bitwise-identical serving)")
 
 
 def main():
@@ -120,6 +151,12 @@ def main():
     ap.add_argument("--d", type=int, default=8)
     ap.add_argument("--queries", type=int, default=4096)
     ap.add_argument("--micro-batch", type=int, default=256)
+    ap.add_argument("--update-batch", type=int, default=0,
+                    help="absorb this many new points online mid-stream and "
+                    "hot-swap the updated model (0 = off)")
+    ap.add_argument("--rollback", action="store_true",
+                    help="roll back to the initial version for the stream "
+                    "tail (demonstrates the stored-version swap)")
     ap.add_argument("--solve-backend", choices=["auto", "xla", "pallas"],
                     default="auto", help="SolveConfig backend shared by the "
                     "build engine, solve, and prediction stages")

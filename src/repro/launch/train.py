@@ -14,6 +14,14 @@ Algorithm-2 build engine, selecting the stage backends with
   PYTHONPATH=src python -m repro.launch.train --task krr --n 65536 \
       --rank 256 --solve-backend auto --stream
 
+``--task krr --update N``: after the fit, absorb N new points ONLINE —
+frozen-tree routing, bordered leaf-factor refresh, warm re-solve
+(repro.core.update / krr.fit_incremental) — and report inserts/s against
+the full-rebuild rate.
+
+  PYTHONPATH=src python -m repro.launch.train --task krr --n 16384 \
+      --rank 64 --update 256
+
 ``--task krr --solver exact-cg|eigenpro``: EXACT-kernel KRR through the
 matvec-free iterative subsystem (repro.solvers) — chunked kernel_matvec
 operator, HCK-preconditioned CG (or the EigenPro truncated-spectrum
@@ -198,6 +206,24 @@ def run_krr(args):
           f"backend={args.solve_backend} ({mode}): fit {t_fit:.2f} s "
           f"({args.n / t_fit:,.0f} points/s), train rel-err {float(err):.4f}")
 
+    if args.update:
+        # online growth: absorb --update new points into the fitted
+        # hierarchy (frozen tree, bordered leaf refresh, warm re-solve)
+        # instead of rebuilding — DESIGN.md §10
+        ukey = jax.random.PRNGKey(11)
+        xu = jax.random.normal(ukey, (args.update, args.d))
+        yu = jnp.sin(xu[:, 0]) + 0.25 * jnp.cos(2.0 * xu[:, 1])
+        t0 = time.perf_counter()
+        model2, info = model.update(xu, yu, key=jax.random.PRNGKey(12))
+        jax.block_until_ready(model2.alpha)
+        t_upd = time.perf_counter() - t0
+        err2 = krr.relative_error(model2.predict(x[:m]), y[:m])
+        print(f"krr-update +{args.update} points: {t_upd:.2f} s "
+              f"({args.update / t_upd:,.0f} inserts/s vs full fit "
+              f"{args.n / t_fit:,.0f} points/s), k={info.record.k}/leaf, "
+              f"resid {info.residual:.2e}, rebuild={info.needs_rebuild}, "
+              f"train rel-err {float(err2):.4f}")
+
 
 def run_krr_grid(args):
     """σ×λ grid search through the sweep engine (SweepPlan + fit_path)."""
@@ -312,6 +338,11 @@ def main():
                     "--xla_force_host_platform_device_count=P first)")
     ap.add_argument("--stream", action="store_true",
                     help="ingest through the chunked host-resident pipeline")
+    ap.add_argument("--update", type=int, default=0,
+                    help="after the krr fit, absorb this many new points "
+                    "online (frozen-tree insert + warm re-solve, "
+                    "krr.fit_incremental) and report inserts/s vs the "
+                    "full-rebuild rate (0 = off)")
     ap.add_argument("--leaf-batch", type=int, default=64,
                     help="leaves staged per device launch when streaming")
     ap.add_argument("--grid", action="store_true",

@@ -14,10 +14,20 @@ min_bucket) + 1`` programs are ever compiled per feature dim, and exposes:
 The engine is the single prediction frontend: ``HCKRegressor.predict``,
 the GP posterior mean, the KPCA out-of-sample transform and
 ``launch/serve.py --task krr`` all route through it.
+
+:class:`ModelRegistry` stacks a versioned hot-swap layer on top: each
+published model gets an immutable (model, engine, version) entry, serving
+reads ONE atomic snapshot reference per request, and ``publish`` /
+``rollback`` re-point that reference — so an online update
+(``krr.fit_incremental``) can be built, warmed and swapped in under a
+live request stream with zero downtime, and a bad version can be rolled
+back to the bitwise-identical previous entry.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -243,6 +253,19 @@ class MeshPredictEngine:
         self._padded = 0
         self._bucket_hits: dict[int, int] = {}
 
+    def warmup(self) -> list[int]:
+        """Compile the single-device bucket path (parity with
+        :meth:`PredictEngine.warmup`): touches every bucket size once."""
+        d = self.factors.x_sorted.shape[1]
+        buckets, b = [], self.min_bucket
+        while b <= self.max_bucket:
+            buckets.append(b)
+            b <<= 1
+        dummy = jnp.zeros((1, d), self.factors.x_sorted.dtype)
+        for b in buckets:
+            jax.block_until_ready(self.apply(jnp.broadcast_to(dummy, (b, d))))
+        return buckets
+
     def apply(self, queries: Array) -> Array:
         """(q, d) -> (q, k), each query served by its leaf's owner."""
         from jax.sharding import NamedSharding
@@ -300,4 +323,172 @@ class MeshPredictEngine:
             "queries": self._queries,
             "padded_queries": self._padded,
             "bucket_hits": dict(sorted(self._bucket_hits.items())),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelVersion:
+    """One immutable registry entry: a model, its engine, its number.
+
+    Entries are never mutated after publish — rolling back to a stored
+    version re-points serving at the SAME engine object over the SAME
+    factor arrays, so its predictions are bitwise identical to what that
+    version served before the swap.
+    """
+
+    version: int
+    model: object               # the fitted model (HCKRegressor-like)
+    engine: object              # PredictEngine | MeshPredictEngine
+    tag: str = ""
+    published_at: float = 0.0
+
+
+class ModelRegistry:
+    """Versioned hot-swap serving over the bucketed prediction engines.
+
+    The swap protocol (DESIGN.md §10): every request reads the live
+    :class:`ModelVersion` snapshot through ONE reference load at call
+    entry and serves the whole batch from it, and :meth:`publish` /
+    :meth:`rollback` replace that reference with ONE store — a single
+    attribute assignment is atomic under the interpreter, so a request
+    stream concurrent with a swap sees either the old version or the new
+    one for any given request, never a mix, and never blocks (the build
+    and optional warmup of the incoming engine happen entirely OFF the
+    serving path, before the store).  The lock only serializes writers
+    (publish / rollback / retire), not readers.
+
+    ``mesh`` builds a :class:`MeshPredictEngine` per version instead, so
+    distributed serving swaps with the same protocol.
+    """
+
+    def __init__(self, model=None, *, tag: str = "", mesh=None,
+                 axis: str = "dev", warmup: bool = False, **engine_kwargs):
+        self._lock = threading.Lock()
+        self._versions: dict[int, ModelVersion] = {}
+        self._live: ModelVersion | None = None
+        self._next = 1
+        self._mesh = mesh
+        self._axis = axis
+        self._engine_kwargs = dict(engine_kwargs)
+        self._swaps = 0
+        if model is not None:
+            self.publish(model, tag=tag, warmup=warmup)
+
+    # -- writers ----------------------------------------------------------
+    def publish(self, model, *, tag: str = "", warmup: bool = False) -> int:
+        """Register ``model`` and atomically make it the live version.
+
+        The engine is built (and optionally warmed: every shape bucket
+        compiled) BEFORE the swap, so in-flight and subsequent requests
+        never pay a cold compile; the store itself is one reference
+        assignment.  Returns the new version number.
+        """
+        engine = PredictEngine(model.factors, model.plan, model.kernel,
+                               config=model.solve_config,
+                               **self._engine_kwargs)
+        if self._mesh is not None:
+            engine = engine.on_mesh(self._mesh, axis=self._axis)
+        if warmup:
+            engine.warmup()
+        with self._lock:
+            v = self._next
+            self._next += 1
+            entry = ModelVersion(v, model, engine, tag=tag,
+                                 published_at=time.monotonic())
+            self._versions[v] = entry
+            self._live = entry          # atomic reference store: the swap
+            self._swaps += 1
+        return v
+
+    def rollback(self, version: int | None = None) -> int:
+        """Re-point serving at a stored version (default: the previous one).
+
+        The entry is reused as stored — same engine, same arrays — so the
+        rolled-back predictions are bitwise identical to what that
+        version served before it was swapped out.
+        """
+        with self._lock:
+            if not self._versions:
+                raise ValueError("registry has no versions")
+            if version is None:
+                live = self._live.version if self._live else None
+                older = [v for v in self._versions if v != live]
+                if not older:
+                    raise ValueError("no previous version to roll back to")
+                version = max(older)
+            if version not in self._versions:
+                raise KeyError(f"version {version} not in registry "
+                               f"(have {sorted(self._versions)})")
+            self._live = self._versions[version]
+            self._swaps += 1
+        return version
+
+    def retire(self, version: int) -> None:
+        """Drop a stored version (frees its factors; the live version
+        cannot be retired)."""
+        with self._lock:
+            if self._live is not None and self._live.version == version:
+                raise ValueError(f"version {version} is live; publish or "
+                                 "rollback first")
+            self._versions.pop(version)
+
+    def update_and_publish(self, x_new, y_new, *, tag: str = "",
+                           warmup: bool = False, **update_kwargs):
+        """Online insert + hot swap: ``live.model.update`` then publish.
+
+        The update runs against the live model's immutable state while
+        that model keeps serving; the new version swaps in only when its
+        engine is ready.  Returns ``(version, info)`` — ``info`` is the
+        :class:`repro.core.krr.UpdateInfo`, whose ``needs_rebuild`` flag
+        is the caller's cue to schedule a full background refit and
+        publish THAT when done.
+        """
+        entry = self._live
+        if entry is None:
+            raise ValueError("registry has no live model to update")
+        model_new, info = entry.model.update(x_new, y_new, **update_kwargs)
+        version = self.publish(model_new, tag=tag, warmup=warmup)
+        return version, info
+
+    # -- readers (lock-free) ----------------------------------------------
+    def predict(self, queries: Array) -> tuple[Array, int]:
+        """Serve one batch from the live version: ``(z, version)``.
+
+        One snapshot read at entry — a publish/rollback racing with this
+        call flips requests atomically from one version to the next.
+        """
+        entry = self._live
+        if entry is None:
+            raise ValueError("registry has no live model")
+        return entry.engine(queries), entry.version
+
+    __call__ = predict
+
+    @property
+    def live_version(self) -> int | None:
+        """Version number currently serving (None before first publish)."""
+        entry = self._live
+        return entry.version if entry is not None else None
+
+    @property
+    def live(self) -> ModelVersion | None:
+        """The live snapshot entry itself."""
+        return self._live
+
+    def versions(self) -> list[int]:
+        """Stored version numbers, ascending."""
+        with self._lock:
+            return sorted(self._versions)
+
+    def get(self, version: int) -> ModelVersion:
+        """Stored entry by number (KeyError if retired/unknown)."""
+        return self._versions[version]
+
+    @property
+    def stats(self) -> dict:
+        """Registry counters (live version, stored versions, swap count)."""
+        return {
+            "live_version": self.live_version,
+            "versions": self.versions(),
+            "swaps": self._swaps,
         }

@@ -3,10 +3,18 @@
 Greedy/temperature sampling over the decode_step of models/transformer.py.
 The HCK long-context path refreshes its Algorithm-3 summaries every
 ``refresh_every`` tokens (amortized O(r)/token — DESIGN.md §3).
+
+:class:`KRRServeLoop` is the kernel-model counterpart: it drains a query
+stream through a :class:`repro.serving.predict_service.ModelRegistry`,
+stamping every response with the model version that served it — the
+request-side half of the zero-downtime hot-swap protocol (a publish or
+rollback concurrent with the loop flips responses atomically from one
+version to the next, never mixing versions within a response).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +24,54 @@ from repro.models import transformer as tf
 from repro.models.model_zoo import make_decode_step, make_prefill_step
 
 Array = jax.Array
+
+
+@dataclasses.dataclass
+class ServedBatch:
+    """One response of :class:`KRRServeLoop`: outputs + provenance."""
+
+    z: Array                   # (q, k) predictions
+    version: int               # registry version that served this batch
+    latency_s: float
+
+
+@dataclasses.dataclass
+class KRRServeLoop:
+    """Drain query micro-batches through a versioned model registry.
+
+    Each call to :meth:`serve` reads ONE live-version snapshot from the
+    registry (see ``ModelRegistry.predict``) and serves the whole batch
+    from it, so a hot swap happening between (or during) calls can never
+    produce a mixed-version response.  ``responses`` keeps the
+    (version, latency) trail — the serving-side evidence the hot-swap
+    tests and the update bench assert on.
+    """
+
+    registry: object           # repro.serving.predict_service.ModelRegistry
+    responses: list = dataclasses.field(default_factory=list)
+
+    def serve(self, queries: Array) -> ServedBatch:
+        """Serve one micro-batch; record and return the stamped response."""
+        t0 = time.perf_counter()
+        z, version = self.registry.predict(queries)
+        jax.block_until_ready(z)
+        out = ServedBatch(z, version, time.perf_counter() - t0)
+        self.responses.append(out)
+        return out
+
+    def run(self, queries: Array, micro_batch: int) -> list:
+        """Serve ``queries`` in ``micro_batch`` slices; return responses."""
+        return [self.serve(queries[i:i + micro_batch])
+                for i in range(0, queries.shape[0], micro_batch)]
+
+    @property
+    def versions_served(self) -> list[int]:
+        """Distinct versions observed, in first-served order."""
+        seen: list[int] = []
+        for r in self.responses:
+            if r.version not in seen:
+                seen.append(r.version)
+        return seen
 
 
 @dataclasses.dataclass

@@ -9,6 +9,21 @@ from repro.core.kernels_fn import BaseKernel
 from repro.core.hck import build_hck
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Release compiled executables at module boundaries.
+
+    The full suite compiles several hundred distinct programs in one
+    process; past ~300 the XLA CPU client's accumulated executables can
+    segfault LLVM codegen on the next large compile.  Dropping the
+    compilation/tracing caches per module keeps the live-executable
+    count bounded at the cost of a few re-traces for cross-module
+    shapes.
+    """
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def f64():
     """Enable float64 for oracle-grade comparisons (session-wide)."""

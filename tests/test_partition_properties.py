@@ -8,8 +8,8 @@ import pytest
 
 from repro.core.kernels_fn import BaseKernel
 from repro.core.partition import (PartitionTree, auto_levels, build_partition,
-                                  build_partition_sequential, pad_points,
-                                  rescale_tree, route)
+                                  build_partition_sequential, group_by_leaf,
+                                  pad_points, rescale_tree, route)
 
 SETTINGS = dict(max_examples=8, deadline=None)
 
@@ -105,6 +105,64 @@ def test_route_far_outside_training_hull():
     assert leaves[1] < (1 << levels) // 2
     # routing is a pure function of the recorded hyperplanes
     np.testing.assert_array_equal(leaves, np.asarray(route(tree, far)))
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       levels=st.integers(1, 3),
+       q=st.integers(1, 40))
+@settings(**SETTINGS)
+def test_group_by_leaf_segments(seed, levels, q):
+    """(order, counts, starts) invariants for any routed batch: order is a
+    stable permutation, counts is the leaf histogram, starts the exclusive
+    prefix sum — leaves with zero arrivals included."""
+    p = 1 << levels
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32 * p, 4))
+    _, tree = build_partition(x, levels, jax.random.PRNGKey(seed + 1))
+    qs = jax.random.normal(jax.random.PRNGKey(seed + 2), (q, 4))
+    leaf = route(tree, qs)
+    order, counts, starts = group_by_leaf(leaf, p)
+    order_np, counts_np = np.asarray(order), np.asarray(counts)
+    assert sorted(order_np.tolist()) == list(range(q))
+    np.testing.assert_array_equal(counts_np,
+                                  np.bincount(np.asarray(leaf), minlength=p))
+    np.testing.assert_array_equal(np.asarray(starts),
+                                  np.cumsum(counts_np) - counts_np)
+    # sorted-by-leaf AND stable within a leaf (argsort tie order)
+    leaf_sorted = np.asarray(leaf)[order_np]
+    assert (np.diff(leaf_sorted) >= 0).all()
+    for lf in range(p):
+        seg = order_np[leaf_sorted == lf]
+        assert (np.diff(seg) > 0).all()
+
+
+def test_group_by_leaf_out_of_hull_batch():
+    """Regression for the online-update edge case: a batch routed entirely
+    OUTSIDE the training hull lands only on boundary leaves (ties on a
+    threshold go LEFT — t > thr), leaving every interior leaf empty; the
+    segmentation must still be a valid permutation with zero counts and
+    well-defined (duplicate) starts for the empty leaves.  An empty batch
+    degenerates to all-zero counts/starts."""
+    levels, d, p = 3, 4, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (32 * p, d))
+    _, tree = build_partition(x, levels, jax.random.PRNGKey(1))
+    far = jnp.concatenate([jnp.full((5, d), 1e6), jnp.full((5, d), -1e6)])
+    leaf = route(tree, far)
+    order, counts, starts = group_by_leaf(leaf, p)
+    counts_np = np.asarray(counts)
+    assert int(counts_np.sum()) == 10
+    # identical far points share a leaf: exactly two leaves carry all the
+    # mass (which two depends on the drawn hyperplane signs), the other
+    # six leaves are EMPTY
+    assert sorted(counts_np.tolist()) == [0] * 6 + [5, 5]
+    assert sorted(np.asarray(order).tolist()) == list(range(10))
+    np.testing.assert_array_equal(np.asarray(starts),
+                                  np.cumsum(counts_np) - counts_np)
+    # empty batch: all-zero histogram, empty permutation
+    order0, counts0, starts0 = group_by_leaf(
+        jnp.zeros((0,), jnp.int32), p)
+    assert order0.shape == (0,)
+    assert (np.asarray(counts0) == 0).all()
+    assert (np.asarray(starts0) == 0).all()
 
 
 @given(seed=st.integers(0, 2**31 - 1),

@@ -1,8 +1,15 @@
 """Serving-path consistency: prefill + step-by-step decode must reproduce
 the full-forward logits (same params, exact KV caches) — the strongest
 end-to-end check of the cache machinery (rope offsets, cache updates,
-length masking, SSM state handoff)."""
+length masking, SSM state handoff).
+
+The KRR half (bottom) pins the versioned hot-swap registry: a publish
+concurrent with a request stream flips responses atomically from one
+version to the next (never a mixed response), and a rollback re-points
+at the STORED engine, so its predictions are bitwise identical."""
 import dataclasses
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -135,3 +142,165 @@ def test_serve_session_caches_compiled_decode_step():
     assert fn is not None
     sess.decode(nxt, steps=1)
     assert sess._decode_fn is fn
+
+
+# ---------------------------------------------------------------------------
+# KRR model registry: versioned hot swap / rollback / mesh parity
+# ---------------------------------------------------------------------------
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _tgt(x):
+    return jnp.sin(x[:, 0]) + 0.25 * jnp.cos(2.0 * x[:, 1])
+
+
+@pytest.fixture(scope="module")
+def krr_model(f64):
+    from repro.core import krr
+    from repro.core.kernels_fn import BaseKernel
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 5),
+                          dtype=jnp.float64)
+    model = krr.fit(x, _tgt(x), kernel=BaseKernel("gaussian", sigma=2.0,
+                                                  jitter=1e-8),
+                    lam=1e-2, rank=16, leaf_size=32, levels=3,
+                    key=jax.random.PRNGKey(1))
+    return model
+
+
+def _update_batch(seed=5, q=16, d=5):
+    x_new = jax.random.normal(jax.random.PRNGKey(seed), (q, d),
+                              dtype=jnp.float64)
+    return x_new, _tgt(x_new)
+
+
+def test_registry_hot_swap_under_load(krr_model):
+    """A serving thread drains micro-batches while the main thread runs
+    an online update + publish.  Every response must come from exactly
+    ONE version (recomputing its batch on the stamped version's stored
+    engine is bitwise equal) and versions flip monotonically 1 -> 2 —
+    the atomic-snapshot contract of ModelRegistry.predict."""
+    from repro.serving.predict_service import ModelRegistry
+    from repro.serving.serve_loop import KRRServeLoop
+
+    registry = ModelRegistry(krr_model, tag="fit", warmup=True)
+    loop = KRRServeLoop(registry)
+    queries = jax.random.normal(jax.random.PRNGKey(2), (512, 5),
+                                dtype=jnp.float64)
+    batches = [queries[i:i + 16] for i in range(0, 512, 16)]
+    served: list = []       # (batch_index, ServedBatch)
+    stop = threading.Event()
+
+    def worker():
+        i = 0
+        while not stop.is_set():
+            served.append((i % len(batches),
+                           loop.serve(batches[i % len(batches)])))
+            i += 1
+
+    t = threading.Thread(target=worker)
+    t.start()
+    try:
+        deadline = time.monotonic() + 60
+        while len(served) < 5 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert len(served) >= 5, "serving thread made no progress"
+        xu, yu = _update_batch()
+        v2, info = registry.update_and_publish(xu, yu, tag="update",
+                                               warmup=True)
+        assert v2 == 2 and info.record.k > 0
+        while (not any(r.version == v2 for _, r in served)
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+    finally:
+        stop.set()
+        t.join(timeout=60)
+    assert not t.is_alive()
+
+    versions = [r.version for _, r in served]
+    assert set(versions) <= {1, 2}
+    assert versions[0] == 1 and versions[-1] == 2
+    # monotone flip: once v2 serves, v1 never serves again
+    assert versions == sorted(versions)
+    assert loop.versions_served == [1, 2]
+    # no mixed responses: each response equals a full recompute on the
+    # stored engine of the version it was stamped with, BITWISE
+    checked = set()
+    for bi, r in served:
+        if (bi, r.version) in checked:
+            continue
+        checked.add((bi, r.version))
+        z_ref = registry.get(r.version).engine(batches[bi])
+        np.testing.assert_array_equal(np.asarray(r.z), np.asarray(z_ref))
+    # both versions actually got the recompute treatment
+    assert {v for _, v in checked} == {1, 2}
+
+
+def test_registry_rollback_is_bitwise_identical(krr_model):
+    """Rolling back re-points at the STORED entry — same engine object,
+    same factor arrays — so post-rollback predictions are bitwise equal
+    to what v1 served before the swap."""
+    from repro.serving.predict_service import ModelRegistry
+
+    registry = ModelRegistry(krr_model, tag="fit")
+    queries = jax.random.normal(jax.random.PRNGKey(3), (64, 5),
+                                dtype=jnp.float64)
+    z1, v1 = registry.predict(queries)
+    assert v1 == 1
+
+    xu, yu = _update_batch(seed=7)
+    v2, _ = registry.update_and_publish(xu, yu, tag="update")
+    z2, v = registry.predict(queries)
+    assert v == v2 == 2
+    assert not np.array_equal(np.asarray(z1), np.asarray(z2))
+
+    back = registry.rollback()            # default: previous version
+    assert back == 1 and registry.live_version == 1
+    z3, v = registry.predict(queries)
+    assert v == 1
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z3))
+    assert registry.stats["swaps"] == 3
+    # the live version cannot be retired; a stored one can
+    with pytest.raises(ValueError, match="live"):
+        registry.retire(1)
+    registry.retire(2)
+    assert registry.versions() == [1]
+
+
+@needs_mesh
+def test_mesh_registry_swap_parity(krr_model):
+    """The distributed registry (MeshPredictEngine per version) serves the
+    same values as the single-host one through a hot swap — the 8-device
+    lane's swap-parity gate."""
+    from repro.serving.predict_service import ModelRegistry
+
+    mesh = jax.make_mesh((8,), ("dev",))
+    host = ModelRegistry(krr_model, tag="fit")
+    dist = ModelRegistry(krr_model, tag="fit", mesh=mesh, warmup=False)
+    queries = jax.random.normal(jax.random.PRNGKey(4), (96, 5),
+                                dtype=jnp.float64)
+    z_h, _ = host.predict(queries)
+    z_d, v = dist.predict(queries)
+    assert v == 1
+    np.testing.assert_allclose(np.asarray(z_d), np.asarray(z_h),
+                               rtol=1e-6, atol=1e-6)
+
+    xu, yu = _update_batch(seed=11)
+    host.update_and_publish(xu, yu, key=jax.random.PRNGKey(12))
+    dist.update_and_publish(xu, yu, key=jax.random.PRNGKey(12))
+    z_h, _ = host.predict(queries)
+    z_d, v = dist.predict(queries)
+    assert v == 2
+    np.testing.assert_allclose(np.asarray(z_d), np.asarray(z_h),
+                               rtol=1e-6, atol=1e-6)
+    # rollback parity too: both registries re-point at their stored v1
+    host.rollback(1)
+    dist.rollback(1)
+    z_h, _ = host.predict(queries)
+    z_d, v = dist.predict(queries)
+    assert v == 1
+    np.testing.assert_allclose(np.asarray(z_d), np.asarray(z_h),
+                               rtol=1e-6, atol=1e-6)
