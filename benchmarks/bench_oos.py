@@ -10,6 +10,11 @@ runs chart the engine against the legacy per-level walk at production
 shapes (default n=65536, r=256, q=4096) and run the float64 oracle check
 on a query subsample.
 
+The ``recovery overhead`` column (every run; gated in ``--smoke``) times
+the same full-batch engine apply with the DESIGN.md §11 health probes ON
+(``SolveConfig.checks=True``) vs OFF — the contract that checks-off hot
+paths pay nothing and checks-on is cheap enough to leave on in serving.
+
 Usage:
   python benchmarks/bench_oos.py                       # default sweep
   python benchmarks/bench_oos.py --smoke               # CI gate (tiny, f64)
@@ -120,6 +125,12 @@ def main(argv=None) -> int:
                     help="tiny float64 problem + dense-oracle tolerance gate")
     ap.add_argument("--tol", type=float, default=1e-6,
                     help="max abs error vs oos_vector_reference (float64)")
+    ap.add_argument("--recovery-budget", type=float, default=0.03,
+                    help="smoke gate on the checks-on vs checks-off "
+                    "predict overhead (relative)")
+    ap.add_argument("--recovery-slack-s", type=float, default=5e-3,
+                    help="absolute slack on the recovery-overhead gate "
+                    "(probe dispatch floor on ms-scale smoke problems)")
     ap.add_argument("--out", default="BENCH_oos.json")
     args = ap.parse_args(argv)
 
@@ -199,6 +210,46 @@ def main(argv=None) -> int:
     report["roofline"] = common.roofline_block(stage_times)
 
     ok = True
+
+    # -- recovery overhead: the DESIGN.md §11 health probes on the serving
+    # hot path — the SAME full-batch PredictEngine.apply timed with checks
+    # ON (input validation + prediction probe) and OFF (gated probes
+    # return before touching any array); gated in --smoke at ≤3% of the
+    # checks-off time plus a small absolute slack
+    b0 = args.backends.split(",")[0].strip()
+    maxb = bucket_size(args.q, 64, 1 << 20)
+    eng_on = PredictEngine(f, plan, ker,
+                           config=SolveConfig(backend=b0, checks=True),
+                           min_bucket=64, max_bucket=maxb)
+    eng_off = PredictEngine(f, plan, ker,
+                            config=SolveConfig(backend=b0, checks=False),
+                            min_bucket=64, max_bucket=maxb)
+    t_on, _ = _timeit(eng_on.apply, queries, repeats=args.repeats)
+    t_off, _ = _timeit(eng_off.apply, queries, repeats=args.repeats)
+    overhead = t_on / t_off - 1.0
+    report["recovery_overhead"] = {
+        "backend": b0,
+        "apply_checks_on_s": t_on,
+        "apply_checks_off_s": t_off,
+        "overhead": overhead,
+    }
+    print(f"[{b0:>6}] recovery overhead: checks-on {t_on*1e3:9.2f} ms vs "
+          f"checks-off {t_off*1e3:9.2f} ms -> {overhead*100:+.1f}%")
+    if args.smoke:
+        recov_ok = (t_on - t_off) <= max(args.recovery_budget * t_off,
+                                         args.recovery_slack_s)
+        ok = ok and recov_ok
+        report["checks"]["recovery_overhead"] = {
+            "overhead": overhead,
+            "budget": args.recovery_budget,
+            "slack_s": args.recovery_slack_s,
+            "pass": recov_ok,
+        }
+        print(f"[{b0:>6}] smoke: recovery overhead {overhead*100:+.1f}% "
+              f"(budget {args.recovery_budget*100:.0f}% + "
+              f"{args.recovery_slack_s*1e3:g} ms slack) "
+              f"{'PASS' if recov_ok else 'FAIL'}")
+
     if args.oracle_queries > 0:
         # oracle gate, always float64: engine prediction vs the explicit
         # k_hck(X, x) row vectors of Eq. 13-16

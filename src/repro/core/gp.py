@@ -24,6 +24,7 @@ from repro.core.hck import (HCKFactors, build_hck, build_sweep_plan,
                             sweep_factors)
 from repro.core.kernels_fn import KERNEL_METRIC, BaseKernel
 from repro.kernels.registry import SolveConfig
+from repro.runtime import health
 
 Array = jax.Array
 
@@ -94,9 +95,15 @@ def fit_gp(
     """
     factors = build_hck(x, levels=levels, rank=rank, key=key, kernel=kernel,
                         config=solve_config)
+    health.probe_factors(factors, solve_config, op="build")
     y_sorted = y[factors.tree.perm][:, None]
     inv = hmatrix.invert(factors, ridge=noise, config=solve_config)
+    if inv.linv is not None:
+        health.check_finite("leaf_factor", inv.linv, config=solve_config,
+                            leaf_axis=0, detail="inverse Cholesky (gp)")
     alpha = hmatrix.apply_inverse(inv, y_sorted, solve_config)
+    health.check_finite("solve", alpha, config=solve_config,
+                        detail="dual coefficients (gp)")
     plan = oos.prepare(factors, alpha, solve_config)
     return HCKGaussianProcess(kernel, factors, inv, alpha, plan, noise,
                               solve_config)

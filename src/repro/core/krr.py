@@ -19,6 +19,7 @@ from repro.core.hck import HCKFactors, build_hck, build_hck_streaming
 from repro.core.kernels_fn import BaseKernel
 from repro.core.partition import auto_levels, auto_levels_ceil, pad_points
 from repro.kernels.registry import SolveConfig
+from repro.runtime import health
 
 Array = jax.Array
 
@@ -162,14 +163,18 @@ def fit(
         x, levels=levels, rank=rank, key=kbuild, kernel=kernel,
         method=method, shared_landmarks=shared_landmarks, config=solve_config,
     )
+    health.probe_factors(factors, solve_config, op="build")
     y_sorted = targets[factors.tree.perm]
     # solve via the leaf-aware inverse and CACHE it on the model: the pair
     # is what fit_incremental's bordered extension reuses, so the FIRST
     # online update is as cheap as the rest (inv equals hmatrix.invert's,
     # so alpha is the same solve as before)
     inv, lo = hmatrix.invert_with_leaf(factors, lam, solve_config)
+    health.probe_leaf_factor(lo, solve_config)
     alpha = hmatrix.solve_with_inverse(factors, inv, y_sorted, ridge=lam,
                                        config=solve_config)
+    health.check_finite("solve", alpha, config=solve_config,
+                        detail="dual coefficients (fit)")
     plan = oos.prepare(factors, alpha, solve_config)
     return HCKRegressor(kernel, factors, plan, alpha, classes,
                         squeeze=squeeze, solve_config=solve_config,
@@ -220,10 +225,12 @@ def fit_streaming(
         source, levels=levels, rank=rank, key=kbuild, kernel=kernel,
         config=solve_config, leaf_batch=leaf_batch, chunk_rows=chunk_rows,
     )
+    health.probe_factors(factors, solve_config, op="build")
     y_sorted = targets[factors.tree.perm]
     # cache the leaf-aware inverse exactly as fit() does, so streamed-in
     # models take online updates without re-running Algorithm 2 first
     inv, lo = hmatrix.invert_with_leaf(factors, lam, solve_config)
+    health.probe_leaf_factor(lo, solve_config)
     alpha = hmatrix.solve_with_inverse(factors, inv, y_sorted, ridge=lam,
                                        config=solve_config)
     plan = oos.prepare(factors, alpha, solve_config)
@@ -283,6 +290,14 @@ def fit_incremental(
       from-scratch :func:`repro.core.update.refit_frozen` rebuild to
       float64 round-off.
 
+    ``refresh="exact"`` (the recovery path): the cached pair is NOT
+      reused at all — a full from-scratch Algorithm-2 inversion of the
+      extended hierarchy (:func:`repro.core.hmatrix.invert_with_leaf`),
+      O(n0^3) per leaf.  Numerically independent of any carried state,
+      which is why the :func:`repro.runtime.recover.update_guarded`
+      ladder terminates here when a poisoned cached inverse breaks the
+      cheaper modes.
+
     ``refresh="stale"`` (the cheap path): NO re-factorization at all —
       CG on the extended operator, warm-started from the previous
       ``alpha`` (lifted with zeros on the appended rows) and
@@ -337,6 +352,7 @@ def fit_incremental(
     if rec.k == 0:  # empty batch: exact no-op
         info = UpdateInfo(rec, refresh, 0, 0.0, True)
         return model, info
+    health.probe_factors(f_new, cfg, op="update.insert")
 
     n0_old = f.leaf_size
     inv_base, lo_base = model.inverse, model.leaf_lo
@@ -348,6 +364,15 @@ def fit_incremental(
         inv_new, lo_new = hmatrix.invert_extend(
             f_new, lo_base, inv_base.linv, n0_base=n0_old, ridge=lam,
             config=cfg)
+        health.probe_leaf_factor(lo_new, cfg, stage="leaf_update")
+        alpha_new = hmatrix.solve_with_inverse(
+            f_new, inv_new, y_sorted_new, ridge=lam, config=cfg)
+        iters = 0
+    elif refresh == "exact":
+        # from-scratch re-factorization: no reuse of the cached pair (the
+        # recovery ladder's terminal rung; also the honest cold baseline)
+        inv_new, lo_new = hmatrix.invert_with_leaf(f_new, lam, cfg)
+        health.probe_leaf_factor(lo_new, cfg)
         alpha_new = hmatrix.solve_with_inverse(
             f_new, inv_new, y_sorted_new, ridge=lam, config=cfg)
         iters = 0
@@ -405,6 +430,7 @@ def fit_incremental(
 
         res = pcg(amv, y_sorted_new, ridge=lam, precond=precond,
                   x0=x0, tol=tol, maxiter=maxiter)
+        health.probe_cg(res, tol=tol, config=cfg, context="refresh=stale")
         alpha_new, iters = res.x, int(res.iterations)
         if measure_cold:
             # cold = no carried state at all: neither the stale inverse
@@ -414,9 +440,11 @@ def fit_incremental(
             cold_iters = int(res_cold.iterations)
         inv_new, lo_new = inv_base, lo_base  # kept stale for the next lift
     else:
-        raise ValueError(f"unknown refresh {refresh!r}; use 'inverse' or "
-                         "'stale'")
+        raise ValueError(f"unknown refresh {refresh!r}; use 'inverse', "
+                         "'exact' or 'stale'")
 
+    health.check_finite("solve", alpha_new, config=cfg,
+                        detail=f"dual coefficients (refresh={refresh})")
     resid = y_sorted_new - (hmatrix.matvec(f_new, alpha_new, cfg)
                             + lam * alpha_new)
     rel = float(jnp.linalg.norm(resid.reshape(-1))
@@ -432,7 +460,8 @@ def fit_incremental(
         warm_iters=iters if refresh == "stale" else None,
         update_error=rel)
     info = UpdateInfo(rec, refresh, iters, rel,
-                      converged=(rel <= max(tol, 1e-6) or refresh == "inverse"),
+                      converged=(rel <= max(tol, 1e-6)
+                                 or refresh in ("inverse", "exact")),
                       cold_iterations=cold_iters, needs_rebuild=needs_rebuild)
     return model_new, info
 

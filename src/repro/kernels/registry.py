@@ -131,6 +131,17 @@ class SolveConfig:
                     indefinite under a smaller ridge, NaN-ing the
                     Cholesky.  f32 builds invert at any ridge the f64
                     oracle tolerates.
+    checks          runtime health probes (repro.runtime.health): finite/
+                    definiteness checks on factor diagonals, CG residual
+                    traces and served predictions at stage BOUNDARIES
+                    (never inside a jitted body, so compiled programs are
+                    identical either way).  True/False force the probes
+                    on/off; the default None defers to the
+                    ``REPRO_STRICT_FINITE`` env var *at probe time* —
+                    flipping the env needs no new SolveConfig (and no
+                    retrace, since the probes live outside jit).  Off
+                    means the hot path pays literally one predicate per
+                    boundary.
     """
 
     backend: str = "auto"
@@ -139,6 +150,7 @@ class SolveConfig:
     leaf_block: int | None = None
     min_pallas_leaf: int = 8
     precision: str | None = None
+    checks: bool | None = None
 
     def __post_init__(self):
         if self.backend not in ("auto",) + BACKENDS:
@@ -147,6 +159,8 @@ class SolveConfig:
         if self.precision is not None and self.precision not in PRECISIONS:
             raise ValueError(
                 f"precision {self.precision!r} not in {PRECISIONS} (or None)")
+        if self.checks is not None:
+            object.__setattr__(self, "checks", bool(self.checks))
         if self.interpret is None:
             object.__setattr__(self, "interpret", not accelerator_present())
 

@@ -1,0 +1,11 @@
+"""Runtime robustness layer: health probes and recovery ladders.
+
+``repro.runtime.health`` detects numerical failures (non-finite or
+indefinite factors, stalled/diverged CG, poisoned predictions) at stage
+boundaries and raises structured :class:`~repro.runtime.health.
+NumericalFailure` diagnostics; ``repro.runtime.recover`` wraps the
+build / invert / update / solve entry points in detect→recover ladders
+(jitter escalation, precision promotion, per-leaf refit, CG restarts)
+with an audit trail per attempt.  See DESIGN.md §11.
+"""
+from repro.runtime.health import NumericalFailure, checks_enabled  # noqa: F401

@@ -1,0 +1,487 @@
+"""Detect→recover ladders around the numerical entry points (DESIGN.md §11).
+
+Every wrapper here runs the wrapped operation, PROBES its output with the
+:mod:`repro.runtime.health` detectors (forced on — a guarded call always
+validates, whatever ``SolveConfig.checks`` says), and on a
+:class:`~repro.runtime.health.NumericalFailure` climbs a ladder of
+progressively more expensive repairs, recording every attempt in a
+:class:`RecoveryAudit`:
+
+  * :func:`build_guarded` — ``build_hck`` under jitter escalation (×10
+    per rung) then precision promotion (bf16 → f32 → f64).
+  * :func:`repair_factors` — a poisoned/corrupted factor set repaired in
+    place: per-leaf ``refit_frozen`` (leaf stages recomputed from
+    ``x_sorted`` on the frozen hierarchy), then a middle-factor rebuild
+    from the stored landmarks.  Bit-compatible inputs make the repair a
+    parity-exact reconstruction, so a recovered model still passes the
+    f64 oracle gates.
+  * :func:`invert_guarded` — ``invert_with_leaf`` under ridge escalation,
+    then precision-promoted re-instantiation of every factor on the
+    frozen hierarchy at the ORIGINAL ridge (the bf16 ridge-floor repair:
+    the Schur complement inherits the O(eps) error of BOTH the leaf
+    stages and the middle Sigma Cholesky, so all of them are recomputed
+    at f32 — restoring definiteness without inflating the ridge), then a
+    dtype-preserving per-leaf ``refit_frozen``.
+  * :func:`pcg_guarded` — CG with the stall/divergence detector on the
+    residual trace, then re-precondition → cold restart (identity
+    preconditioner, doubled budget — immune to a poisoned M⁻¹) → an
+    injectable exact-solve fallback.
+  * :func:`update_guarded` — ``HCKRegressor.update`` with the requested
+    refresh, then a fresh base inverse (re-precondition), then
+    ``refresh="inverse"`` (exact bordered path), then ``refresh="exact"``
+    (full from-scratch Algorithm-2 re-factorization).
+
+A ladder that runs dry raises :class:`RecoveryExhausted` carrying the
+full audit, so the caller (or a serving log) sees every rung tried and
+why each failed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import health
+from repro.runtime.health import NumericalFailure
+
+Array = jax.Array
+
+#: precision promotion chain (SolveConfig.precision values).
+_PROMOTIONS = {"bf16": ("f32", "f64"), "f32": ("f64",), None: (), "f64": ()}
+
+
+@dataclasses.dataclass
+class Attempt:
+    """One rung of a ladder: what was tried, whether it held, why not."""
+
+    rung: str
+    ok: bool
+    failure: dict[str, Any] | None = None
+    note: str = ""
+
+
+@dataclasses.dataclass
+class RecoveryAudit:
+    """Ordered trail of every attempt one guarded call made."""
+
+    op: str
+    attempts: list[Attempt] = dataclasses.field(default_factory=list)
+
+    @property
+    def recovered(self) -> bool:
+        """True when the op needed (and found) a repair rung."""
+        return (len(self.attempts) > 1 and self.attempts[-1].ok)
+
+    @property
+    def ok(self) -> bool:
+        """True when the final attempt held (including the first)."""
+        return bool(self.attempts) and self.attempts[-1].ok
+
+    @property
+    def rungs(self) -> list[str]:
+        """Rung labels in execution order."""
+        return [a.rung for a in self.attempts]
+
+    def record(self, rung: str, ok: bool, failure=None, note: str = ""):
+        """Append one attempt (``failure`` may be a NumericalFailure)."""
+        fd = failure.to_dict() if isinstance(failure, NumericalFailure) else (
+            {"error": str(failure)} if failure is not None else None)
+        self.attempts.append(Attempt(rung, ok, fd, note))
+
+    def to_dict(self) -> dict[str, Any]:
+        """JSON-serializable form (CI fault-matrix artifacts)."""
+        return {"op": self.op, "recovered": self.recovered,
+                "attempts": [dataclasses.asdict(a) for a in self.attempts]}
+
+
+class RecoveryExhausted(RuntimeError):
+    """Every rung of a ladder failed; ``audit`` holds the full trail."""
+
+    def __init__(self, audit: RecoveryAudit, last: Exception):
+        self.audit = audit
+        self.last = last
+        super().__init__(
+            f"recovery exhausted for {audit.op!r} after rungs "
+            f"{audit.rungs}: {last}")
+
+
+def _cast_float(tree, dtype):
+    """Cast every floating leaf of a pytree (ints/tree records untouched)."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype)
+        if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating)
+        else a, tree)
+
+
+def _promotions(config):
+    """Reachable promotion rungs for ``config.precision`` (f64 needs x64)."""
+    chain = _PROMOTIONS.get(getattr(config, "precision", None), ())
+    if not jax.config.jax_enable_x64:
+        chain = tuple(p for p in chain if p != "f64")
+    return chain
+
+
+def _rebuild_frozen(factors, kernel, config, base: int):
+    """ALL factors recomputed at ``config.precision`` on the frozen
+    hierarchy: middle Sigma/Cholesky/W from the stored landmarks, then
+    the leaf stages via ``refit_frozen``.
+
+    A leaf-only refit is NOT enough for precision promotion: the Schur
+    complement subtracts ``U Uᵀ`` built against the LOW-precision
+    ``Sigma`` Cholesky, whose rounding can over-subtract past ``Adiag``
+    however accurately the leaves are recomputed — the middle factors
+    must be promoted with them.
+    """
+    from repro.core.hck import HCKFactors, _middle_factors, _transfer_ops
+    from repro.core.update import refit_frozen
+
+    f = factors
+    if config.precision == "f64":
+        f = _cast_float(f, jnp.float64)
+    sigma, sigma_cho, sigma_li = _middle_factors(f.landmarks, kernel, config)
+    w = _transfer_ops(f.landmarks, sigma_li, kernel, config)
+    mid = HCKFactors(f.x_sorted, f.tree, f.landmarks, sigma, sigma_cho, w,
+                     f.u, f.adiag)
+    return refit_frozen(mid, kernel, config, jitter_rows=base)
+
+
+# ---------------------------------------------------------------------------
+# build
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GuardedBuild:
+    """:func:`build_guarded` outcome: factors + the knobs that produced
+    them (the kernel may carry an escalated jitter, the config a promoted
+    precision) + the audit trail."""
+
+    factors: Any
+    kernel: Any
+    config: Any
+    audit: RecoveryAudit
+
+
+def build_guarded(x: Array, *, kernel, config=None, jitter_rungs: int = 2,
+                  **build_kwargs) -> GuardedBuild:
+    """``build_hck`` under the jitter→precision ladder.
+
+    Attempts, in order: the build as asked; ``jitter_rungs`` rounds of
+    ×10 jitter escalation (the λ'-splitting diagonal is the cheapest
+    definiteness repair — it perturbs the model the way §4.3 already
+    licenses); precision promotion at the ORIGINAL jitter.  Each built
+    factor set is validated by :func:`repro.runtime.health.probe_factors`
+    (forced on).  ``build_kwargs`` pass through to ``build_hck``
+    (``levels``/``rank``/``key``/``method``/...).
+    """
+    from repro.core.hck import build_hck
+    from repro.kernels.registry import DEFAULT_CONFIG
+
+    config = config if config is not None else DEFAULT_CONFIG
+    audit = RecoveryAudit("build_hck")
+    plans = [("initial", kernel, config)]
+    for i in range(1, jitter_rungs + 1):
+        k = dataclasses.replace(kernel, jitter=kernel.jitter * 10.0 ** i)
+        plans.append((f"jitter x{10 ** i:g}", k, config))
+    for p in _promotions(config):
+        plans.append((f"promote:{p}", kernel,
+                      dataclasses.replace(config, precision=p)))
+
+    last: Exception | None = None
+    for rung, ker, cfg in plans:
+        try:
+            factors = build_hck(x, kernel=ker, config=cfg, **build_kwargs)
+            health.probe_factors(factors, cfg, force=True, op="build")
+        except NumericalFailure as e:
+            audit.record(rung, False, e)
+            last = e
+            continue
+        audit.record(rung, True, note=f"jitter={ker.jitter:g} "
+                                      f"precision={cfg.precision}")
+        return GuardedBuild(factors, ker, cfg, audit)
+    raise RecoveryExhausted(audit, last)
+
+
+def repair_factors(factors, kernel, config=None, *,
+                   base_leaf_size: int | None = None):
+    """Repair a poisoned factor set on its FROZEN hierarchy.
+
+    Rungs: probe as-is (clean factors return untouched); per-leaf
+    ``refit_frozen`` (recomputes ``Adiag``/``U`` from ``x_sorted`` —
+    repairs any leaf-stage poisoning); a middle-factor rebuild
+    (``Sigma``/Cholesky/``W`` recomputed from the stored landmarks) plus
+    the leaf refit.  Every input of every rung is data the poison cannot
+    reach (points + landmarks), so a recovered set is parity-exact with
+    the original clean build.  Returns ``(factors, audit)``.
+    """
+    from repro.core.hck import HCKFactors, _middle_factors, _transfer_ops
+    from repro.core.update import refit_frozen
+    from repro.kernels.registry import DEFAULT_CONFIG
+
+    config = config if config is not None else DEFAULT_CONFIG
+    base = base_leaf_size or factors.leaf_size
+    audit = RecoveryAudit("repair_factors")
+
+    def _refit(f):
+        return refit_frozen(f, kernel, config, jitter_rows=base)
+
+    def _rebuild_middle():
+        sigma, sigma_cho, sigma_li = _middle_factors(
+            factors.landmarks, kernel, config)
+        w = _transfer_ops(factors.landmarks, sigma_li, kernel, config)
+        cast = tuple(
+            tuple(a.astype(o.dtype) for a, o in zip(new, old))
+            for new, old in ((sigma, factors.sigma),
+                             (sigma_cho, factors.sigma_cho),
+                             (w, factors.w)))
+        mid = HCKFactors(factors.x_sorted, factors.tree, factors.landmarks,
+                         cast[0], cast[1], cast[2], factors.u, factors.adiag)
+        return _refit(mid)
+
+    plans = [("probe", lambda: factors),
+             ("refit_frozen", lambda: _refit(factors)),
+             ("rebuild_middle", _rebuild_middle)]
+    last: Exception | None = None
+    for rung, make in plans:
+        try:
+            f = make()
+            health.probe_factors(f, config, force=True, op=rung)
+        except NumericalFailure as e:
+            audit.record(rung, False, e)
+            last = e
+            continue
+        audit.record(rung, True)
+        return f, audit
+    raise RecoveryExhausted(audit, last)
+
+
+# ---------------------------------------------------------------------------
+# invert
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GuardedInvert:
+    """:func:`invert_guarded` outcome: the inverse pair, the factors,
+    ridge and config that produced it (a repair rung may have refit the
+    factors, escalated the ridge, or promoted the precision — follow-up
+    solves must use THIS config, not the one passed in) and the audit
+    trail."""
+
+    inverse: Any
+    lo: Array
+    factors: Any
+    ridge: float
+    config: Any
+    audit: RecoveryAudit
+
+
+def invert_guarded(factors, ridge, config=None, *, kernel=None,
+                   jitter_rungs: int = 2,
+                   base_leaf_size: int | None = None) -> GuardedInvert:
+    """``invert_with_leaf`` under the ridge→precision→refit ladder.
+
+    Rungs: the inversion as asked; ``jitter_rungs`` rounds of ×10 ridge
+    escalation; precision-promoted re-instantiation of ALL factors on the
+    frozen hierarchy (:func:`_rebuild_frozen`) at the ORIGINAL ridge
+    (needs ``kernel``; this is the canonical bf16 ridge-floor repair —
+    see SolveConfig.precision); a dtype-preserving ``refit_frozen`` at
+    the original ridge.  Every candidate pair is
+    validated by :func:`repro.runtime.health.probe_leaf_factor` (the
+    definiteness witness) plus a finiteness sweep over ``inv.linv``.
+    ``base_leaf_size`` pins the frozen-λ' convention of the refit rungs
+    (defaults to the current leaf size).
+    """
+    from repro.core import hmatrix
+    from repro.core.update import refit_frozen
+    from repro.kernels.registry import DEFAULT_CONFIG
+
+    config = config if config is not None else DEFAULT_CONFIG
+    base = base_leaf_size or factors.leaf_size
+    audit = RecoveryAudit("invert")
+
+    plans: list[tuple[str, Callable[[], tuple], float]] = [
+        ("initial", lambda: (factors, config), float(ridge))]
+    for i in range(1, jitter_rungs + 1):
+        plans.append((f"ridge x{10 ** i:g}", lambda: (factors, config),
+                      float(ridge) * 10.0 ** i))
+    if kernel is not None:
+        for p in _promotions(config):
+            def _refit(p=p):
+                cfg = dataclasses.replace(config, precision=p)
+                return _rebuild_frozen(factors, kernel, cfg, base), cfg
+            plans.append((f"promote:{p}", _refit, float(ridge)))
+
+        def _refit_plain():
+            cfg = dataclasses.replace(config, precision=None)
+            return refit_frozen(factors, kernel, cfg, jitter_rows=base), cfg
+        plans.append(("refit_frozen", _refit_plain, float(ridge)))
+
+    last: Exception | None = None
+    for rung, make, rho in plans:
+        try:
+            f, cfg = make()
+            if rung != "initial":
+                health.probe_factors(f, cfg, force=True, op=rung)
+            inv, lo = hmatrix.invert_with_leaf(f, rho, cfg)
+            health.probe_leaf_factor(lo, cfg, force=True)
+            health.check_finite("leaf_factor", inv.linv, config=cfg,
+                                force=True, leaf_axis=0,
+                                detail="inverse Cholesky")
+        except NumericalFailure as e:
+            audit.record(rung, False, e)
+            last = e
+            continue
+        audit.record(rung, True, note=f"ridge={rho:g}")
+        return GuardedInvert(inv, lo, f, rho, cfg, audit)
+    raise RecoveryExhausted(audit, last)
+
+
+# ---------------------------------------------------------------------------
+# iterative solves
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GuardedSolve:
+    """:func:`pcg_guarded` outcome: the solution, the final CGResult when
+    CG produced it (None for the exact fallback) and the audit trail."""
+
+    x: Array
+    result: Any
+    audit: RecoveryAudit
+
+
+def pcg_guarded(matvec, b, *, ridge=0.0, precond=None, fresh_precond=None,
+                fresh_dot=None, exact_solve=None, tol: float = 1e-6,
+                maxiter: int = 100, dot=None, x0=None, flexible: bool = True,
+                require_converged: bool = True) -> GuardedSolve:
+    """PCG under the re-precondition → cold-restart → exact ladder.
+
+    Runs :func:`repro.solvers.cg.pcg` and classifies the residual trace
+    with :func:`repro.runtime.health.probe_cg` (stall / divergence /
+    non-finite all count as failures; a plain ``maxiter`` still making
+    progress does not).  Repair rungs: ``fresh_precond()`` (a rebuilt
+    preconditioner, warm start kept — the FR-PCG-stall repair measured in
+    PR 5); a cold restart with the IDENTITY preconditioner and a doubled
+    iteration budget (immune to a poisoned M⁻¹ or a poisoned warm
+    start); ``exact_solve(b)`` when the caller can afford a direct
+    factorization.  ``fresh_dot()`` (when given) supplies a rebuilt inner
+    product for every repair rung — the failed-collective repair: the
+    mesh driver hands back a psum excluding the bad host.
+
+    ``require_converged`` (default True) additionally treats a
+    still-progressing ``maxiter`` exit as a rung failure: a guarded solve
+    promises a solution at ``tol``, so "slow but alive" climbs the ladder
+    too (set False to accept any non-pathological iterate).
+    """
+    from repro.solvers.cg import pcg
+
+    audit = RecoveryAudit("pcg")
+    attempts = [("initial", dict(precond=precond, x0=x0, maxiter=maxiter,
+                                 flexible=flexible))]
+    if fresh_precond is not None:
+        attempts.append(("re-precondition",
+                         dict(precond=None, x0=x0, maxiter=maxiter,
+                              flexible=True, _fresh=True)))
+    attempts.append(("cold restart", dict(precond=None, x0=None,
+                                          maxiter=2 * maxiter,
+                                          flexible=True)))
+
+    last: Exception | None = None
+    for rung, kw in attempts:
+        if kw.pop("_fresh", False):
+            kw["precond"] = fresh_precond()
+        rung_dot = dot
+        if rung != "initial" and fresh_dot is not None:
+            rung_dot = fresh_dot()
+        try:
+            res = pcg(matvec, b, ridge=ridge, tol=tol, dot=rung_dot, **kw)
+            health.probe_cg(res, tol=tol, force=True, context=f"rung={rung}")
+            if require_converged and not bool(res.converged):
+                raise NumericalFailure(
+                    "solvers.cg", statistic="residual_maxiter",
+                    value=float(res.residuals[int(res.iterations)]),
+                    detail=f"not converged after {int(res.iterations)} "
+                           f"iterations (tol={tol:g}) rung={rung}")
+        except NumericalFailure as e:
+            audit.record(rung, False, e)
+            last = e
+            continue
+        audit.record(rung, True, note=f"iters={int(res.iterations)}")
+        return GuardedSolve(res.x, res, audit)
+
+    if exact_solve is not None:
+        try:
+            x = exact_solve(b)
+            health.check_finite("solvers.exact", x, force=True)
+        except NumericalFailure as e:
+            audit.record("exact fallback", False, e)
+            raise RecoveryExhausted(audit, e)
+        audit.record("exact fallback", True)
+        return GuardedSolve(x, None, audit)
+    raise RecoveryExhausted(audit, last)
+
+
+# ---------------------------------------------------------------------------
+# online updates
+# ---------------------------------------------------------------------------
+
+def _validate_update(model, info, tol: float):
+    """Post-update invariants: finite factors/coefficients, a finite and
+    converged re-solve residual."""
+    health.probe_factors(model.factors, model.solve_config, force=True,
+                         op="update.insert")
+    health.check_finite("leaf_update", model.alpha,
+                        config=model.solve_config, force=True,
+                        detail="dual coefficients")
+    if model.leaf_lo is not None:
+        health.probe_leaf_factor(model.leaf_lo, model.solve_config,
+                                 force=True, stage="leaf_update")
+    resid = float(info.residual)
+    if not jnp.isfinite(resid) or not info.converged:
+        raise NumericalFailure(
+            "solvers.cg", statistic="update_residual", value=resid,
+            backend=getattr(model.solve_config, "backend", None),
+            detail=f"refresh={info.refresh!r} iterations={info.iterations} "
+                   f"converged={info.converged}")
+
+
+def update_guarded(model, x_new: Array, y_new: Array, *,
+                   refresh: str = "inverse", tol: float = 1e-8,
+                   **kwargs) -> tuple[Any, Any, RecoveryAudit]:
+    """``HCKRegressor.update`` under the refresh-escalation ladder.
+
+    Rungs: the requested ``refresh``; the same refresh from a FRESH base
+    inverse (``model.inverse``/``leaf_lo`` dropped — the re-precondition
+    repair for a stale or poisoned cached pair); ``refresh="inverse"``
+    (exact bordered extension); ``refresh="exact"`` (full from-scratch
+    Algorithm-2 re-factorization of the extended hierarchy — the cold
+    restart).  Each candidate model passes the post-update invariants
+    (finite factors/coefficients, converged residual) before being
+    returned as ``(model_new, info, audit)``.
+    """
+    audit = RecoveryAudit("update")
+    plans = [(f"refresh={refresh!r}", model, refresh)]
+    fresh = dataclasses.replace(model, inverse=None, leaf_lo=None)
+    fresh._leaf_linv = model._leaf_linv
+    plans.append((f"re-precondition (fresh inverse, refresh={refresh!r})",
+                  fresh, refresh))
+    if refresh != "inverse":
+        plans.append(("refresh='inverse'", fresh, "inverse"))
+    plans.append(("refresh='exact'", fresh, "exact"))
+
+    last: Exception | None = None
+    for rung, base, mode in plans:
+        try:
+            model_new, info = base.update(x_new, y_new, refresh=mode,
+                                          tol=tol, **kwargs)
+            _validate_update(model_new, info, tol)
+        except NumericalFailure as e:
+            audit.record(rung, False, e)
+            last = e
+            continue
+        audit.record(rung, True,
+                     note=f"iterations={info.iterations} "
+                          f"residual={info.residual:.3g}")
+        return model_new, info, audit
+    raise RecoveryExhausted(audit, last)

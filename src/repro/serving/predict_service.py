@@ -37,6 +37,7 @@ from repro.core import oos
 from repro.core.hck import HCKFactors
 from repro.core.kernels_fn import BaseKernel
 from repro.kernels.registry import SolveConfig
+from repro.runtime import health
 
 Array = jax.Array
 
@@ -50,6 +51,32 @@ def bucket_size(q: int, min_bucket: int, max_bucket: int) -> int:
     while b < q:
         b <<= 1
     return min(b, max_bucket)
+
+
+def validate_queries(queries: Array, x_sorted: Array) -> None:
+    """Reject malformed query batches BEFORE any stage launch.
+
+    A bad batch that reaches ``oos.apply_plan`` fails deep inside a
+    jitted stage with a shape-mismatch traceback naming nothing the
+    caller typed; this front-door check names the actual contract:
+    (q, d) with the training feature dim and the training float dtype.
+    """
+    if getattr(queries, "ndim", None) != 2:
+        raise ValueError(
+            f"queries must be a 2-D (q, d) batch, got shape "
+            f"{getattr(queries, 'shape', None)}")
+    d = x_sorted.shape[1]
+    if queries.shape[1] == 0:
+        raise ValueError(
+            f"queries have 0 features; the model was trained with d={d}")
+    if queries.shape[1] != d:
+        raise ValueError(
+            f"query feature dim {queries.shape[1]} != training dim {d}")
+    if queries.dtype != x_sorted.dtype:
+        raise ValueError(
+            f"query dtype {queries.dtype} != training dtype "
+            f"{x_sorted.dtype}; cast the batch (implicit promotion would "
+            f"silently retrace every bucket)")
 
 
 @dataclasses.dataclass
@@ -114,7 +141,12 @@ class PredictEngine:
         """(q, d) -> (q, k).  Pads to the shape bucket (edge-replicated
         rows route like real queries and are sliced off), micro-batching
         anything beyond ``max_bucket``; empty batches short-circuit to an
-        empty result (a serving frontend may forward them)."""
+        empty result (a serving frontend may forward them).  Malformed
+        batches (wrong rank/feature dim/dtype) raise ``ValueError`` here,
+        not deep inside a stage launch; with health checks on
+        (``SolveConfig.checks`` / ``REPRO_STRICT_FINITE``) non-finite
+        predictions raise a structured ``NumericalFailure``."""
+        validate_queries(queries, self.factors.x_sorted)
         q = queries.shape[0]
         if q == 0:
             k = self.plan.w_leaf.shape[-1]
@@ -127,11 +159,13 @@ class PredictEngine:
         padded = jnp.pad(queries, ((0, b - q), (0, 0)), mode="edge")
         z = oos.apply_plan(self.factors, self.plan, padded, self.kernel,
                            self.config)
+        z = z[:q]
+        health.probe_predictions(z, self.config)
         self._calls += 1
         self._queries += q
         self._padded += b - q
         self._bucket_hits[b] = self._bucket_hits.get(b, 0) + 1
-        return z[:q]
+        return z
 
     __call__ = apply
 
@@ -273,6 +307,7 @@ class MeshPredictEngine:
 
         from repro.core.partition import owner_device, route
 
+        validate_queries(queries, self.factors.x_sorted)
         q = queries.shape[0]
         k = self.plan.w_leaf.shape[-1]
         if q == 0:
@@ -307,11 +342,13 @@ class MeshPredictEngine:
         zflat = np.asarray(z).reshape(p * b, k)
         out = np.empty((q, k), zflat.dtype)
         out[order] = zflat[dev[order] * b + pos]
+        out_j = jnp.asarray(out)
+        health.probe_predictions(out_j, self.config)
         self._calls += 1
         self._queries += q
         self._padded += p * b - q
         self._bucket_hits[b] = self._bucket_hits.get(b, 0) + 1
-        return jnp.asarray(out)
+        return out_j
 
     __call__ = apply
 
@@ -359,10 +396,23 @@ class ModelRegistry:
 
     ``mesh`` builds a :class:`MeshPredictEngine` per version instead, so
     distributed serving swaps with the same protocol.
+
+    ``canary`` (held-back queries) arms the guarded-publish gate: every
+    :meth:`publish` serves the canary batch from the INCOMING engine
+    before the swap, requires it finite, and — when a version is already
+    live — within ``canary_tol`` relative drift of the outgoing
+    version's answers.  A failing canary auto-rolls-back: the swap never
+    happens, the outgoing version keeps serving, registry state is
+    bitwise unchanged, and the publish raises the structured
+    :class:`~repro.runtime.health.NumericalFailure` (recorded in
+    ``stats``).  A poisoned online update therefore cannot reach
+    traffic.
     """
 
     def __init__(self, model=None, *, tag: str = "", mesh=None,
-                 axis: str = "dev", warmup: bool = False, **engine_kwargs):
+                 axis: str = "dev", warmup: bool = False,
+                 canary: Array | None = None, canary_tol: float = 1e-3,
+                 **engine_kwargs):
         self._lock = threading.Lock()
         self._versions: dict[int, ModelVersion] = {}
         self._live: ModelVersion | None = None
@@ -371,17 +421,62 @@ class ModelRegistry:
         self._axis = axis
         self._engine_kwargs = dict(engine_kwargs)
         self._swaps = 0
+        self._canary = canary
+        self._canary_tol = canary_tol
+        self._canary_rejects = 0
+        self._last_reject: dict | None = None
         if model is not None:
             self.publish(model, tag=tag, warmup=warmup)
 
     # -- writers ----------------------------------------------------------
-    def publish(self, model, *, tag: str = "", warmup: bool = False) -> int:
+    def _canary_gate(self, engine, canary, tol: float) -> None:
+        """Validate the incoming engine on held-back queries BEFORE the
+        swap; raises NumericalFailure (and records the reject) on a
+        non-finite or drifted canary response."""
+        if canary is None:
+            return
+        try:
+            try:
+                z_new = engine(canary)
+            except health.NumericalFailure as e:
+                # the engine's own probe tripped first; re-attribute to the
+                # gate so the reject reads as what it is
+                raise health.NumericalFailure(
+                    "serving.canary", statistic=e.statistic, value=e.value,
+                    leaf=e.leaf, node=e.node, dtype=e.dtype,
+                    backend=e.backend,
+                    detail=f"incoming engine failed the canary probe: "
+                           f"{e.detail}") from e
+            health.probe_predictions(z_new, force=True,
+                                     stage="serving.canary")
+            live = self._live
+            if live is not None:
+                z_old = live.engine(canary)
+                scale = float(jnp.linalg.norm(z_old)) or 1.0
+                drift = float(jnp.linalg.norm(z_new - z_old)) / scale
+                if not np.isfinite(drift) or drift > tol:
+                    raise health.NumericalFailure(
+                        "serving.canary", statistic="canary_drift",
+                        value=drift, dtype=z_new.dtype,
+                        detail=f"vs live version {live.version} "
+                               f"(tol={tol:g})")
+        except health.NumericalFailure as e:
+            self._canary_rejects += 1
+            self._last_reject = e.to_dict()
+            raise
+
+    def publish(self, model, *, tag: str = "", warmup: bool = False,
+                canary: Array | None = None,
+                canary_tol: float | None = None) -> int:
         """Register ``model`` and atomically make it the live version.
 
         The engine is built (and optionally warmed: every shape bucket
         compiled) BEFORE the swap, so in-flight and subsequent requests
-        never pay a cold compile; the store itself is one reference
-        assignment.  Returns the new version number.
+        never pay a cold compile; then the canary gate (see class docs)
+        validates it, still before the swap; the store itself is one
+        reference assignment.  Returns the new version number.
+        ``canary``/``canary_tol`` override the registry-wide gate for
+        this publish only.
         """
         engine = PredictEngine(model.factors, model.plan, model.kernel,
                                config=model.solve_config,
@@ -390,6 +485,10 @@ class ModelRegistry:
             engine = engine.on_mesh(self._mesh, axis=self._axis)
         if warmup:
             engine.warmup()
+        self._canary_gate(engine,
+                          canary if canary is not None else self._canary,
+                          canary_tol if canary_tol is not None
+                          else self._canary_tol)
         with self._lock:
             v = self._next
             self._next += 1
@@ -433,7 +532,8 @@ class ModelRegistry:
             self._versions.pop(version)
 
     def update_and_publish(self, x_new, y_new, *, tag: str = "",
-                           warmup: bool = False, **update_kwargs):
+                           warmup: bool = False, guarded: bool = False,
+                           **update_kwargs):
         """Online insert + hot swap: ``live.model.update`` then publish.
 
         The update runs against the live model's immutable state while
@@ -442,11 +542,29 @@ class ModelRegistry:
         :class:`repro.core.krr.UpdateInfo`, whose ``needs_rebuild`` flag
         is the caller's cue to schedule a full background refit and
         publish THAT when done.
+
+        The whole call is TRANSACTIONAL: the update builds an entirely
+        new model off-path and nothing registry-side mutates until the
+        canary-gated publish commits under the lock, so an insert /
+        re-solve / canary failure anywhere leaves the live version, the
+        version list and every cached engine bitwise unchanged (the
+        exception propagates; the reject is visible in ``stats``).
+        ``guarded=True`` routes the update through the
+        :func:`repro.runtime.recover.update_guarded` ladder (fresh
+        inverse → exact bordered → full re-factorization) before
+        publishing.
         """
         entry = self._live
         if entry is None:
             raise ValueError("registry has no live model to update")
-        model_new, info = entry.model.update(x_new, y_new, **update_kwargs)
+        if guarded:
+            from repro.runtime.recover import update_guarded
+
+            model_new, info, _audit = update_guarded(
+                entry.model, x_new, y_new, **update_kwargs)
+        else:
+            model_new, info = entry.model.update(x_new, y_new,
+                                                 **update_kwargs)
         version = self.publish(model_new, tag=tag, warmup=warmup)
         return version, info
 
@@ -486,9 +604,12 @@ class ModelRegistry:
 
     @property
     def stats(self) -> dict:
-        """Registry counters (live version, stored versions, swap count)."""
+        """Registry counters (live version, stored versions, swap count,
+        canary rejects and the last reject's diagnostics)."""
         return {
             "live_version": self.live_version,
             "versions": self.versions(),
             "swaps": self._swaps,
+            "canary_rejects": self._canary_rejects,
+            "last_reject": self._last_reject,
         }

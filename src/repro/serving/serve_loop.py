@@ -28,11 +28,21 @@ Array = jax.Array
 
 @dataclasses.dataclass
 class ServedBatch:
-    """One response of :class:`KRRServeLoop`: outputs + provenance."""
+    """One response of :class:`KRRServeLoop`: outputs + provenance.
+
+    ``degraded`` marks a batch served from the last-good version after
+    the live one failed (non-finite output, exception, or a missed
+    deadline); ``retries`` counts the extra live attempts this batch
+    consumed and ``failure`` is the final live-path failure message —
+    the serving-side audit of the degraded-mode ladder.
+    """
 
     z: Array                   # (q, k) predictions
     version: int               # registry version that served this batch
     latency_s: float
+    degraded: bool = False
+    retries: int = 0
+    failure: str | None = None
 
 
 @dataclasses.dataclass
@@ -45,22 +55,109 @@ class KRRServeLoop:
     produce a mixed-version response.  ``responses`` keeps the
     (version, latency) trail — the serving-side evidence the hot-swap
     tests and the update bench assert on.
+
+    Failure handling (DESIGN.md §11): every live attempt must return
+    finite predictions within ``deadline_s`` (None = no deadline).  A
+    failed attempt is retried up to ``max_retries`` times with
+    ``backoff_s · 2^attempt`` sleeps — each retry re-reads the live
+    snapshot, so a concurrent rollback/publish heals the loop mid-batch.
+    When every live attempt fails, the loop DEGRADES instead of erroring:
+    the batch is served from the last version that answered cleanly,
+    stamped ``degraded=True`` with the live failure in
+    ``ServedBatch.failure`` and counted in :meth:`stats`.  Only when
+    there is no last-good version either does the failure propagate.
     """
 
     registry: object           # repro.serving.predict_service.ModelRegistry
     responses: list = dataclasses.field(default_factory=list)
+    deadline_s: float | None = None
+    max_retries: int = 2
+    backoff_s: float = 0.0
+    _last_good: object = dataclasses.field(default=None, repr=False)
+    _failures: int = dataclasses.field(default=0, repr=False)
+    _retries: int = dataclasses.field(default=0, repr=False)
+    _degraded: int = dataclasses.field(default=0, repr=False)
+    _deadline_misses: int = dataclasses.field(default=0, repr=False)
+
+    def _attempt(self, entry, queries: Array) -> tuple[Array, float]:
+        """One serve attempt from ``entry``; raises NumericalFailure on a
+        non-finite response or a missed deadline."""
+        from repro.runtime import health
+
+        t0 = time.perf_counter()
+        try:
+            z = entry.engine(queries)
+            jax.block_until_ready(z)
+        except health.NumericalFailure:
+            raise
+        except ValueError:
+            raise    # malformed batch: a caller bug, not an engine fault
+        except Exception as e:
+            # an engine that throws (OOM, a dead device, a poisoned jit
+            # cache) enters the same retry/degraded ladder as one that
+            # returns garbage
+            raise health.NumericalFailure(
+                "serve", statistic="engine_error", value=type(e).__name__,
+                detail=f"version {entry.version}: {e}")
+        dt = time.perf_counter() - t0
+        # serving always validates its output: this is the last line of
+        # defense between a poisoned model and a client (the canary gate
+        # is the first), so it is NOT gated on SolveConfig.checks
+        health.probe_predictions(z, force=True, stage="serve")
+        if self.deadline_s is not None and dt > self.deadline_s:
+            self._deadline_misses += 1
+            raise health.NumericalFailure(
+                "serve", statistic="deadline_s", value=dt,
+                detail=f"budget {self.deadline_s:g}s, version "
+                       f"{entry.version}")
+        return z, dt
 
     def serve(self, queries: Array) -> ServedBatch:
         """Serve one micro-batch; record and return the stamped response."""
+        from repro.runtime.health import NumericalFailure
+
+        failure: Exception | None = None
+        retries = 0
+        for attempt in range(self.max_retries + 1):
+            entry = self.registry.live      # fresh snapshot per attempt
+            if entry is None:
+                raise ValueError("registry has no live model")
+            try:
+                z, dt = self._attempt(entry, queries)
+            except NumericalFailure as e:
+                self._failures += 1
+                failure = e
+                retries = attempt
+                if attempt < self.max_retries and self.backoff_s > 0:
+                    time.sleep(self.backoff_s * 2.0 ** attempt)
+                continue
+            out = ServedBatch(z, entry.version, dt, retries=attempt,
+                              failure=str(failure) if failure else None)
+            self._retries += attempt
+            self._last_good = entry
+            self.responses.append(out)
+            return out
+
+        # degraded mode: the live version is unservable — fall back to the
+        # last version that answered cleanly, surfacing the failure
+        fallback = self._last_good
+        if fallback is None or fallback.version == entry.version:
+            raise failure
         t0 = time.perf_counter()
-        z, version = self.registry.predict(queries)
+        z = fallback.engine(queries)
         jax.block_until_ready(z)
-        out = ServedBatch(z, version, time.perf_counter() - t0)
+        out = ServedBatch(z, fallback.version, time.perf_counter() - t0,
+                          degraded=True, retries=retries,
+                          failure=str(failure))
+        self._retries += retries
+        self._degraded += 1
         self.responses.append(out)
         return out
 
     def run(self, queries: Array, micro_batch: int) -> list:
         """Serve ``queries`` in ``micro_batch`` slices; return responses."""
+        if micro_batch <= 0:
+            raise ValueError(f"micro_batch must be >= 1, got {micro_batch}")
         return [self.serve(queries[i:i + micro_batch])
                 for i in range(0, queries.shape[0], micro_batch)]
 
@@ -72,6 +169,18 @@ class KRRServeLoop:
             if r.version not in seen:
                 seen.append(r.version)
         return seen
+
+    def stats(self) -> dict:
+        """Loop counters: batches, failures, retries, degraded batches,
+        deadline misses, versions served."""
+        return {
+            "batches": len(self.responses),
+            "failures": self._failures,
+            "retries": self._retries,
+            "degraded_batches": self._degraded,
+            "deadline_misses": self._deadline_misses,
+            "versions_served": self.versions_served,
+        }
 
 
 @dataclasses.dataclass

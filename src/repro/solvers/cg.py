@@ -31,8 +31,11 @@ import jax.numpy as jnp
 Array = jax.Array
 
 #: denominator guard (matches the legacy dist_hck CG helper): a converged
-#: or breakdown direction yields α = rz/ε·0-ish instead of NaN poisoning
-#: the whole batch.
+#: direction yields α = rz/ε·0-ish instead of 0/0 NaN poisoning the whole
+#: batch.  True CURVATURE breakdowns (pᵀAp ≈ 0 with rz large — an exactly
+#: singular operator fed an inconsistent RHS) are handled separately by
+#: the per-column freeze in :func:`pcg`'s step, because the ε clamp alone
+#: turns them into a runaway α that overflows the iterate.
 _EPS = 1e-30
 
 
@@ -201,7 +204,19 @@ def pcg(
         del it
         x, z, p, rz = state
         ap = amv(p)
-        alpha = rz / jnp.maximum(dot(p, ap), _EPS)       # (k,)
+        pap = dot(p, ap)                                 # (k,) curvature
+        # breakdown freeze: on a singular (or indefinite) operator the
+        # search direction collapses into the near-null space, where
+        # α = rz/pᵀAp compounds geometrically and overflows the iterate.
+        # A column whose Rayleigh quotient pᵀAp/pᵀp drops below a few ulps
+        # is frozen for this step (α = β = 0): it keeps its current
+        # iterate and restarts from steepest descent, while the healthy
+        # columns — whose quotient is bounded below by λ_min + ridge —
+        # never trip the test and see bit-identical arithmetic.
+        eps = jnp.finfo(pap.dtype).eps
+        broken = pap <= 8.0 * eps * jnp.maximum(dot(p, p), _EPS)
+        alpha = jnp.where(broken, 0.0,
+                          rz / jnp.maximum(pap, _EPS))   # (k,)
         x = x + alpha[None, :] * p
         r_new = r - alpha[None, :] * ap
         z_new = psolve(r_new)
@@ -210,7 +225,7 @@ def pcg(
             num = dot(r_new - r, z_new)   # inexact (f32) preconditioner
         else:                             # Fletcher–Reeves (textbook PCG)
             num = rz_new
-        beta = num / jnp.maximum(rz, _EPS)
+        beta = jnp.where(broken, 0.0, num / jnp.maximum(rz, _EPS))
         p = z_new + beta[None, :] * p
         return (x, z_new, p, rz_new), r_new
 

@@ -1,0 +1,8 @@
+"""Test-support tooling shipped with the package.
+
+``repro.testing.faultinject`` is the composable chaos-injection harness
+behind ``tests/test_robustness.py`` and the CI chaos lane: every fault
+class the runtime health layer claims to detect and recover is
+injectable here, deterministically, against real factors/solvers/serving
+objects.
+"""

@@ -1,0 +1,247 @@
+"""Composable chaos-injection harness (DESIGN.md §11).
+
+Each injector here produces a REAL poisoned object — factors with a NaN
+basis, an indefinite leaf Schur complement, a garbage tile DB, a
+non-SPD preconditioner, a collective that NaNs after N calls, a serving
+engine that lies — so ``tests/test_robustness.py`` can assert, per fault
+class, that the :mod:`repro.runtime.health` probes DETECT it (a
+structured ``NumericalFailure`` naming the stage), the
+:mod:`repro.runtime.recover` ladders RECOVER it, and the recovered
+result still passes the f64 parity gates.  Injectors are pure where the
+target is (factors/plans come back as new pytrees; the original is
+untouched), so faults compose: poison a factor AND corrupt the tile DB
+in one scenario.
+
+:data:`FAULT_CLASSES` is the canonical fault inventory — the robustness
+suite iterates it and the CI chaos lane publishes the resulting
+detection/recovery matrix as an artifact, so an undetectable fault class
+is a visible hole, not a silent one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+#: canonical fault inventory: name -> (layer, description).  Every entry
+#: has a matching detect+recover test in tests/test_robustness.py; the CI
+#: chaos lane uploads the measured matrix as an artifact.
+FAULT_CLASSES = {
+    "factor_nan": (
+        "build", "NaN injected into the build_cross basis U of one leaf"),
+    "factor_inf": (
+        "build", "Inf injected into a leaf Gram diagonal block"),
+    "sigma_nan": (
+        "build", "NaN injected into a middle Sigma factor"),
+    "indefinite_leaf": (
+        "invert", "one leaf Schur complement forced indefinite under the "
+                  "fit ridge"),
+    "bf16_ridge_floor": (
+        "invert", "bf16-built factors inverted below the n0*eps_bf16 "
+                  "ridge floor"),
+    "cg_bad_preconditioner": (
+        "solve", "indefinite preconditioner stalls/diverges CG"),
+    "cg_nonsymmetric_column": (
+        "solve", "one RHS column's operator made nonsymmetric (stalled "
+                 "column)"),
+    "collective_nan": (
+        "solve", "the Nth inner-product collective returns NaN"),
+    "tile_db_corruption": (
+        "kernels", "autotune tile DB replaced with garbage bytes"),
+    "update_poisoned_cache": (
+        "update", "cached leaf Schur Cholesky NaN-poisoned before an "
+                  "online insert"),
+    "serving_poisoned_model": (
+        "serving", "published model's OOS plan NaN-poisoned"),
+    "serving_flaky_engine": (
+        "serving", "live engine returns NaN / stalls for N calls"),
+}
+
+
+# ---------------------------------------------------------------------------
+# factor faults
+# ---------------------------------------------------------------------------
+
+def poison_factor(factors, field: str = "u", *, leaf: int = 0,
+                  value: float = float("nan")):
+    """Copy of ``factors`` with ``value`` poked into one entry of a named
+    factor (``adiag``/``u`` by ``leaf``; tuple factors ``sigma``/
+    ``sigma_cho``/``w`` at their last level, node 0)."""
+    arr = getattr(factors, field)
+    if isinstance(arr, tuple):
+        last = arr[-1]
+        last = last.at[(0,) * last.ndim].set(value)
+        new = arr[:-1] + (last,)
+    else:
+        new = arr.at[(leaf,) + (0,) * (arr.ndim - 1)].set(value)
+    return dataclasses.replace(factors, **{field: new})
+
+
+def indefinite_leaf(factors, *, leaf: int = 0, shift: float = 1.0):
+    """Copy of ``factors`` whose leaf ``leaf`` Gram diagonal is shifted by
+    ``-shift * I`` — the leaf Schur complement goes indefinite once
+    ``shift`` exceeds the inversion ridge plus the Schur floor, NaN-ing
+    the ``leaf_factor`` Cholesky exactly like the bf16 ridge-floor
+    failure does."""
+    n0 = factors.adiag.shape[-1]
+    eye = jnp.eye(n0, dtype=factors.adiag.dtype)
+    adiag = factors.adiag.at[leaf].add(-shift * eye)
+    return dataclasses.replace(factors, adiag=adiag)
+
+
+# ---------------------------------------------------------------------------
+# solver faults
+# ---------------------------------------------------------------------------
+
+def bad_preconditioner(sign_every: int = 7):
+    """An INDEFINITE 'preconditioner': flips the sign of every
+    ``sign_every``-th row.  CG's convergence theory needs an SPD M⁻¹;
+    this one stalls or diverges the recurrence — the detector must
+    classify it and the ladder must drop/rebuild it."""
+    def precond(r: Array) -> Array:
+        n = r.shape[0]
+        signs = jnp.where(jnp.arange(n) % sign_every == 0, -1.0, 1.0)
+        signs = signs.astype(r.dtype)
+        return r * (signs[:, None] if r.ndim == 2 else signs)
+    return precond
+
+
+def nonsymmetric_column(matvec, col: int, eps: float = 0.5):
+    """Wrap a batched matvec so column ``col`` sees a NONSYMMETRIC
+    operator (a rolled rank-perturbation) — that column's CG recurrence
+    loses its minimization property and stalls while the others keep
+    converging.  Models one corrupted RHS lane in a multi-class solve."""
+    def wrapped(v: Array) -> Array:
+        av = matvec(v)
+        return av.at[:, col].add(eps * jnp.roll(v[:, col], 1))
+    return wrapped
+
+
+def poisoned_dot(dot=None, *, after: int = 2):
+    """Wrap a CG inner product (``column_dot`` or a psum-wrapped mesh
+    ``dot``) so every call past the ``after``-th returns NaN — one
+    device dropping out of the collective mid-solve.  The counter lives
+    host-side behind ``jax.pure_callback``, so the fault fires at RUN
+    time per iteration even though the while_loop traces the dot once.
+    Returns ``(dot, state)``; ``state['calls']`` is the live call count.
+    """
+    from repro.solvers.cg import column_dot
+
+    dot = dot if dot is not None else column_dot
+    state = {"calls": 0}
+
+    def _maybe_poison(x):
+        state["calls"] += 1
+        x = np.asarray(x)
+        if state["calls"] > after:
+            return np.full_like(x, np.nan)
+        return x
+
+    def wrapped(u: Array, v: Array) -> Array:
+        out = dot(u, v)
+        return jax.pure_callback(
+            _maybe_poison, jax.ShapeDtypeStruct(out.shape, out.dtype), out)
+
+    return wrapped, state
+
+
+# ---------------------------------------------------------------------------
+# kernel-system faults
+# ---------------------------------------------------------------------------
+
+def corrupt_tile_db(path: str | None = None) -> str:
+    """Overwrite the autotune tile DB with non-JSON garbage and drop the
+    in-process singleton, so the next registry consult reads the corrupt
+    file.  The contract under test: lookups DEGRADE to heuristics
+    (``TileDB.corrupt`` flags it), never raise, and the next sweep's
+    ``save`` repairs the file."""
+    from repro.kernels import autotune
+
+    path = path or autotune.db_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        f.write('{"entries": #### not json ####')
+    autotune.reset_db()
+    return path
+
+
+# ---------------------------------------------------------------------------
+# update / serving faults
+# ---------------------------------------------------------------------------
+
+def poison_cached_inverse(model):
+    """Copy of a fitted HCKRegressor whose cached leaf Schur Cholesky is
+    NaN-poisoned — the next ``refresh="inverse"`` update borders garbage.
+    The recover ladder must fall back to a fresh/exact factorization."""
+    lo = model.leaf_lo.at[(0,) * model.leaf_lo.ndim].set(jnp.nan)
+    poisoned = dataclasses.replace(model, leaf_lo=lo)
+    poisoned._leaf_linv = model._leaf_linv
+    return poisoned
+
+
+def poison_plan(plan, *, value: float = float("nan")):
+    """Copy of an OOS plan with one poisoned ``w_leaf`` entry — every
+    query routed to that leaf serves ``value``."""
+    w = plan.w_leaf.at[(0,) * plan.w_leaf.ndim].set(value)
+    return dataclasses.replace(plan, w_leaf=w)
+
+
+def poisoned_model(model):
+    """Copy of a fitted model whose prediction plan is NaN-poisoned: fits
+    clean, serves garbage — exactly what the registry canary gate exists
+    to catch before the swap."""
+    poisoned = dataclasses.replace(model, plan=poison_plan(model.plan))
+    poisoned._leaf_linv = model._leaf_linv
+    return poisoned
+
+
+@dataclasses.dataclass
+class FlakyEngine:
+    """Engine wrapper that misbehaves for the first ``fail_first`` calls
+    (``mode="nan"`` returns NaN, ``mode="raise"`` raises, ``mode="slow"``
+    sleeps ``delay_s`` — a deadline fault) then heals; ``fail_first=-1``
+    never heals.  Wrap a live registry engine with
+    :func:`hijack_live_engine` to model an engine that went bad AFTER
+    the canary gate passed."""
+
+    inner: object
+    fail_first: int = 1
+    mode: str = "nan"
+    delay_s: float = 0.05
+    calls: int = 0
+
+    def __call__(self, queries: Array) -> Array:
+        self.calls += 1
+        failing = self.fail_first < 0 or self.calls <= self.fail_first
+        if failing and self.mode == "raise":
+            raise FloatingPointError("faultinject: engine down")
+        if failing and self.mode == "slow":
+            time.sleep(self.delay_s)
+        z = self.inner(queries)
+        if failing and self.mode == "nan":
+            return jnp.full_like(z, jnp.nan)
+        return z
+
+    @property
+    def stats(self):
+        """Delegate serving counters to the wrapped engine."""
+        return self.inner.stats
+
+
+def hijack_live_engine(registry, wrapper):
+    """Swap the LIVE registry entry's engine for ``wrapper(engine)`` in
+    place — simulates a version that passed its canary and then went bad
+    in production (the serve loop's retry/degraded ladder owns this
+    case, not the publish gate).  Returns the new entry."""
+    with registry._lock:
+        entry = registry._live
+        new = dataclasses.replace(entry, engine=wrapper(entry.engine))
+        registry._versions[entry.version] = new
+        registry._live = new
+    return new

@@ -1,0 +1,636 @@
+"""Chaos suite: every fault class in repro.testing.faultinject is
+DETECTED (a structured NumericalFailure naming the stage), RECOVERED (its
+repro.runtime.recover ladder lands on a working rung) and the recovered
+result still passes the f64 parity gates.  The CI chaos lane runs this
+file under ``REPRO_STRICT_FINITE=1`` on the xla and pallas-interpret
+backends (``REPRO_CHAOS_BACKEND``) and uploads the measured
+detection/recovery matrix (``REPRO_CHAOS_MATRIX``) as an artifact.
+
+Also pins the serving input-validation contract and the CG ε-breakdown
+guard (``repro/solvers/cg.py``): zero-RHS columns, already-converged warm
+starts and exactly-singular operators must produce finite iterates.
+"""
+import dataclasses
+import json
+import os
+import threading
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hmatrix, krr
+from repro.core.kernels_fn import BaseKernel
+from repro.kernels.registry import SolveConfig
+from repro.runtime import health, recover
+from repro.runtime.health import NumericalFailure
+from repro.serving.predict_service import ModelRegistry, PredictEngine
+from repro.serving.serve_loop import KRRServeLoop
+from repro.solvers.cg import pcg
+from repro.testing import faultinject as fi
+
+BACKEND = os.environ.get("REPRO_CHAOS_BACKEND", "xla")
+CFG = SolveConfig(backend=BACKEND,
+                  interpret=True if BACKEND == "pallas" else None,
+                  checks=True)
+
+#: measured per-fault-class outcomes; published as the CI chaos artifact
+#: and asserted complete by the final test in this file.
+MATRIX: dict[str, dict] = {}
+
+
+def record(fault: str, **kw):
+    """Merge one fault class's measured outcome into the matrix."""
+    assert fault in fi.FAULT_CLASSES, f"unknown fault class {fault!r}"
+    MATRIX.setdefault(fault, {}).update(kw)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _publish_matrix():
+    yield
+    path = os.environ.get("REPRO_CHAOS_MATRIX")
+    if path:
+        payload = {
+            "backend": BACKEND,
+            "strict_finite": health.strict_finite_env(),
+            "fault_classes": {
+                name: {"layer": layer, "description": desc,
+                       **MATRIX.get(name, {})}
+                for name, (layer, desc) in fi.FAULT_CLASSES.items()},
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+
+
+@pytest.fixture(scope="module")
+def prob(f64):
+    """256-point f64 regression problem + a fitted model (checks on)."""
+    kx, kw, kn, kq = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(kx, (256, 5), jnp.float64)
+    w = jax.random.normal(kw, (5, 2))
+    y = x @ w + 0.05 * jax.random.normal(kn, (256, 2))
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-8)
+    model = krr.fit(x, y, kernel=ker, lam=1e-2, rank=16, leaf_size=32,
+                    levels=3, solve_config=CFG)
+    queries = jax.random.normal(kq, (64, 5), jnp.float64)
+    return types.SimpleNamespace(x=x, y=y, kernel=ker, model=model,
+                                 queries=queries, lam=1e-2)
+
+
+def _spd_problem(n: int, k: int, seed: int):
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(ka, (n, n), jnp.float64)
+    A = a @ a.T / n + jnp.eye(n, dtype=jnp.float64)
+    b = jax.random.normal(kb, (n, k), jnp.float64)
+    return A, b
+
+
+# ---------------------------------------------------------------------------
+# gating: checks must cost nothing (and fire) exactly when asked
+# ---------------------------------------------------------------------------
+
+def test_checks_gating(monkeypatch, prob):
+    monkeypatch.delenv("REPRO_STRICT_FINITE", raising=False)
+    assert not health.checks_enabled(None)
+    assert not health.checks_enabled(SolveConfig())
+    monkeypatch.setenv("REPRO_STRICT_FINITE", "1")
+    assert health.checks_enabled(None)
+    assert health.checks_enabled(SolveConfig())
+    assert not health.checks_enabled(SolveConfig(checks=False))
+    monkeypatch.delenv("REPRO_STRICT_FINITE")
+    assert health.checks_enabled(SolveConfig(checks=True))
+    # checks-off probes are silent even on poisoned factors
+    bad = fi.poison_factor(prob.model.factors, "u")
+    assert health.probe_factors(bad, SolveConfig(checks=False)) is False
+    # and raise the moment force=True (the guarded-call contract)
+    with pytest.raises(NumericalFailure):
+        health.probe_factors(bad, SolveConfig(checks=False), force=True)
+
+
+# ---------------------------------------------------------------------------
+# build-layer faults: poisoned factors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fault,field,value,stage", [
+    ("factor_nan", "u", float("nan"), "build_cross"),
+    ("factor_inf", "adiag", float("inf"), "build_gram"),
+    ("sigma_nan", "sigma", float("nan"), "build_gram"),
+])
+def test_poisoned_factor_detect_recover(prob, fault, field, value, stage):
+    clean = prob.model.factors
+    bad = fi.poison_factor(clean, field, leaf=1, value=value)
+
+    with pytest.raises(NumericalFailure) as ei:
+        health.probe_factors(bad, CFG)
+    err = ei.value
+    assert err.stage == stage
+    assert err.statistic == "nonfinite_count"
+    assert field in err.detail
+    if field in ("u", "adiag"):
+        assert err.leaf == 1
+    record(fault, detected=True, stage=err.stage)
+
+    repaired, audit = recover.repair_factors(bad, prob.kernel, CFG)
+    assert audit.recovered and not audit.attempts[0].ok
+    # frozen hierarchy + untouched inputs => the repair is parity-exact
+    np.testing.assert_allclose(np.asarray(repaired.u, np.float64),
+                               np.asarray(clean.u, np.float64), atol=1e-9)
+    np.testing.assert_allclose(np.asarray(repaired.adiag, np.float64),
+                               np.asarray(clean.adiag, np.float64),
+                               atol=1e-9)
+    for s_new, s_old in zip(repaired.sigma, clean.sigma):
+        np.testing.assert_allclose(np.asarray(s_new, np.float64),
+                                   np.asarray(s_old, np.float64), atol=1e-9)
+    record(fault, recovered=True, rungs=audit.rungs)
+
+
+def test_repair_factors_is_noop_on_clean_factors(prob):
+    repaired, audit = recover.repair_factors(prob.model.factors, prob.kernel,
+                                             CFG)
+    assert repaired is prob.model.factors
+    assert audit.rungs == ["probe"] and not audit.recovered
+
+
+# ---------------------------------------------------------------------------
+# inversion-layer faults: indefinite Schur complements
+# ---------------------------------------------------------------------------
+
+def test_indefinite_leaf_detect_recover(prob):
+    lam = prob.lam
+    bad = fi.indefinite_leaf(prob.model.factors, leaf=2, shift=5 * lam)
+
+    _, lo = hmatrix.invert_with_leaf(bad, lam, CFG)
+    with pytest.raises(NumericalFailure) as ei:
+        health.probe_leaf_factor(lo, CFG)
+    err = ei.value
+    assert err.stage == "leaf_factor"
+    assert err.statistic == "min_schur_cholesky_diag"
+    assert err.leaf == 2
+    record("indefinite_leaf", detected=True, stage=err.stage)
+
+    g = recover.invert_guarded(bad, lam, CFG, kernel=prob.kernel)
+    assert not g.audit.attempts[0].ok and g.audit.recovered
+    assert g.ridge > lam            # the ridge-escalation rung held
+
+    # parity: the recovered inverse solves ITS operator to oracle accuracy
+    n = bad.x_sorted.shape[0]
+    b = jax.random.normal(jax.random.PRNGKey(7), (n, 2), jnp.float64)
+    alpha = hmatrix.solve_with_inverse(g.factors, g.inverse, b,
+                                       ridge=g.ridge, config=g.config)
+    kd = hmatrix.matvec_dense_reference(
+        g.factors, jnp.eye(n, dtype=jnp.float64))
+    resid = kd @ alpha + g.ridge * alpha - b
+    rel = float(jnp.linalg.norm(resid) / jnp.linalg.norm(b))
+    assert rel < 1e-8
+    record("indefinite_leaf", recovered=True, rungs=g.audit.rungs,
+           parity_rel_residual=rel)
+
+
+def test_bf16_ridge_floor_detect_recover(prob):
+    """PR 7's bf16 ridge floor as a live fault: inversion of bf16-built
+    factors at a ridge far below n0·eps_bf16 NaNs the leaf Schur
+    Cholesky; the ladder's precision-promotion rung (refit_frozen at f32,
+    ORIGINAL ridge) must repair it without inflating the ridge."""
+    # the ridge floor is a PRECISION fault, not a backend fault: the
+    # pallas interpreter upcasts bf16 matmuls to f32 internally, so the
+    # rounding that kills the Schur complement only reproduces through
+    # the xla lane — pin it, keeping the fault class measurable from
+    # every chaos backend
+    cfg = SolveConfig(backend="xla", checks=True, precision="bf16")
+    # jitter far below the bf16 factor error: the λ'-splitting diagonal
+    # no longer masks the rounding, so the Schur complement goes
+    # indefinite at any reasonable ridge — the PR 7 failure, reproduced
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-6)
+    x32 = prob.x.astype(jnp.float32)
+    from repro.core.hck import build_hck
+
+    f = build_hck(x32, levels=3, rank=16, key=jax.random.PRNGKey(1),
+                  kernel=ker, config=cfg)
+    assert health.probe_factors(f, cfg)     # the build itself is finite
+    ridge = 1e-3
+
+    _, lo = hmatrix.invert_with_leaf(f, ridge, cfg)
+    with pytest.raises(NumericalFailure) as ei:
+        health.probe_leaf_factor(lo, cfg)
+    assert ei.value.stage == "leaf_factor"
+    record("bf16_ridge_floor", detected=True, stage=ei.value.stage)
+
+    g = recover.invert_guarded(f, ridge, cfg, kernel=ker, jitter_rungs=0)
+    assert not g.audit.attempts[0].ok
+    assert g.audit.attempts[-1].rung == "promote:f32"
+    assert g.ridge == ridge           # recovered at the ORIGINAL ridge
+
+    assert g.config.precision == "f32"      # follow-up solves promote too
+    n = f.x_sorted.shape[0]
+    b = jax.random.normal(jax.random.PRNGKey(8), (n, 1), jnp.float32)
+    alpha = hmatrix.solve_with_inverse(g.factors, g.inverse, b,
+                                       ridge=g.ridge, config=g.config)
+    assert bool(jnp.isfinite(alpha).all())
+    # f64 oracle gate on the recovered solve
+    f64f = recover._cast_float(g.factors, jnp.float64)
+    kd = hmatrix.matvec_dense_reference(
+        f64f, jnp.eye(n, dtype=jnp.float64))
+    a64 = alpha.astype(jnp.float64)
+    resid = kd @ a64 + g.ridge * a64 - b.astype(jnp.float64)
+    rel = float(jnp.linalg.norm(resid) / jnp.linalg.norm(b))
+    assert rel < 1e-2
+    record("bf16_ridge_floor", recovered=True, rungs=g.audit.rungs,
+           parity_rel_residual=rel)
+
+
+# ---------------------------------------------------------------------------
+# CG ε-breakdown guard (solvers/cg.py) — the pinned edge cases
+# ---------------------------------------------------------------------------
+
+def test_cg_zero_rhs_column_stays_finite(f64):
+    A, b = _spd_problem(24, 3, seed=3)
+    b = b.at[:, 1].set(0.0)
+    res = pcg(lambda v: A @ v, b, tol=1e-10, maxiter=60)
+    assert bool(jnp.isfinite(res.x).all())
+    assert bool(jnp.isfinite(res.residuals).all())
+    np.testing.assert_allclose(np.asarray(res.x[:, 1]), 0.0, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(
+        jnp.linalg.solve(A, b)), atol=1e-7)
+
+
+def test_cg_already_converged_warm_start(f64):
+    A, b = _spd_problem(24, 2, seed=4)
+    x_star = jnp.linalg.solve(A, b)
+    res = pcg(lambda v: A @ v, b, tol=1e-8, maxiter=40, x0=x_star)
+    assert bool(res.converged)
+    assert int(res.iterations) == 0
+    assert bool(jnp.isfinite(res.x).all())
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(x_star),
+                               atol=1e-10)
+
+
+def test_cg_exactly_singular_operator_finite_iterates(f64):
+    c = jax.random.normal(jax.random.PRNGKey(5), (16, 5), jnp.float64)
+    A = c @ c.T                       # rank 5, exactly singular
+    v = jax.random.normal(jax.random.PRNGKey(6), (16, 2), jnp.float64)
+    b_consistent = A @ v
+    res = pcg(lambda u: A @ u, b_consistent, tol=1e-9, maxiter=64)
+    assert bool(jnp.isfinite(res.x).all())
+    assert bool(jnp.isfinite(res.residuals).all())
+    rel = float(jnp.linalg.norm(A @ res.x - b_consistent)
+                / jnp.linalg.norm(b_consistent))
+    assert rel < 1e-7
+    # inconsistent RHS (a null-space component): can never converge, but
+    # the ε guard must keep every iterate finite
+    b_bad = b_consistent + jnp.linalg.svd(A)[0][:, -1:]
+    res2 = pcg(lambda u: A @ u, b_bad, tol=1e-9, maxiter=64)
+    assert bool(jnp.isfinite(res2.x).all())
+    assert bool(jnp.isfinite(res2.residuals).all())
+
+
+# ---------------------------------------------------------------------------
+# solver-layer faults: preconditioner / operator / collective
+# ---------------------------------------------------------------------------
+
+def test_bad_preconditioner_detect_recover(f64):
+    A, b = _spd_problem(48, 2, seed=9)
+    mv = lambda v: A @ v                                       # noqa: E731
+    badM = fi.bad_preconditioner()
+    res = pcg(mv, b, precond=badM, tol=1e-10, maxiter=40, flexible=False)
+    assert not bool(res.converged)
+    with pytest.raises(NumericalFailure) as ei:
+        health.probe_cg(res, tol=1e-10, force=True)
+    assert ei.value.stage == "solvers.cg"
+    assert ei.value.statistic.startswith("residual_")
+    record("cg_bad_preconditioner", detected=True, stage=ei.value.stage,
+           verdict=ei.value.statistic)
+
+    g = recover.pcg_guarded(mv, b, precond=badM,
+                            fresh_precond=lambda: None,
+                            tol=1e-10, maxiter=100, flexible=False)
+    assert not g.audit.attempts[0].ok
+    assert g.audit.attempts[-1].rung == "re-precondition"
+    np.testing.assert_allclose(np.asarray(g.x),
+                               np.asarray(jnp.linalg.solve(A, b)),
+                               atol=1e-7)
+    record("cg_bad_preconditioner", recovered=True, rungs=g.audit.rungs)
+
+
+def test_nonsymmetric_column_detect_recover(f64):
+    A, b = _spd_problem(48, 2, seed=10)
+    mv = lambda v: A @ v                                       # noqa: E731
+    bad_mv = fi.nonsymmetric_column(mv, col=1, eps=2.0)
+    res = pcg(bad_mv, b, tol=1e-10, maxiter=40)
+    assert not bool(res.converged)
+    with pytest.raises(NumericalFailure) as ei:
+        health.probe_cg(res, tol=1e-10, force=True)
+    assert ei.value.stage == "solvers.cg"
+    record("cg_nonsymmetric_column", detected=True, stage=ei.value.stage,
+           verdict=ei.value.statistic)
+
+    # the operator fault is permanent: every CG rung fails, the ladder
+    # terminates at the exact-solve bypass
+    g = recover.pcg_guarded(bad_mv, b, tol=1e-10, maxiter=40,
+                            exact_solve=lambda bb: jnp.linalg.solve(A, bb))
+    assert g.audit.attempts[-1].rung == "exact fallback"
+    assert all(not a.ok for a in g.audit.attempts[:-1])
+    np.testing.assert_allclose(np.asarray(g.x),
+                               np.asarray(jnp.linalg.solve(A, b)),
+                               atol=1e-10)
+    record("cg_nonsymmetric_column", recovered=True, rungs=g.audit.rungs)
+
+
+def test_collective_nan_detect_recover(f64):
+    A, b = _spd_problem(32, 2, seed=11)
+    mv = lambda v: A @ v                                       # noqa: E731
+    bad_dot, state = fi.poisoned_dot(after=3)
+    res = pcg(mv, b, tol=1e-10, maxiter=30, dot=bad_dot)
+    assert state["calls"] > 3         # the fault actually fired at runtime
+    with pytest.raises(NumericalFailure) as ei:
+        health.probe_cg(res, tol=1e-10, force=True)
+    assert ei.value.stage == "solvers.cg"
+    assert ei.value.statistic == "residual_nonfinite"
+    record("collective_nan", detected=True, stage=ei.value.stage)
+
+    bad_dot2, _ = fi.poisoned_dot(after=3)
+    g = recover.pcg_guarded(mv, b, tol=1e-10, maxiter=60, dot=bad_dot2,
+                            fresh_dot=lambda: None)
+    assert not g.audit.attempts[0].ok
+    assert g.audit.attempts[-1].rung == "cold restart"
+    np.testing.assert_allclose(np.asarray(g.x),
+                               np.asarray(jnp.linalg.solve(A, b)),
+                               atol=1e-7)
+    record("collective_nan", recovered=True, rungs=g.audit.rungs)
+
+
+# ---------------------------------------------------------------------------
+# kernel-system faults: tile-DB corruption
+# ---------------------------------------------------------------------------
+
+def test_tile_db_corruption_degrades_and_repairs(tmp_path, monkeypatch):
+    from repro.kernels import autotune
+
+    monkeypatch.setenv("REPRO_TILE_DB", str(tmp_path / "tile_db.json"))
+    path = fi.corrupt_tile_db()
+    db = autotune.get_db()
+    assert db.corrupt                 # detected, flagged
+    assert db.entries == {}           # degraded to heuristics, no raise
+    record("tile_db_corruption", detected=True, stage="kernels.autotune")
+
+    # a consult on the corrupt DB must fall back to the heuristic path
+    blk = autotune.lookup_block("build_gram", n0=64, r=16, k=16)
+    assert blk is None or isinstance(blk, int)
+
+    # the next save rewrites the file; a reload sees a healthy DB
+    db.put("probe", {"block_n0": 32})
+    db.save()
+    autotune.reset_db()
+    db2 = autotune.get_db()
+    assert not db2.corrupt
+    assert db2.get("probe") == {"block_n0": 32}
+    record("tile_db_corruption", recovered=True,
+           rungs=["degrade-to-heuristics", "save-rewrites"])
+    autotune.reset_db()               # drop the tmp-path singleton
+
+
+# ---------------------------------------------------------------------------
+# update-layer faults: poisoned cached inverse
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def arrivals(prob):
+    kx, kn = jax.random.split(jax.random.PRNGKey(13))
+    x_new = jax.random.normal(kx, (16, 5), jnp.float64)
+    w = jnp.linalg.lstsq(prob.x, prob.y)[0]
+    y_new = x_new @ w + 0.05 * jax.random.normal(kn, (16, 2))
+    return x_new, y_new
+
+
+def test_update_poisoned_cache_detect(prob, arrivals):
+    x_new, y_new = arrivals
+    bad = fi.poison_cached_inverse(prob.model)
+    with pytest.raises(NumericalFailure) as ei:
+        bad.update(x_new, y_new, refresh="inverse")
+    assert ei.value.stage == "leaf_update"
+    assert ei.value.leaf == 0
+    record("update_poisoned_cache", detected=True, stage=ei.value.stage)
+
+
+def test_update_poisoned_cache_recover_parity(prob, arrivals):
+    x_new, y_new = arrivals
+    bad = fi.poison_cached_inverse(prob.model)
+    m_rec, info, audit = recover.update_guarded(bad, x_new, y_new,
+                                                refresh="inverse")
+    assert not audit.attempts[0].ok and audit.recovered
+    assert audit.attempts[-1].rung.startswith("re-precondition")
+    assert bool(info.converged)
+
+    # parity: the recovered model must match the clean model's update
+    # bit-for-bit in routing and to f64 round-off in predictions
+    m_clean, _ = prob.model.update(x_new, y_new, refresh="inverse")
+    z_rec = m_rec.predict(prob.queries)
+    z_clean = m_clean.predict(prob.queries)
+    assert bool(jnp.isfinite(z_rec).all())
+    np.testing.assert_allclose(np.asarray(z_rec), np.asarray(z_clean),
+                               atol=1e-8)
+    record("update_poisoned_cache", recovered=True, rungs=audit.rungs)
+
+
+def test_update_refresh_exact_matches_inverse(prob, arrivals):
+    """refresh='exact' (the ladder's terminal rung) is numerically
+    independent of all cached state yet parity-exact with the bordered
+    path."""
+    x_new, y_new = arrivals
+    m_exact, info = prob.model.update(x_new, y_new, refresh="exact")
+    m_inv, _ = prob.model.update(x_new, y_new, refresh="inverse")
+    assert bool(info.converged) and info.iterations == 0
+    np.testing.assert_allclose(np.asarray(m_exact.predict(prob.queries)),
+                               np.asarray(m_inv.predict(prob.queries)),
+                               atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# serving faults: canary gate, transactional publish, degraded mode
+# ---------------------------------------------------------------------------
+
+def _registry(prob, **kw):
+    kw.setdefault("canary", prob.model.factors.x_sorted[:32])
+    kw.setdefault("canary_tol", 0.5)
+    kw.setdefault("min_bucket", 32)
+    kw.setdefault("max_bucket", 256)
+    return ModelRegistry(prob.model, **kw)
+
+
+def _snapshot(reg):
+    return (reg.live_version, tuple(reg.versions()), reg._next,
+            id(reg.live), id(reg.live.engine), reg.stats["swaps"])
+
+
+def test_canary_blocks_poisoned_model_under_live_traffic(prob, arrivals):
+    x_new, y_new = arrivals
+    reg = _registry(prob)
+    loop = KRRServeLoop(reg)
+    stop = threading.Event()
+    errors: list = []
+
+    def worker():
+        k = jax.random.PRNGKey(17)
+        while not stop.is_set():
+            k, sub = jax.random.split(k)
+            q = jax.random.normal(sub, (48, 5), jnp.float64)
+            try:
+                loop.serve(q)
+            except Exception as e:    # surfaced to the main thread
+                errors.append(e)
+                return
+
+    t = threading.Thread(target=worker)
+    t.start()
+    try:
+        m_up, _ = prob.model.update(x_new, y_new, refresh="inverse")
+        bad = fi.poisoned_model(m_up)
+        before = _snapshot(reg)
+        with pytest.raises(NumericalFailure) as ei:
+            reg.publish(bad)
+        assert ei.value.stage == "serving.canary"
+        record("serving_poisoned_model", detected=True, stage=ei.value.stage)
+        # auto-rollback == the swap never happened: bitwise-unchanged state
+        assert _snapshot(reg) == before
+        assert reg.stats["canary_rejects"] == 1
+        assert reg.stats["last_reject"]["stage"] == "serving.canary"
+        # the clean update still publishes under the same traffic
+        v2 = reg.publish(m_up)
+        assert reg.live_version == v2
+        record("serving_poisoned_model", recovered=True,
+               rungs=["canary-reject", "publish-clean"])
+    finally:
+        stop.set()
+        t.join(timeout=30)
+    assert not errors
+    assert len(loop.responses) > 0
+    for r in loop.responses:          # no request ever saw a non-finite z
+        assert bool(jnp.isfinite(r.z).all())
+        assert not r.degraded
+    assert set(loop.versions_served) <= {1, 2}
+
+
+def test_canary_rejects_drifted_but_finite_model(prob):
+    reg = _registry(prob)
+    drifted = dataclasses.replace(
+        prob.model, plan=dataclasses.replace(
+            prob.model.plan, w_leaf=prob.model.plan.w_leaf * 3.0))
+    with pytest.raises(NumericalFailure) as ei:
+        reg.publish(drifted, canary_tol=1e-3)
+    assert ei.value.statistic == "canary_drift"
+    assert reg.live_version == 1
+
+
+def test_update_and_publish_is_transactional(prob, arrivals):
+    x_new, y_new = arrivals
+    # v1's model carries a poisoned cached inverse: the update itself
+    # fails midway, AFTER the registry call started
+    poisoned = types.SimpleNamespace(
+        **{**vars(prob), "model": fi.poison_cached_inverse(prob.model)})
+    reg = _registry(poisoned)
+    before = _snapshot(reg)
+    with pytest.raises(NumericalFailure):
+        reg.update_and_publish(x_new, y_new, refresh="inverse")
+    assert _snapshot(reg) == before   # registry state bitwise unchanged
+
+    # poisoned labels defeat EVERY rung (no refresh mode can fix NaN
+    # targets): the guarded ladder runs dry — still transactional
+    with pytest.raises(recover.RecoveryExhausted):
+        reg.update_and_publish(x_new, y_new * jnp.nan, refresh="inverse",
+                               guarded=True)
+    assert _snapshot(reg) == before
+
+    # guarded=True climbs the recovery ladder and commits
+    v2, info = reg.update_and_publish(x_new, y_new, refresh="inverse",
+                                      guarded=True)
+    assert reg.live_version == v2 and bool(info.converged)
+    z, v = reg.predict(prob.queries)
+    assert v == v2 and bool(jnp.isfinite(z).all())
+
+
+def test_serve_loop_degrades_to_last_good_version(prob, arrivals):
+    x_new, y_new = arrivals
+    reg = _registry(prob)
+    loop = KRRServeLoop(reg, max_retries=1)
+    q = prob.queries[:32]
+    assert loop.serve(q).version == 1           # v1 becomes last-good
+
+    m_up, _ = prob.model.update(x_new, y_new, refresh="inverse")
+    reg.publish(m_up)
+    # v2 passed its canary, then goes bad in production (post-publish)
+    fi.hijack_live_engine(
+        reg, lambda e: fi.FlakyEngine(e, fail_first=-1, mode="nan"))
+    out = loop.serve(q)
+    assert out.degraded and out.version == 1
+    assert bool(jnp.isfinite(out.z).all())
+    assert "nonfinite" in out.failure
+    st = loop.stats()
+    assert st["degraded_batches"] == 1
+    assert st["failures"] == 2                  # max_retries + 1 attempts
+    record("serving_flaky_engine", detected=True, stage="serve")
+    record("serving_flaky_engine", recovered=True,
+           rungs=["retry", "degrade-to-last-good"])
+
+
+def test_serve_loop_retry_heals_transient_fault(prob):
+    reg = _registry(prob)
+    loop = KRRServeLoop(reg, max_retries=2)
+    fi.hijack_live_engine(
+        reg, lambda e: fi.FlakyEngine(e, fail_first=1, mode="raise"))
+    out = loop.serve(prob.queries[:32])
+    assert not out.degraded and out.retries == 1
+    assert "engine down" in out.failure
+    assert bool(jnp.isfinite(out.z).all())
+    assert loop.stats()["failures"] == 1
+
+
+def test_serve_loop_deadline_miss_retries(prob):
+    reg = _registry(prob)
+    loop = KRRServeLoop(reg)
+    loop.serve(prob.queries[:32])               # warm the bucket first
+    fi.hijack_live_engine(
+        reg, lambda e: fi.FlakyEngine(e, fail_first=1, mode="slow",
+                                      delay_s=0.5))
+    loop.deadline_s = 0.25
+    out = loop.serve(prob.queries[:32])
+    assert not out.degraded and out.retries == 1
+    assert loop.stats()["deadline_misses"] == 1
+    assert "deadline_s" in out.failure
+
+
+# ---------------------------------------------------------------------------
+# serving input validation (front-door contract)
+# ---------------------------------------------------------------------------
+
+def test_serving_input_validation(prob):
+    engine = PredictEngine(prob.model.factors, prob.model.plan, prob.kernel,
+                           config=CFG, min_bucket=32, max_bucket=256)
+    with pytest.raises(ValueError, match="2-D"):
+        engine.apply(prob.queries[0])
+    with pytest.raises(ValueError, match="0 features"):
+        engine.apply(jnp.zeros((4, 0), jnp.float64))
+    with pytest.raises(ValueError, match="feature dim"):
+        engine.apply(jnp.zeros((4, 3), jnp.float64))
+    with pytest.raises(ValueError, match="dtype"):
+        engine.apply(prob.queries.astype(jnp.float32))
+    loop = KRRServeLoop(_registry(prob))
+    with pytest.raises(ValueError, match="micro_batch"):
+        loop.run(prob.queries, 0)
+    with pytest.raises(ValueError, match="micro_batch"):
+        loop.run(prob.queries, -4)
+    # a malformed batch is a caller bug: it must NOT be retried/degraded
+    with pytest.raises(ValueError, match="feature dim"):
+        loop.serve(jnp.zeros((4, 3), jnp.float64))
+
+
+# ---------------------------------------------------------------------------
+# the matrix itself: every declared fault class was measured
+# ---------------------------------------------------------------------------
+
+def test_zz_fault_matrix_covers_every_class():
+    missing = set(fi.FAULT_CLASSES) - set(MATRIX)
+    assert not missing, f"fault classes without measurements: {missing}"
+    for name, row in MATRIX.items():
+        assert row.get("detected"), f"{name} was never detected"
+        assert row.get("recovered"), f"{name} was never recovered"
