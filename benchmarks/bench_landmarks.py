@@ -1,0 +1,233 @@
+"""Landmark-policy benchmark: accuracy-vs-rank curves per policy
+(uniform / k-means / leverage), per-policy build overhead, budgeted
+adaptive-rank summaries, and two hard gates, emitted as
+machine-readable BENCH_landmarks.json.
+
+The problem is DESIGNED to punish uniform landmarks: a heavily
+imbalanced Gaussian mixture (one tight blob holds most of the mass,
+the rest spread wide) with a smooth multi-bump target — uniform draws
+waste most of their rank re-sampling the dense blob, while k-means
+medoids and leverage scores spread landmarks where the function varies.
+
+Gates (nonzero exit on miss):
+  * rank-efficiency: the best data-aware policy (k-means or leverage)
+    must reach the uniform policy's accuracy at the TOP of the rank
+    grid while using a rank at least 2x smaller
+    (``rmse_policy(r_top/2) <= tol_factor * rmse_uniform(r_top)``);
+  * uniform bitwise: ``build_hck(policy="uniform")`` must equal the
+    no-policy build with ZERO factor difference in f64 (the default
+    path is the historical build, bit for bit);
+  * budget conservation: the budgeted build's realized ranks must sum
+    to at most the requested budget.
+
+Usage:
+  python benchmarks/bench_landmarks.py                 # full sweep
+  python benchmarks/bench_landmarks.py --smoke         # CI gate (tiny, f64)
+  python benchmarks/bench_landmarks.py --n 8192 --rank-grid 32,64,128,256
+"""
+from __future__ import annotations
+
+try:                     # package import (python -m benchmarks.run)
+    from benchmarks import common
+except ImportError:      # script run: benchmarks/ is sys.path[0]
+    import common
+# common sets the platform/XLA flags before the first jax import below
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import krr
+from repro.core.hck import build_hck
+from repro.core.kernels_fn import BaseKernel
+
+POLICIES = ("uniform", "kmeans", "leverage")
+
+
+def _mixture_problem(n: int, d: int, n_test: int, key):
+    """Imbalanced blob mixture + smooth multi-bump target (noiseless).
+
+    70% of the points live in one tight blob (std 0.05); the remaining
+    30% split across 7 wide blobs (std 0.6) spread over [-4, 4]^d.  The
+    target is a sum of RBF bumps centered on EVERY blob, so accuracy
+    requires landmarks near all of them — exactly what a uniform draw
+    under-covers.
+    """
+    kc, kx, kt, ka = jax.random.split(key, 4)
+    centers = 4.0 * jax.random.normal(kc, (8, d), jnp.float64)
+    stds = jnp.asarray([0.05] + [0.6] * 7, jnp.float64)
+    probs = jnp.asarray([0.70] + [0.30 / 7] * 7, jnp.float64)
+
+    def sample(k, m):
+        k1, k2 = jax.random.split(k)
+        comp = jax.random.choice(k1, 8, (m,), p=probs)
+        return (centers[comp]
+                + stds[comp, None] * jax.random.normal(k2, (m, d),
+                                                       jnp.float64))
+
+    amps = 1.0 + jax.random.uniform(ka, (8,), jnp.float64)
+
+    def target(pts):
+        d2 = jnp.sum((pts[:, None, :] - centers[None, :, :]) ** 2, axis=-1)
+        return jnp.sum(amps * jnp.exp(-d2 / (2.0 * 1.0 ** 2)), axis=-1)
+
+    x = sample(kx, n)
+    xt = sample(kt, n_test)
+    return x, target(x), xt, target(xt)
+
+
+def _timeit(fn, repeats: int = 3):
+    out = fn()
+    jax.block_until_ready(out)          # compile outside the timed region
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def _rmse(a, b) -> float:
+    return float(jnp.sqrt(jnp.mean((a - b) ** 2)))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny f64 problem + CI gates")
+    ap.add_argument("--n", type=int, default=16384)
+    ap.add_argument("--n-test", type=int, default=1024)
+    ap.add_argument("--d", type=int, default=3)
+    ap.add_argument("--rank-grid", default="32,64,128,256")
+    ap.add_argument("--lam", type=float, default=1e-6)
+    ap.add_argument("--sigma", type=float, default=1.0)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--tol-factor", type=float, default=1.05,
+                    help="slack on the rank-efficiency gate")
+    ap.add_argument("--out", default="BENCH_landmarks.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.n, args.n_test, args.d = 2048, 512, 3
+        args.rank_grid = "16,32,64"
+        args.repeats = 1
+
+    jax.config.update("jax_enable_x64", True)   # gates run in f64
+    grid = [int(r) for r in args.rank_grid.split(",")]
+    ker = BaseKernel("gaussian", sigma=args.sigma, jitter=1e-8)
+    x, y, xt, yt = _mixture_problem(args.n, args.d, args.n_test,
+                                    jax.random.PRNGKey(0))
+
+    report = {
+        "problem": {"n": args.n, "n_test": args.n_test, "d": args.d,
+                    "rank_grid": grid, "lam": args.lam,
+                    "sigma": args.sigma, "smoke": args.smoke},
+        "device": str(jax.devices()[0]),
+        "platform": common.platform_record(jnp.dtype(jnp.float64)),
+        "results": [],
+        "checks": {},
+    }
+
+    # --- accuracy-vs-rank curves + build overhead per policy -------------
+    # The tree is PINNED to the top-rank geometry (same leaf_size, same
+    # levels for every point on the curve) so the sweep varies ONLY the
+    # landmark count per node — otherwise krr.fit would re-derive the
+    # depth from the rank and the curves would measure tree shape, not
+    # landmark placement.
+    from repro.core.partition import auto_levels_ceil
+    r_top = grid[-1]
+    levels = max(1, auto_levels_ceil(args.n, r_top))
+    rmse = {p: {} for p in POLICIES}
+    for policy in POLICIES:
+        curve = []
+        for r in grid:
+            t_fit, model = _timeit(
+                lambda r=r, p=policy: krr.fit(
+                    x, y, kernel=ker, lam=args.lam, rank=r,
+                    leaf_size=r_top, levels=levels,
+                    key=jax.random.PRNGKey(1), landmarks=p),
+                repeats=args.repeats)
+            err = _rmse(model.predict(xt), yt)
+            rmse[policy][r] = err
+            curve.append({"rank": r, "rmse": err, "fit_s": t_fit})
+            print(f"[{policy:>8}] r={r:4d}  rmse {err:.4e}  "
+                  f"fit {t_fit:6.2f} s")
+        report["results"].append({"policy": policy, "curve": curve})
+    for entry in report["results"]:
+        base = next(e for e in report["results"]
+                    if e["policy"] == "uniform")
+        for pt, upt in zip(entry["curve"], base["curve"]):
+            pt["build_overhead_vs_uniform"] = (
+                pt["fit_s"] / max(upt["fit_s"], 1e-9))
+
+    # --- gate 1: rank efficiency (>= 2x reduction at uniform accuracy) ---
+    r_top, r_half = grid[-1], grid[-1] // 2
+    if r_half not in rmse["uniform"]:
+        r_half = grid[-2]               # nearest grid point below r_top
+    target_err = args.tol_factor * rmse["uniform"][r_top]
+    best_policy, best_err = min(
+        ((p, rmse[p][r_half]) for p in ("kmeans", "leverage")),
+        key=lambda t: t[1])
+    eff_pass = best_err <= target_err
+    report["checks"]["rank_efficiency"] = {
+        "uniform_rank": r_top, "uniform_rmse": rmse["uniform"][r_top],
+        "policy": best_policy, "policy_rank": r_half,
+        "policy_rmse": best_err, "tol_factor": args.tol_factor,
+        "rank_reduction": r_top / r_half, "pass": eff_pass,
+    }
+    print(f"[  gate] {best_policy} r={r_half} rmse {best_err:.4e} vs "
+          f"uniform r={r_top} rmse {rmse['uniform'][r_top]:.4e} "
+          f"({r_top / r_half:.0f}x fewer landmarks)  "
+          f"{'PASS' if eff_pass else 'FAIL'}")
+
+    # --- gate 2: uniform policy is the historical build, bitwise ---------
+    gn = min(args.n, 2048)
+    levels = max(1, (gn // max(grid[0], 1)).bit_length() - 1)
+    key = jax.random.PRNGKey(2)
+    f0 = build_hck(x[:gn], levels=levels, rank=grid[0], key=key, kernel=ker)
+    f1 = build_hck(x[:gn], levels=levels, rank=grid[0], key=key, kernel=ker,
+                   policy="uniform")
+    diffs = [jnp.max(jnp.abs(a - b))
+             for a, b in zip(jax.tree_util.tree_leaves(f0),
+                             jax.tree_util.tree_leaves(f1))]
+    bit_err = float(jnp.max(jnp.stack(diffs)))
+    bit_pass = bit_err == 0.0
+    report["checks"]["uniform_bitwise"] = {
+        "gate_n": gn, "levels": levels, "rank": grid[0],
+        "max_factor_diff": bit_err, "pass": bit_pass,
+    }
+    print(f"[  gate] uniform-policy bitwise: max factor diff {bit_err:.1e}"
+          f"  {'PASS' if bit_pass else 'FAIL'}")
+
+    # --- gate 3: budgeted adaptive rank conserves the budget -------------
+    nodes = sum(1 << lvl for lvl in range(levels))
+    budget = nodes * max(grid[0] // 2, 8)
+    fb = build_hck(x[:gn], levels=levels, rank=grid[0], key=key, kernel=ker,
+                   rank_budget=budget)
+    s = fb.ranks
+    bud_pass = s.total <= budget
+    report["checks"]["budget_conservation"] = {
+        "budget": budget, "nodes": nodes, "rank_min": s.min,
+        "rank_max": s.max, "rank_total": s.total, "pass": bud_pass,
+    }
+    print(f"[  gate] budget {budget}: realized ranks "
+          f"min={s.min} max={s.max} total={s.total}  "
+          f"{'PASS' if bud_pass else 'FAIL'}")
+
+    ok = eff_pass and bit_pass and bud_pass
+    report["pass"] = ok
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"[  done] wrote {args.out}  overall "
+          f"{'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,7 +20,7 @@ import time
 
 #: CI smoke gates: --smoke <name> -> bench_<name>.py --smoke
 SMOKE_BENCHES = ("solve", "oos", "build", "sweep", "cg", "dist", "update",
-                 "roofline")
+                 "landmarks", "roofline")
 
 #: smoke benches whose gate lives outside the bench_<name>.py convention
 SMOKE_SCRIPTS = {"roofline": "roofline_report.py"}

@@ -34,6 +34,7 @@ the Theorem-4 test.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 
@@ -50,6 +51,10 @@ from repro.kernels.registry import (DEFAULT_CONFIG, SolveConfig, get_impl,
 Array = jax.Array
 
 
+#: min/max per-node rank and the global Σ_nodes r_node of a factor set.
+RankSummary = collections.namedtuple("RankSummary", ("min", "max", "total"))
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class HCKFactors:
@@ -63,6 +68,9 @@ class HCKFactors:
     w: tuple                   # levels 1..L-1: (2**l, r, r)
     u: Array                   # (2**L, n0, r)
     adiag: Array               # (2**L, n0, n0)
+    rank_mask: tuple | None = None   # levels 0..L-1: (2**l, r) prefix masks
+    #                                  (None = every slot active; see
+    #                                  repro.landmarks.budget)
 
     # -- static metadata -------------------------------------------------
     @property
@@ -82,8 +90,29 @@ class HCKFactors:
 
     @property
     def rank(self) -> int:
-        """Landmarks per node r (0 for a 0-level build)."""
+        """Pad-bucket rank r: landmark SLOTS per node (0 for a 0-level
+        build).  With a rank budget this is the padded bucket every
+        stacked factor is shaped to — the shape-relevant quantity all
+        engines consume; per-node ACTIVE ranks live in :attr:`ranks`."""
         return self.landmarks[0].shape[1] if self.landmarks else 0
+
+    @property
+    def ranks(self) -> RankSummary:
+        """Per-node active-rank summary: (min, max, Σ over all nodes).
+
+        Uniform-rank factors report min == max == :attr:`rank`; budgeted
+        factors count the active prefix of each node's
+        :attr:`rank_mask`.  Host-side metadata (concrete ints).
+        """
+        n_nodes = sum(1 << lvl for lvl in range(self.levels))
+        if not self.landmarks:
+            return RankSummary(0, 0, 0)
+        if self.rank_mask is None:
+            return RankSummary(self.rank, self.rank, self.rank * n_nodes)
+        per = jnp.concatenate(
+            [jnp.sum(m, axis=1) for m in self.rank_mask])
+        return RankSummary(int(jnp.min(per)), int(jnp.max(per)),
+                           int(jnp.sum(per)))
 
     @property
     def n(self) -> int:
@@ -94,7 +123,7 @@ class HCKFactors:
         """Pytree protocol: all fields are children."""
         leaves = (
             self.x_sorted, self.tree, self.landmarks, self.sigma,
-            self.sigma_cho, self.w, self.u, self.adiag,
+            self.sigma_cho, self.w, self.u, self.adiag, self.rank_mask,
         )
         return leaves, None
 
@@ -123,6 +152,62 @@ def _sample_landmarks(key: Array, blocks: Array, r: int) -> Array:
     idx = landmark_indices(key, bsz, m, r)                            # (B, r)
     flat = (idx + jnp.arange(bsz)[:, None] * m).reshape(-1)
     return jnp.take(blocks.reshape(bsz * m, d), flat, axis=0).reshape(bsz, r, d)
+
+
+def _draw_level_landmarks(key: Array, x_sorted: Array, levels: int,
+                          rank: int, policy, metric: str,
+                          config: SolveConfig | None) -> list:
+    """Per-level landmark draw shared by the build and sweep engines.
+
+    Consumes one ``jax.random.split`` per level in the pre-policy order —
+    the key tree all parity gates pin.  ``policy=None``/uniform routes
+    through the exact pre-existing :func:`_sample_landmarks` call (bitwise
+    guarantee); other policies select per-node row indices on the same
+    reshaped blocks and reuse the identical flat-take gather.
+    """
+    from repro.landmarks.policy import UniformPolicy, gather_block_rows
+
+    n, d = x_sorted.shape
+    landmarks = []
+    for lvl in range(levels):
+        key, sub = jax.random.split(key)
+        blocks = x_sorted.reshape(1 << lvl, n >> lvl, d)
+        if policy is None or isinstance(policy, UniformPolicy):
+            landmarks.append(_sample_landmarks(sub, blocks, rank))
+        else:
+            idx = policy.select(sub, blocks, rank, metric=metric,
+                                config=config)
+            landmarks.append(gather_block_rows(blocks, idx))
+    return landmarks
+
+
+def _apply_rank_masks(rank_mask, sigma, sigma_cho, sigma_li):
+    """Identity-pad the middle factors to their active-prefix ranks.
+
+    For prefix masks the Cholesky leading-submatrix property makes the
+    padded ``(sigma, cho, linv)`` EXACTLY the factors of the truncated
+    Gram — no refactorization (see ``repro.landmarks.budget``).  Must run
+    BEFORE any build_cross launch: U/W built against the full ``linv``
+    cannot be column-masked after the fact, since the leading block of
+    ``Sigma_full^{-1}`` is not ``(Sigma_aa)^{-1}``.
+    """
+    from repro.landmarks.budget import masked_identity_pad
+
+    sigma = tuple(masked_identity_pad(s, mk)
+                  for s, mk in zip(sigma, rank_mask))
+    sigma_cho = tuple(masked_identity_pad(c, mk)
+                      for c, mk in zip(sigma_cho, rank_mask))
+    sigma_li = [masked_identity_pad(li, mk)
+                for li, mk in zip(sigma_li, rank_mask)]
+    return sigma, sigma_cho, sigma_li
+
+
+def _mask_transfer_ops(w: tuple, rank_mask: tuple) -> tuple:
+    """Zero W rows/cols touching inactive slots (child rows, parent cols)."""
+    return tuple(
+        w[lvl - 1] * rank_mask[lvl][:, :, None]
+        * jnp.repeat(rank_mask[lvl - 1], 2, axis=0)[:, None, :]
+        for lvl in range(1, len(rank_mask)))
 
 
 def _stage_build_gram(blocks: Array, kernel: BaseKernel,
@@ -268,7 +353,7 @@ def _transfer_ops(landmarks: tuple, sigma_li: list, kernel: BaseKernel,
 @functools.partial(
     jax.jit,
     static_argnames=("levels", "rank", "method", "shared_landmarks", "kernel",
-                     "config"),
+                     "config", "policy", "rank_budget"),
 )
 def build_hck(
     x: Array,
@@ -280,6 +365,8 @@ def build_hck(
     method: str = "rp",
     shared_landmarks: bool = False,
     config: SolveConfig | None = None,
+    policy=None,
+    rank_budget: int | None = None,
 ) -> HCKFactors:
     """Partition ``x`` and instantiate all HCK factors (batched engine).
 
@@ -306,12 +393,25 @@ def build_hck(
     config:  :class:`~repro.kernels.registry.SolveConfig` selecting the
              stage backends (``backend``, ``interpret``, ``leaf_block``
              are honored); None = DEFAULT_CONFIG ("auto").
+    policy:  landmark-selection policy — None/"uniform" (bitwise-identical
+             to the pre-policy engine), "kmeans"/"leverage", or a
+             :class:`~repro.landmarks.policy.LandmarkPolicy` instance.
+             The partition is drawn BEFORE any landmark key split, so all
+             policies share one hierarchy.
+    rank_budget: optional global rank budget Σ_nodes r_node <= budget,
+             allocated per node proportional to landmark-Gram spectral
+             mass and realized as prefix masks over the ``rank`` pad
+             bucket (``HCKFactors.rank_mask``; see
+             ``repro.landmarks.budget``).  None = full rank everywhere.
 
     Returns
     -------
     :class:`HCKFactors` with all per-level factor stacks.
     """
+    from repro.landmarks.policy import get_policy
+
     config = config if config is not None else DEFAULT_CONFIG
+    policy = get_policy(policy)
     n, d = x.shape
     n_leaves = 1 << levels
     if n % n_leaves != 0:
@@ -319,16 +419,17 @@ def build_hck(
     n0 = n // n_leaves
     if rank > n0:
         raise ValueError(f"rank {rank} exceeds leaf size {n0} (paper §4.4)")
+    if rank_budget is not None and levels == 0:
+        raise ValueError("rank_budget requires levels >= 1 "
+                         "(a 0-level build has no low-rank factors)")
 
     kpart, key = jax.random.split(key)
     x_sorted, tree = build_partition(x, levels, kpart, method=method)
 
-    # --- landmarks: uniform subsample of each internal node's block ------
-    landmarks = []
-    for lvl in range(levels):
-        key, sub = jax.random.split(key)
-        blocks = x_sorted.reshape(1 << lvl, n // (1 << lvl), d)
-        landmarks.append(_sample_landmarks(sub, blocks, rank))
+    # --- landmarks: per-node subsample under the selection policy --------
+    landmarks = _draw_level_landmarks(
+        key, x_sorted, levels, rank, policy,
+        KERNEL_METRIC.get(kernel.name, "l2"), config)
     if shared_landmarks and levels > 0:
         landmarks = _broadcast_shared_landmarks(landmarks, rank, d)
     landmarks = tuple(landmarks)
@@ -337,6 +438,17 @@ def build_hck(
     # (build_gram stage; the inverse Cholesky factor is computed once per
     # node so every downstream cross block is two GEMMs — see sigma_linv)
     sigma, sigma_cho, sigma_li = _middle_factors(landmarks, kernel, config)
+
+    # --- budgeted adaptive per-node rank: prefix-mask the middle factors
+    # BEFORE any cross launch so U/W are built against the truncated
+    # Sigma^{-1} (see _apply_rank_masks)
+    rank_mask = None
+    if rank_budget is not None:
+        from repro.landmarks.budget import allocate_rank_masks
+
+        rank_mask = allocate_rank_masks(sigma, rank_budget, rank)
+        sigma, sigma_cho, sigma_li = _apply_rank_masks(
+            rank_mask, sigma, sigma_cho, sigma_li)
 
     # --- leaf factors (build_gram without Cholesky + build_cross) --------
     leaves = x_sorted.reshape(n_leaves, n0, d)
@@ -355,7 +467,11 @@ def build_hck(
 
     # --- transfer operators W at levels 1..L-1 (build_cross stage) -------
     w = _transfer_ops(landmarks, sigma_li, kernel, config)
-    return HCKFactors(x_sorted, tree, landmarks, sigma, sigma_cho, w, u, adiag)
+    if rank_mask is not None:
+        u = u * jnp.repeat(rank_mask[-1], 2, axis=0)[:, None, :]
+        w = _mask_transfer_ops(w, rank_mask)
+    return HCKFactors(x_sorted, tree, landmarks, sigma, sigma_cho, w, u,
+                      adiag, rank_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -429,9 +545,29 @@ class SweepPlan:
         return cls(*children, metric=aux)
 
 
+def _plan_tiles(x_sorted, tree, landmarks, metric, levels, rank, n0):
+    """Distance tiles for a fixed hierarchy + landmark set -> SweepPlan."""
+    from repro.kernels.build_stage.ref import pairwise_dist_ref
+
+    n_leaves = 1 << levels
+    d = x_sorted.shape[1]
+    lm_self = tuple(pairwise_dist_ref(lm, lm, metric) for lm in landmarks)
+    lm_cross = tuple(
+        pairwise_dist_ref(
+            landmarks[lvl].reshape(1 << (lvl - 1), 2 * rank, d),
+            landmarks[lvl - 1], metric)
+        for lvl in range(1, levels))
+    leaves = x_sorted.reshape(n_leaves, n0, d)
+    leaf_self = pairwise_dist_ref(leaves, leaves, metric)
+    leaf_cross = pairwise_dist_ref(
+        leaves.reshape(n_leaves // 2, 2 * n0, d), landmarks[-1], metric)
+    return SweepPlan(x_sorted, tree, landmarks, lm_self, lm_cross,
+                     leaf_self, leaf_cross, metric=metric)
+
+
 @functools.partial(
     jax.jit, static_argnames=("levels", "rank", "method", "shared_landmarks",
-                              "name"),
+                              "name", "policy", "config"),
 )
 def build_sweep_plan(
     x: Array,
@@ -442,6 +578,8 @@ def build_sweep_plan(
     name: str = "gaussian",
     method: str = "rp",
     shared_landmarks: bool = False,
+    policy=None,
+    config: SolveConfig | None = None,
 ) -> SweepPlan:
     """Partition once and cache all bandwidth-independent distance tiles.
 
@@ -452,10 +590,17 @@ def build_sweep_plan(
     ``name``'s metric.  O(n d log(n/r)) partition + O(n (n0 + r)) distance
     entries, all reused across the whole (σ, λ) grid.
 
+    ``policy`` adds the sweep's LANDMARK-POLICY axis: selection is
+    σ-independent by design (see ``repro.landmarks.policy``), so a plan
+    per policy shares the hierarchy — :func:`replan_policy` re-draws the
+    landmarks of an existing plan without re-partitioning.  ``config``
+    only steers the policy's inner ``policy_dist`` stage (unused for
+    uniform).
+
     ``levels`` must be >= 1 (a 0-level build is one dense block with no
     σ-independent structure worth caching — call :func:`build_hck`).
     """
-    from repro.kernels.build_stage.ref import pairwise_dist_ref
+    from repro.landmarks.policy import get_policy
 
     if name not in KERNEL_METRIC:
         raise ValueError(
@@ -476,27 +621,46 @@ def build_sweep_plan(
     kpart, key = jax.random.split(key)
     x_sorted, tree = build_partition(x, levels, kpart, method=method)
 
-    landmarks = []
-    for lvl in range(levels):
-        key, sub = jax.random.split(key)
-        blocks = x_sorted.reshape(1 << lvl, n // (1 << lvl), d)
-        landmarks.append(_sample_landmarks(sub, blocks, rank))
+    landmarks = _draw_level_landmarks(key, x_sorted, levels, rank,
+                                      get_policy(policy), metric, config)
     if shared_landmarks:
         landmarks = _broadcast_shared_landmarks(landmarks, rank, d)
     landmarks = tuple(landmarks)
+    return _plan_tiles(x_sorted, tree, landmarks, metric, levels, rank, n0)
 
-    lm_self = tuple(pairwise_dist_ref(lm, lm, metric) for lm in landmarks)
-    lm_cross = tuple(
-        pairwise_dist_ref(
-            landmarks[lvl].reshape(1 << (lvl - 1), 2 * rank, d),
-            landmarks[lvl - 1], metric)
-        for lvl in range(1, levels))
-    leaves = x_sorted.reshape(n_leaves, n0, d)
-    leaf_self = pairwise_dist_ref(leaves, leaves, metric)
-    leaf_cross = pairwise_dist_ref(
-        leaves.reshape(n_leaves // 2, 2 * n0, d), landmarks[-1], metric)
-    return SweepPlan(x_sorted, tree, landmarks, lm_self, lm_cross,
-                     leaf_self, leaf_cross, metric=metric)
+
+@functools.partial(jax.jit, static_argnames=("rank", "policy", "config"))
+def replan_policy(
+    plan: SweepPlan,
+    *,
+    rank: int,
+    key: Array,
+    policy,
+    config: SolveConfig | None = None,
+) -> SweepPlan:
+    """Re-draw an existing plan's landmarks under a different policy.
+
+    The policy axis of a sweep: reuses ``plan.x_sorted``/``plan.tree``
+    (no re-partition) and consumes the same key tree as
+    :func:`build_sweep_plan` — the partition subkey is split off and
+    discarded, then one landmark subkey per level — so
+    ``replan_policy(build_sweep_plan(x, ..., key=k), ..., key=k,
+    policy=p)`` equals ``build_sweep_plan(x, ..., key=k, policy=p)``.
+    ``rank`` may differ from the source plan's (accuracy-vs-rank curves
+    on a fixed hierarchy).
+    """
+    from repro.landmarks.policy import get_policy
+
+    levels = plan.levels
+    n0 = plan.x_sorted.shape[0] >> levels
+    if rank > n0:
+        raise ValueError(f"rank {rank} exceeds leaf size {n0} (paper §4.4)")
+    _, key = jax.random.split(key)   # discard the partition subkey
+    landmarks = tuple(_draw_level_landmarks(
+        key, plan.x_sorted, levels, rank, get_policy(policy), plan.metric,
+        config))
+    return _plan_tiles(plan.x_sorted, plan.tree, landmarks, plan.metric,
+                       levels, rank, n0)
 
 
 def _stage_gram_dist(dist: Array, kernel: BaseKernel, config: SolveConfig,
@@ -547,11 +711,14 @@ def _stage_cross_dist(dist: Array, linv_parent: Array, kernel: BaseKernel,
         interpret=config.interpret, **kwargs).astype(out_dt)
 
 
-@functools.partial(jax.jit, static_argnames=("kernel", "config"))
+@functools.partial(jax.jit,
+                   static_argnames=("kernel", "config", "rank_budget"))
 def sweep_factors(
     plan: SweepPlan,
     kernel: BaseKernel,
     config: SolveConfig | None = None,
+    *,
+    rank_budget: int | None = None,
 ) -> HCKFactors:
     """Instantiate :class:`HCKFactors` at one bandwidth from a
     :class:`SweepPlan` — the per-σ pass of the sweep engine.
@@ -564,7 +731,9 @@ def sweep_factors(
     ``kernel`` whose metric equals ``plan.metric``.
 
     ``kernel`` and ``config`` are static (hashable) jit arguments, exactly
-    as in :func:`build_hck`.
+    as in :func:`build_hck`; ``rank_budget`` mirrors :func:`build_hck`'s
+    budgeted adaptive per-node rank (masks recomputed per σ, since the
+    landmark Gram — hence spectral mass — is bandwidth-dependent).
     """
     config = config if config is not None else DEFAULT_CONFIG
     if KERNEL_METRIC.get(kernel.name) != plan.metric:
@@ -582,6 +751,15 @@ def sweep_factors(
         sigma.append(s)
         sigma_cho.append(c)
         sigma_li.append(sigma_linv(c))
+    sigma, sigma_cho = tuple(sigma), tuple(sigma_cho)
+
+    rank_mask = None
+    if rank_budget is not None:
+        from repro.landmarks.budget import allocate_rank_masks
+
+        rank_mask = allocate_rank_masks(sigma, rank_budget, rank)
+        sigma, sigma_cho, sigma_li = _apply_rank_masks(
+            rank_mask, sigma, sigma_cho, sigma_li)
 
     adiag, _ = _stage_gram_dist(plan.leaf_self, kernel, config,
                                 want_chol=False)
@@ -591,8 +769,11 @@ def sweep_factors(
         _stage_cross_dist(plan.lm_cross[lvl - 1], sigma_li[lvl - 1], kernel,
                           config).reshape(1 << lvl, rank, rank)
         for lvl in range(1, levels))
+    if rank_mask is not None:
+        u = u * jnp.repeat(rank_mask[-1], 2, axis=0)[:, None, :]
+        w = _mask_transfer_ops(w, rank_mask)
     return HCKFactors(plan.x_sorted, plan.tree, plan.landmarks,
-                      tuple(sigma), tuple(sigma_cho), w, u, adiag)
+                      sigma, sigma_cho, w, u, adiag, rank_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -701,6 +882,8 @@ def build_hck_streaming(
     config: SolveConfig | None = None,
     leaf_batch: int = 64,
     chunk_rows: int = 1 << 16,
+    policy=None,
+    rank_budget: int | None = None,
 ) -> HCKFactors:
     """Build HCK factors from a host-resident :class:`ChunkSource`.
 
@@ -729,11 +912,22 @@ def build_hck_streaming(
                 build is a single dense block — load it directly).
     """
     from repro.data.pipeline import stream_partition
+    from repro.landmarks.policy import UniformPolicy, get_policy
 
     config = config if config is not None else DEFAULT_CONFIG
     if levels < 1:
         raise ValueError("build_hck_streaming needs levels >= 1 "
                          "(a 0-level build is one dense block)")
+    if not isinstance(get_policy(policy), UniformPolicy):
+        raise ValueError(
+            "build_hck_streaming supports the uniform landmark policy "
+            "only: node blocks are never device-resident, so clustered/"
+            "leverage selection has nothing to scan — build in memory or "
+            "distributed instead")
+    if rank_budget is not None:
+        raise ValueError(
+            "build_hck_streaming does not support rank_budget; use "
+            "build_hck or dist_build_hck for budgeted adaptive rank")
     n, d = source.n, source.dim
     n_leaves = 1 << levels
     if n % n_leaves != 0:

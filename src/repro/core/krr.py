@@ -126,6 +126,8 @@ def fit(
     classification: bool = False,
     shared_landmarks: bool = False,
     solve_config: SolveConfig | None = None,
+    landmarks=None,
+    rank_budget: int | None = None,
 ) -> HCKRegressor:
     """Fit KRR with the paper's sizing rule (Eq. 22) unless levels given.
 
@@ -147,6 +149,11 @@ def fit(
                Algorithm-2 solve, plus ``interpret``/``refine_steps``/
                ``leaf_block``.  One-vs-all classification shares the
                factorization across all class columns.
+    landmarks: landmark-selection policy — None/"uniform" (the default,
+               bitwise-identical build), "kmeans", "leverage", or a
+               :class:`~repro.landmarks.policy.LandmarkPolicy` instance.
+    rank_budget: global rank budget for budgeted adaptive per-node rank
+               (see :func:`repro.core.hck.build_hck`).
     """
     key = key if key is not None else jax.random.PRNGKey(0)
     n = x.shape[0]
@@ -162,6 +169,7 @@ def fit(
     factors = build_hck(
         x, levels=levels, rank=rank, key=kbuild, kernel=kernel,
         method=method, shared_landmarks=shared_landmarks, config=solve_config,
+        policy=landmarks, rank_budget=rank_budget,
     )
     health.probe_factors(factors, solve_config, op="build")
     y_sorted = targets[factors.tree.perm]
@@ -196,6 +204,8 @@ def fit_streaming(
     solve_config: SolveConfig | None = None,
     leaf_batch: int = 64,
     chunk_rows: int = 1 << 16,
+    landmarks=None,
+    rank_budget: int | None = None,
 ) -> HCKRegressor:
     """Fit KRR from a host-resident :class:`repro.data.pipeline.ChunkSource`.
 
@@ -224,6 +234,7 @@ def fit_streaming(
     factors = build_hck_streaming(
         source, levels=levels, rank=rank, key=kbuild, kernel=kernel,
         config=solve_config, leaf_batch=leaf_batch, chunk_rows=chunk_rows,
+        policy=landmarks, rank_budget=rank_budget,
     )
     health.probe_factors(factors, solve_config, op="build")
     y_sorted = targets[factors.tree.perm]
@@ -522,6 +533,8 @@ def fit_path(
     x_val: Array | None = None,
     y_val: Array | None = None,
     factors: HCKFactors | None = None,
+    landmarks=None,
+    rank_budget: int | None = None,
 ) -> KRRPath:
     """Fit the whole regularization path in one build (sweep engine λ-axis).
 
@@ -537,10 +550,12 @@ def fit_path(
     Parameters are as in :func:`fit` with ``lams`` an array-like of ridge
     values; ``x_val``/``y_val`` (optional) score every λ on held-out data.
     ``factors`` (optional) supplies a prebuilt hierarchy — e.g. one σ of a
-    :func:`repro.core.hck.sweep_factors` grid — in which case ``x``/``y``
-    must already match its padded size and tree, and the build (including
-    padding) is skipped; ``rank``/``leaf_size``/``levels``/``key`` are
-    ignored.
+    :func:`repro.core.hck.sweep_factors` grid, or a policy-swept build
+    (``sweep_factors`` on a ``build_sweep_plan(policy=...)`` plan, with or
+    without ``rank_budget``) — in which case ``x``/``y`` must already
+    match its padded size and tree, and the build (including padding) is
+    skipped; ``rank``/``leaf_size``/``levels``/``key``/``landmarks``/
+    ``rank_budget`` are ignored.
     """
     if factors is None:
         if rank is None:
@@ -556,7 +571,7 @@ def fit_path(
         factors = build_hck(
             x, levels=levels, rank=rank, key=kbuild, kernel=kernel,
             method=method, shared_landmarks=shared_landmarks,
-            config=solve_config,
+            config=solve_config, policy=landmarks, rank_budget=rank_budget,
         )
     elif y.shape[0] != factors.n or x.shape[0] != factors.n:
         raise ValueError(

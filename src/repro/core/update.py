@@ -111,8 +111,8 @@ class InsertRecord:
 
 @functools.partial(jax.jit, static_argnames=("kernel", "config", "k"))
 def _insert_device(x_sorted, adiag, u, perm, x_new_sorted, leaf_sorted, pos,
-                   lm_rep, linv_rep, y_sorted, y_new_sorted, lam_abs, key,
-                   *, kernel, config, k):
+                   lm_rep, linv_rep, u_mask, y_sorted, y_new_sorted, lam_abs,
+                   key, *, kernel, config, k):
     """One fused launch extending every leaf block by ``k`` rows.
 
     The host caller has already routed/grouped the arrivals; everything
@@ -144,8 +144,13 @@ def _insert_device(x_sorted, adiag, u, perm, x_new_sorted, leaf_sorted, pos,
     ], axis=1)
 
     # U extension: one build_cross stage launch against the frozen parent
-    # landmarks/Linv (pre-repeated to leaf granularity by the caller)
+    # landmarks/Linv (pre-repeated to leaf granularity by the caller).
+    # Budgeted models pass the leaf-granularity rank mask: the frozen linv
+    # is identity-padded on inactive slots, so the appended rows' inactive
+    # columns must be zeroed like the base build's.
     u_app = _stage_build_cross(x_app, lm_rep, linv_rep, kernel, config)
+    if u_mask is not None:
+        u_app = u_app * u_mask[:, None, :]
     u_new = jnp.concatenate([u, u_app.astype(u.dtype)], axis=1)
 
     x_sorted_new = jnp.concatenate([x_leaves, x_app], axis=1).reshape(-1, d)
@@ -255,10 +260,12 @@ def insert(
             yn_sorted = yn[order_np]
     lam_abs = jnp.asarray(kernel.jitter * jitter_rows,
                           dtype=factors.adiag.dtype)
+    u_mask = (None if factors.rank_mask is None
+              else jnp.repeat(factors.rank_mask[-1], 2, axis=0))
     x_sorted_new, adiag_new, u_new, perm_new, y_sorted_new = _insert_device(
         factors.x_sorted, factors.adiag, factors.u, factors.tree.perm,
         x_new[order_np], jnp.asarray(leaf_sorted), jnp.asarray(pos),
-        lm_rep, linv_leaf, yk, yn_sorted, lam_abs, key,
+        lm_rep, linv_leaf, u_mask, yk, yn_sorted, lam_abs, key,
         kernel=kernel, config=config, k=k)
     if y_sorted is not None and y_sorted.ndim == 1:
         y_sorted_new = y_sorted_new[:, 0]
@@ -269,7 +276,7 @@ def insert(
     real[leaf_sorted, pos] = True
     factors_new = HCKFactors(
         x_sorted_new, tree_new, factors.landmarks, factors.sigma,
-        factors.sigma_cho, factors.w, u_new, adiag_new)
+        factors.sigma_cho, factors.w, u_new, adiag_new, factors.rank_mask)
     return factors_new, y_sorted_new, InsertRecord(k, n0, counts_np, real)
 
 
@@ -294,7 +301,8 @@ def downdate(factors: HCKFactors, k: int) -> HCKFactors:
                          factors.tree.thresholds)
     return HCKFactors(
         x_sorted, tree, factors.landmarks, factors.sigma, factors.sigma_cho,
-        factors.w, factors.u[:, :n0], factors.adiag[:, :n0, :n0])
+        factors.w, factors.u[:, :n0], factors.adiag[:, :n0, :n0],
+        factors.rank_mask)
 
 
 def refit_frozen(
@@ -325,7 +333,10 @@ def refit_frozen(
     lm_rep = jnp.repeat(factors.landmarks[-1], 2, axis=0)
     linv_rep = jnp.repeat(sigma_linv(factors.sigma_cho[-1]), 2, axis=0)
     adiag, u = leaf_stage_factors(leaves, lm_rep, linv_rep, ker, config)
+    if factors.rank_mask is not None:
+        # the frozen (masked) linv identity-pads inactive slots; zero them
+        u = u * jnp.repeat(factors.rank_mask[-1], 2, axis=0)[:, None, :]
     return HCKFactors(
         factors.x_sorted, factors.tree, factors.landmarks, factors.sigma,
         factors.sigma_cho, factors.w, u.astype(factors.u.dtype),
-        adiag.astype(factors.adiag.dtype))
+        adiag.astype(factors.adiag.dtype), factors.rank_mask)

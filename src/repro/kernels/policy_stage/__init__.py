@@ -1,0 +1,10 @@
+"""Landmark-policy inner-loop stage (``policy_dist``).
+
+Batched metric-distance tiles between node point blocks and per-node
+candidate centers — the one primitive every non-uniform landmark policy
+(k-means assignment/medoid snap, leverage-score pilot kernels) loops
+over, batched across all nodes of a tree level.  jnp oracle in
+:mod:`.ref`, fused Pallas body in :mod:`.policy_stage`, jit'd wrappers in
+:mod:`.ops`; registered as the ``policy_dist`` stage of
+:mod:`repro.kernels.registry` on both backends.
+"""

@@ -1,0 +1,43 @@
+"""Jit'd public wrapper for the fused landmark-policy distance stage.
+
+This is the "pallas" backend entry of :mod:`repro.kernels.registry` for
+the ``policy_dist`` stage (lazily imported so XLA-only users never trace
+a Pallas call).  The node batch is the grid; each node block is row-tiled
+at the tile picked by :func:`repro.kernels.registry.tile_config` (snapped
+to a divisor of the block row count).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.policy_stage.policy_stage import (_acc_dtype,
+                                                     policy_dist_kernel)
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret",
+                                             "block_m"))
+def policy_dist(
+    blocks: Array, centers: Array, *, metric: str = "l2",
+    interpret: bool = True, block_m: int | None = None,
+) -> Array:
+    """Fused batched policy distances over a node batch.
+
+    (B, m, d), (B, r, d) -> dist (B, m, r) under ``metric`` ("l2" =
+    squared Euclidean, "l1" = Manhattan); node blocks row-tiled at
+    ``block_m`` (default from :func:`repro.kernels.registry.tile_config`).
+    """
+    from repro.kernels.registry import tile_config
+
+    _, m, d = blocks.shape
+    r = centers.shape[1]
+    ct = _acc_dtype(blocks, centers)
+    if block_m is None:
+        block_m = tile_config("policy_dist", n0=m, r=r, k=r, d=d,
+                              itemsize=jax.numpy.dtype(ct).itemsize).block_n0
+    return policy_dist_kernel(
+        blocks.astype(ct), centers.astype(ct), metric=metric, bm=block_m,
+        interpret=interpret)

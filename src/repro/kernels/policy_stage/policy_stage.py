@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused landmark-policy distance tiles.
+
+One kernel covers the batched inner loop of every non-uniform landmark
+policy (``repro.landmarks``): grid ``(node, row-tile)`` — load a (bm, d)
+row block of the node's points and the node's (r, d) candidate centers,
+emit the (bm, r) metric-distance tile (MXU matmul identity for the
+squared-L2 metric, VPU broadcast reduction for L1).  The tile is
+bandwidth-independent (no kernel epilogue), matching the sweep engine's
+cached-distance contract, so one launch per Lloyd iteration / pilot pass
+serves all nodes of a tree level.
+
+The distance math mirrors ``build_stage._pairwise`` without the epilogue;
+accumulation follows the input dtype (float32 MXU path for <=32-bit
+inputs, float64 for interpret-mode oracle parity).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _acc_dtype(*arrays: Array):
+    if any(a.dtype == jnp.float64 for a in arrays):
+        return jnp.float64
+    return jnp.float32
+
+
+def _policy_dist_body(pts_ref, ctr_ref, out_ref, *, l1: bool, acc):
+    pts = pts_ref[0]                                       # (bm, d)
+    ctr = ctr_ref[0]                                       # (r, d)
+    if l1:
+        out_ref[0] = jnp.sum(
+            jnp.abs(pts[:, None, :] - ctr[None, :, :]), axis=-1).astype(acc)
+    else:
+        xy = jax.lax.dot_general(
+            pts, ctr, (((1,), (1,)), ((), ())), preferred_element_type=acc)
+        out_ref[0] = jnp.maximum(
+            jnp.sum(pts * pts, axis=-1)[:, None]
+            + jnp.sum(ctr * ctr, axis=-1)[None, :] - 2.0 * xy, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "bm", "interpret"))
+def policy_dist_kernel(
+    blocks: Array, centers: Array, *, metric: str = "l2", bm: int = 128,
+    interpret: bool = True,
+) -> Array:
+    """(B, m, d), (B, r, d) -> dist (B, m, r); ``bm`` must divide m
+    (use ops.policy_dist for the tile-snapped general entry point)."""
+    if metric not in ("l2", "l1"):
+        raise ValueError(f"unknown metric {metric!r}; have ('l2', 'l1')")
+    bsz, m, d = blocks.shape
+    r = centers.shape[1]
+    assert m % bm == 0, (m, bm)
+    acc = _acc_dtype(blocks, centers)
+    body = functools.partial(_policy_dist_body, l1=(metric == "l1"), acc=acc)
+    return pl.pallas_call(
+        body,
+        grid=(bsz, m // bm),
+        in_specs=[
+            pl.BlockSpec((1, bm, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, r, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, r), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m, r), acc),
+        interpret=interpret,
+    )(blocks.astype(acc), centers.astype(acc))

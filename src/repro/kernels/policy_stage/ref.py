@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the landmark-policy distance stage.
+
+``policy_dist``: (B, m, d) node point blocks x (B, r, d) per-node centers
+-> (B, m, r) bandwidth-independent metric distances ("l2" = SQUARED
+Euclidean via the matmul identity, "l1" = Manhattan) — the same metric
+contract as the sweep engine's cached tiles
+(:func:`repro.kernels.build_stage.ref.pairwise_dist_ref`), so policy
+selection is σ-independent by construction and a policy-swept
+:class:`~repro.core.hck.SweepPlan` stays valid across the whole σ grid.
+
+Every non-uniform landmark policy reduces its per-node inner loop to this
+one batched map: k-means assignment and medoid snapping take argmins over
+the tile, the leverage-score pilot kernels are elementwise functions of
+it.  float64 inputs stay float64 (parity-gate grade); sub-f32 promote to
+f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels_fn import _sqdist
+
+Array = jax.Array
+
+
+def policy_dist_ref(blocks: Array, centers: Array, *,
+                    metric: str = "l2") -> Array:
+    """Batched policy distances: (B, m, d), (B, r, d) -> (B, m, r).
+
+    Bit-compatible with ``pairwise_dist_ref`` on the same inputs ("l2"
+    uses exactly :func:`repro.core.kernels_fn._sqdist`).
+    """
+    b = blocks if blocks.dtype == jnp.float64 else blocks.astype(jnp.float32)
+    c = centers if centers.dtype == jnp.float64 else centers.astype(
+        jnp.float32)
+    if metric == "l1":
+        return jax.vmap(lambda x, y: jnp.sum(
+            jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1))(b, c)
+    if metric == "l2":
+        return jax.vmap(_sqdist)(b, c)
+    raise ValueError(f"unknown metric {metric!r}; have ('l2', 'l1')")

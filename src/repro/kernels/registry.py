@@ -47,6 +47,7 @@ STAGES = (
     "build_cross",     # U_b = K(P_b, Z_b) Sigma_b^{-1}       (Algorithm 2)
     "build_gram_dist",  # G_b = κ_σ(D_b)+jit I (+Chol)  (sweep engine, per σ)
     "build_cross_dist",  # U_b = κ_σ(D_b) Sigma_b^{-1}  (sweep engine, per σ)
+    "policy_dist",      # D_b = dist(P_b, Z_b)  (landmark-policy inner loops)
     "kernel_matvec",    # z = K(Xc, Y) V  (matvec-free exact-kernel operator)
     "pairwise_kernel",  # K(X, Y) tiles            (kernel_tile)
     "attention",        # flash attention          (flash_attention)
@@ -63,6 +64,11 @@ OOS_STAGES = ("oos_local", "oos_walk")
 #: tiles instead of raw points (the sweep engine's per-σ pass).
 BUILD_STAGES = ("build_gram", "build_cross",
                 "build_gram_dist", "build_cross_dist")
+
+#: landmark-policy stages: per-node batched metric-distance tiles between
+#: node point blocks and candidate centers (k-means / leverage-score inner
+#: loops; see repro.landmarks and repro.kernels.policy_stage).
+POLICY_STAGES = ("policy_dist",)
 
 
 # ---------------------------------------------------------------------------
@@ -262,7 +268,9 @@ def tile_config(stage: str, *, n0: int, r: int, k: int, d: int = 0,
     The distance-cached sweep variants follow the same split with the point
     blocks replaced by distance tiles: ``build_gram_dist`` holds dist +
     gram + Cholesky (3 n0^2), ``build_cross_dist`` holds dist (bn, r) +
-    Linv (r, r) + out (bn, r).  ``leaf_factor`` factorizes the whole (n0,
+    Linv (r, r) + out (bn, r).  ``policy_dist`` (the landmark-policy inner
+    loop) row-tiles like ``build_cross`` minus the Linv factor: pts (bn,
+    d) + centers (r, d) + dist out (bn, r).  ``leaf_factor`` factorizes the whole (n0,
     n0) leaf Schur tile in place (dist-in, chol + inverse out: 3 n0^2).
     ``leaf_update`` (the bordered rank-k extension) also processes whole
     leaves; here ``k`` is the number of appended rows, so the working set
@@ -291,10 +299,13 @@ def tile_config(stage: str, *, n0: int, r: int, k: int, d: int = 0,
             usage_g = 3 * n0 * n0 * itemsize
         return TileConfig(n0, usage_g)
 
-    if stage in ("build_cross", "build_cross_dist"):
+    if stage in ("build_cross", "build_cross_dist", "policy_dist"):
         def usage(bn: int) -> int:
             if stage == "build_cross_dist":
                 return (2 * bn * r + r * r) * itemsize
+            if stage == "policy_dist":
+                # pts row tile (bn, d) + centers (r, d) + dist out (bn, r)
+                return (bn * (d + r) + r * d) * itemsize
             return (bn * (d + r) + r * d + r * r) * itemsize
 
         def snap(bn: int) -> int:
@@ -708,6 +719,26 @@ def _build_cross_pallas(points, landmarks, linv, *, name="gaussian",
 
     return build_cross(points, landmarks, linv, name=name, sigma=sigma,
                        interpret=interpret, block_m=block_m)
+
+
+@register("policy_dist", "xla")
+def _policy_dist_xla(blocks, centers, *, metric="l2",
+                     interpret: bool = True):
+    """(B,m,d),(B,r,d) -> dist (B,m,r) ("l2" squared Euclidean / "l1")."""
+    del interpret
+    from repro.kernels.policy_stage.ref import policy_dist_ref
+
+    return policy_dist_ref(blocks, centers, metric=metric)
+
+
+@register("policy_dist", "pallas")
+def _policy_dist_pallas(blocks, centers, *, metric="l2",
+                        interpret: bool = True,
+                        block_m: int | None = None):
+    from repro.kernels.policy_stage.ops import policy_dist
+
+    return policy_dist(blocks, centers, metric=metric, interpret=interpret,
+                       block_m=block_m)
 
 
 @register("kernel_matvec", "xla")

@@ -1,0 +1,29 @@
+"""Pluggable landmark-selection policies + budgeted adaptive per-node rank.
+
+ROADMAP item 4 (the paper's accuracy-per-rank claim): landmark quality
+sets how small ``r`` can be at fixed accuracy, and every downstream
+engine is O(n r^2).  This package owns
+
+  * :mod:`.policy` — the :class:`LandmarkPolicy` protocol and the three
+    built-in policies (``uniform`` — the bitwise-preserved default,
+    ``kmeans`` — Lloyd iterations + medoid snap on batched metric tiles,
+    ``leverage`` — Nyström ridge-leverage scores + Gumbel top-k), all
+    running their per-node inner loops through the ``policy_dist``
+    registry stage so selection is batched across all nodes of a level.
+  * :mod:`.budget` — spectral-mass-proportional allocation of a global
+    rank budget across nodes, realized as pad-to-``r``-bucket prefix
+    masks (DESIGN.md §12).
+"""
+from repro.landmarks.budget import (allocate_rank_masks, allocate_ranks,
+                                    masked_identity_pad, node_mass)
+from repro.landmarks.policy import (KMeansPolicy, LandmarkPolicy,
+                                    LeveragePolicy, UniformPolicy,
+                                    gather_block_rows, get_policy,
+                                    select_indices)
+
+__all__ = [
+    "LandmarkPolicy", "UniformPolicy", "KMeansPolicy", "LeveragePolicy",
+    "get_policy", "select_indices", "gather_block_rows",
+    "node_mass", "allocate_ranks", "allocate_rank_masks",
+    "masked_identity_pad",
+]

@@ -1,0 +1,111 @@
+"""Budgeted adaptive per-node rank (DESIGN.md §12).
+
+A global rank budget N is split across ALL nodes of ALL levels in
+proportion to each node's spectral mass, estimated from the r x r
+landmark Gram the build already instantiates: the stable rank
+``(tr G)^2 / ||G||_F^2``.  A node whose landmarks are highly correlated
+(dense cluster, fast-decaying spectrum) has small stable rank and gets
+few slots; a node covering spread-out geometry keeps more.
+
+Ragged ranks are REALIZED AS PREFIX MASKS over the common pad bucket
+``r_max``: every factor keeps its static (.., r_max, ..) shape, active
+slots are a prefix, and masked slots are identity-padded (Sigma /
+Cholesky / Linv: diag 1, off-diag 0) or zeroed (U columns, W rows/cols).
+Identity-padding commutes with the factor algebra — ``chol([[A,0],[0,I]])
+= [[chol A,0],[0,I]]`` and block-triangular inversion preserves the
+split — so the masked factors are EXACTLY the factors of the truncated-
+rank model and every downstream engine (hmatrix matvec/invert/
+invert_multi, oos.prepare/PredictEngine, update inserts, dist placement)
+consumes them unchanged: zeros propagate, logdet picks up log(1) = 0 per
+masked slot, and the OOS pushdown zeroes every masked coefficient.
+
+Allocation guarantees (pinned by tests/test_landmark_policies.py):
+``sum_nodes r_node <= N`` exactly (floor-only rounding), every rank in
+``[r_min, r_max]`` with extras snapped DOWN to multiples of ``snap`` (8,
+the float32 sublane), and the whole computation is traceable (masks are
+data, the pad bucket is static).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def node_mass(gram: Array) -> Array:
+    """Spectral mass per node: stable rank of the landmark Gram.
+
+    (B, r, r) SPD blocks -> (B,) ``(tr G)^2 / ||G||_F^2`` in [1, r]
+    (1 = rank-one spectrum, r = flat spectrum).
+    """
+    tr = jnp.trace(gram, axis1=-2, axis2=-1)
+    fro2 = jnp.sum(gram * gram, axis=(-2, -1))
+    return (tr * tr) / jnp.maximum(fro2, jnp.finfo(gram.dtype).tiny)
+
+
+def allocate_ranks(masses: Array, budget: int, r_max: int, *,
+                   r_min: int = 8, snap: int = 8) -> Array:
+    """Split a global rank budget across nodes proportional to mass.
+
+    (M,) masses -> (M,) int32 ranks with ``sum <= budget`` guaranteed:
+    every node gets the floor ``r_min`` (clamped to ``budget // M`` when
+    the budget is tight), the remaining pool is shared proportionally,
+    and each node's extra is floored to a multiple of ``snap`` — floor-
+    only rounding can never overshoot the pool.  ``budget`` must be at
+    least one slot per node.
+    """
+    m_nodes = masses.shape[0]
+    if budget < m_nodes:
+        raise ValueError(
+            f"rank budget {budget} below one landmark per node "
+            f"({m_nodes} nodes)")
+    r_lo = max(1, min(r_min, r_max, budget // m_nodes))
+    pool = budget - r_lo * m_nodes
+    share = budget * masses / jnp.maximum(
+        jnp.sum(masses), jnp.finfo(masses.dtype).tiny)
+    raw = jnp.maximum(share - r_lo, 0.0)
+    scale = jnp.minimum(
+        1.0, pool / jnp.maximum(jnp.sum(raw),
+                                jnp.finfo(masses.dtype).tiny))
+    extra = (jnp.floor(raw * scale / snap) * snap).astype(jnp.int32)
+    return jnp.minimum(r_lo + extra, r_max).astype(jnp.int32)
+
+
+def allocate_rank_masks(grams, budget: int, r_max: int, *,
+                        r_min: int = 8, snap: int = 8,
+                        dtype=None) -> tuple:
+    """Per-level prefix masks from the per-level landmark Gram stacks.
+
+    ``grams``: sequence of (2**l, r_max, r_max) Gram stacks for levels
+    0..L-1 -> tuple of (2**l, r_max) float masks where active slots are a
+    prefix of length r_node.  Budget conservation holds GLOBALLY:
+    ``sum over all levels of sum(mask) <= budget``.
+    """
+    grams = list(grams)
+    sizes = [g.shape[0] for g in grams]
+    masses = jnp.concatenate([node_mass(g) for g in grams])
+    ranks = allocate_ranks(masses, budget, r_max, r_min=r_min, snap=snap)
+    dt = dtype if dtype is not None else grams[0].dtype
+    masks, off = [], 0
+    for b in sizes:
+        rk = ranks[off:off + b]
+        off += b
+        masks.append(
+            (jnp.arange(r_max)[None, :] < rk[:, None]).astype(dt))
+    return tuple(masks)
+
+
+def masked_identity_pad(a: Array, mask: Array) -> Array:
+    """Identity-pad the masked slots of per-node square factors.
+
+    (B, r, r), (B, r) -> ``M A M + diag(1 - mask)``: active block kept,
+    masked diagonal set to 1, everything touching a masked slot zeroed.
+    Applied to Sigma, its Cholesky factor, and Linv alike — for a PREFIX
+    mask the Cholesky leading-submatrix property makes the padded factors
+    exactly the factors of the padded Gram (no refactorization).
+    """
+    m2 = mask[:, :, None] * mask[:, None, :]
+    r = a.shape[-1]
+    dpad = jnp.eye(r, dtype=a.dtype) * (1.0 - mask)[:, None, :]
+    return a * m2 + dpad

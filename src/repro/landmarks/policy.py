@@ -1,0 +1,245 @@
+"""Landmark-selection policies (Randomized Clustered Nyström and
+ridge-leverage sampling, adapted to the per-node hierarchy).
+
+Every policy maps ``(key, node blocks (B, m, d), r)`` to per-node landmark
+ROW INDICES ``(B, r) int32`` — indices, not points, so the engine's
+gather machinery (in-memory flat take, streaming/distributed host-side
+``perm`` gathers) serves every policy unchanged and the distributed build
+stays index-bitwise with the single-host build per policy.
+
+Design contract (pinned by tests/test_landmark_policies.py):
+
+  * A policy NEVER touches the partition: the tree/permutation is drawn
+    before any landmark key split, so all policies share one hierarchy.
+  * ``uniform`` is the current behavior bitwise (same
+    ``landmark_indices`` PRNG draw, integer path end to end).
+  * Selection is σ-INDEPENDENT: the inner loops consume only the
+    bandwidth-independent metric tiles of the ``policy_dist`` registry
+    stage (k-means assignment/medoid argmins; the leverage surrogate
+    kernel uses a per-node median-distance bandwidth, not the model σ) —
+    which is what lets a policy-swept :class:`~repro.core.hck.SweepPlan`
+    reuse one landmark draw across a whole σ grid.
+  * Every policy returns DISTINCT indices per node (k-means dedupes via a
+    first-free-slot scan, leverage uses Gumbel top-k), so the landmark
+    Gram stays strictly PD at the documented jitter floors.
+
+Policies are frozen (hashable) dataclasses: they ride through ``jax.jit``
+as static arguments exactly like :class:`~repro.kernels.registry.
+SolveConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.registry import (DEFAULT_CONFIG, SolveConfig, get_impl,
+                                    resolve_backend, tile_config)
+
+Array = jax.Array
+
+
+def stage_policy_dist(blocks: Array, centers: Array, metric: str,
+                      config: SolveConfig | None) -> Array:
+    """Dispatch one batched policy-distance tile through the registry.
+
+    (B, m, d), (B, r, d) -> (B, m, r) metric distances ("l2" squared
+    Euclidean / "l1" Manhattan), backend-resolved like the build stages.
+    """
+    config = config if config is not None else DEFAULT_CONFIG
+    _, m, d = blocks.shape
+    r = centers.shape[1]
+    backend = resolve_backend(config, "policy_dist", dtype=blocks.dtype,
+                              n0=m, r=r, d=d)
+    kwargs = {}
+    if backend == "pallas":
+        kwargs["block_m"] = tile_config(
+            "policy_dist", n0=m, r=r, k=r, d=d,
+            itemsize=blocks.dtype.itemsize,
+            leaf_block=config.leaf_block).block_n0
+    return get_impl("policy_dist", backend)(
+        blocks, centers, metric=metric, interpret=config.interpret, **kwargs)
+
+
+def gather_block_rows(blocks: Array, idx: Array) -> Array:
+    """Gather per-node rows: (B, m, d), (B, r) -> (B, r, d).
+
+    The same flat-take the uniform sampler has always used
+    (``repro.core.hck._sample_landmarks``), shared so every policy's
+    gather is bit-identical given the same indices.
+    """
+    bsz, m, d = blocks.shape
+    flat = (idx + jnp.arange(bsz)[:, None] * m).reshape(-1)
+    return jnp.take(blocks.reshape(bsz * m, d), flat,
+                    axis=0).reshape(bsz, idx.shape[1], d)
+
+
+def _dedupe_indices(idx: Array, m: int) -> Array:
+    """Make each node's index row distinct (first-free-slot fallback).
+
+    A snapped medoid can collide when two centers share a nearest point;
+    colliding slots fall back to the first not-yet-used block row, so the
+    result is always r distinct indices (=> strictly PD landmark Gram).
+    """
+    def node(ix):
+        used = jnp.zeros((m,), jnp.bool_)
+
+        def step(used, cand):
+            fallback = jnp.argmin(used)          # first still-free row
+            pick = jnp.where(used[cand], fallback, cand).astype(jnp.int32)
+            return used.at[pick].set(True), pick
+
+        _, out = jax.lax.scan(step, used, ix)
+        return out
+
+    return jax.vmap(node)(idx.astype(jnp.int32))
+
+
+@runtime_checkable
+class LandmarkPolicy(Protocol):
+    """Pluggable per-node landmark selection (static under jit)."""
+
+    name: str
+
+    def select(self, key: Array, blocks: Array, r: int, *,
+               metric: str = "l2",
+               config: SolveConfig | None = None) -> Array:
+        """(B, m, d) node blocks -> (B, r) int32 distinct row indices."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformPolicy:
+    """Uniform per-node subsample — the paper-§4.2 default, bitwise-
+    preserving the pre-policy engine (pure integer PRNG path)."""
+
+    name: str = "uniform"
+
+    def select(self, key: Array, blocks: Array, r: int, *,
+               metric: str = "l2",
+               config: SolveConfig | None = None) -> Array:
+        """One uniform permutation prefix per node (counter-based PRNG)."""
+        del metric, config
+        from repro.core.hck import landmark_indices
+
+        bsz, m, _ = blocks.shape
+        return landmark_indices(key, bsz, m, r)
+
+
+@dataclasses.dataclass(frozen=True)
+class KMeansPolicy:
+    """Clustered landmarks (Randomized Clustered Nyström, arXiv:1612.06470).
+
+    Uniform init (the same PRNG draw as ``uniform``, so the key tree is
+    shared), ``iters`` Lloyd rounds with assignments taken over the
+    batched ``policy_dist`` tiles, then a medoid snap (nearest block row
+    per center) so landmarks are actual data points — required for the
+    index-based gather contract — deduped to distinct rows.
+    """
+
+    iters: int = 8
+    name: str = "kmeans"
+
+    def select(self, key: Array, blocks: Array, r: int, *,
+               metric: str = "l2",
+               config: SolveConfig | None = None) -> Array:
+        """Lloyd + medoid snap; returns (B, r) distinct row indices."""
+        from repro.core.hck import landmark_indices
+
+        bsz, m, _ = blocks.shape
+        idx0 = landmark_indices(key, bsz, m, r)
+        centers = gather_block_rows(blocks, idx0)
+        for _ in range(self.iters):
+            dist = stage_policy_dist(blocks, centers, metric, config)
+            assign = jnp.argmin(dist, axis=-1)                  # (B, m)
+            onehot = jax.nn.one_hot(assign, r, dtype=blocks.dtype)
+            counts = jnp.sum(onehot, axis=1)                    # (B, r)
+            sums = jnp.einsum("bmr,bmd->brd", onehot, blocks)
+            newc = sums / jnp.maximum(counts, 1.0)[..., None]
+            # empty clusters keep their previous center
+            centers = jnp.where(counts[..., None] > 0, newc, centers)
+        dist = stage_policy_dist(blocks, centers, metric, config)
+        medoid = jnp.argmin(dist, axis=1).astype(jnp.int32)     # (B, r)
+        return _dedupe_indices(medoid, m)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeveragePolicy:
+    """Ridge-leverage-score sampling (recursive-RLS style, one level of
+    recursion per node).
+
+    A uniform pilot of ``pilot_mult * r`` rows anchors a Nyström
+    surrogate; per-point scores ``l_i = k_i^T (K_pp + ridge*p I)^{-1}
+    k_i`` are computed from the batched ``policy_dist`` tiles under a
+    σ-independent surrogate kernel (per-node median-distance bandwidth),
+    and ``r`` landmarks are drawn without replacement via Gumbel top-k on
+    the log scores — distinct by construction.
+    """
+
+    pilot_mult: int = 2
+    ridge: float = 1e-6
+    name: str = "leverage"
+
+    def select(self, key: Array, blocks: Array, r: int, *,
+               metric: str = "l2",
+               config: SolveConfig | None = None) -> Array:
+        """Pilot -> ridge-leverage scores -> Gumbel top-k indices."""
+        from repro.core.hck import landmark_indices
+
+        bsz, m, _ = blocks.shape
+        p = min(self.pilot_mult * r, m)
+        k_pilot, k_gumbel = jax.random.split(key)
+        pidx = landmark_indices(k_pilot, bsz, m, p)
+        pilot = gather_block_rows(blocks, pidx)
+        d_pp = stage_policy_dist(pilot, pilot, metric, config)   # (B,p,p)
+        d_mp = stage_policy_dist(blocks, pilot, metric, config)  # (B,m,p)
+        # σ-independent surrogate bandwidth: median pilot distance per node
+        med = jnp.maximum(
+            jnp.median(d_pp.reshape(bsz, -1), axis=-1), 1e-12)   # (B,)
+        scale = (2.0 if metric == "l2" else 1.0) * med[:, None, None]
+        kpp = jnp.exp(-d_pp / scale)
+        kpp = kpp + (self.ridge * p) * jnp.eye(p, dtype=kpp.dtype)
+        kmp = jnp.exp(-d_mp / scale)
+        cho = jnp.linalg.cholesky(kpp)
+        sol = jax.vmap(
+            lambda c, km: jax.scipy.linalg.cho_solve((c, True), km.T).T
+        )(cho, kmp)                                              # (B,m,p)
+        scores = jnp.maximum(jnp.sum(kmp * sol, axis=-1), 1e-12)
+        gumbel = jax.random.gumbel(k_gumbel, scores.shape, scores.dtype)
+        _, idx = jax.lax.top_k(jnp.log(scores) + gumbel, r)
+        return idx.astype(jnp.int32)
+
+
+_POLICIES = {"uniform": UniformPolicy, "kmeans": KMeansPolicy,
+             "leverage": LeveragePolicy}
+
+
+def get_policy(spec) -> LandmarkPolicy:
+    """Resolve a policy spec: None/"uniform"/"kmeans"/"leverage" or a
+    ready :class:`LandmarkPolicy` instance (returned as-is)."""
+    if spec is None:
+        return UniformPolicy()
+    if isinstance(spec, str):
+        if spec not in _POLICIES:
+            raise ValueError(
+                f"unknown landmark policy {spec!r}; have "
+                f"{sorted(_POLICIES)}")
+        return _POLICIES[spec]()
+    return spec
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("policy", "r", "metric", "config"))
+def select_indices(policy: LandmarkPolicy, key: Array, blocks: Array,
+                   r: int, metric: str = "l2",
+                   config: SolveConfig | None = None) -> Array:
+    """Jit'd standalone entry point for one level's landmark selection.
+
+    The eager build paths (``dist_build_hck``) call this on the same
+    device blocks the batched engine sees, so per-policy landmark indices
+    agree across the single-host and distributed builds.
+    """
+    return policy.select(key, blocks, r, metric=metric, config=config)

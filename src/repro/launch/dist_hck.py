@@ -33,7 +33,7 @@ from repro.core import hmatrix
 from repro.core.hck import (HCKFactors, _stage_build_cross, _stage_build_gram,
                             build_hck, landmark_indices, leaf_stage_factors,
                             sigma_linv)
-from repro.core.kernels_fn import BaseKernel
+from repro.core.kernels_fn import KERNEL_METRIC, BaseKernel
 from repro.kernels.registry import (DEFAULT_CONFIG, SolveConfig, get_impl,
                                     resolve_backend)
 
@@ -468,7 +468,8 @@ def _dist_transfer_ops(landmarks: tuple, sigma_li: list, kernel: BaseKernel,
 def dist_build_hck(x: Array, *, levels: int, rank: int, key: Array,
                    kernel: BaseKernel, mesh: Mesh, method: str = "rp",
                    config: SolveConfig | None = None,
-                   axis: str = "dev") -> HCKFactors:
+                   axis: str = "dev", policy=None,
+                   rank_budget: int | None = None) -> HCKFactors:
     """Mesh-parallel :func:`repro.core.hck.build_hck` (Algorithm 2).
 
     Same key tree (partition subkey first, then one landmark subkey per
@@ -483,11 +484,26 @@ def dist_build_hck(x: Array, *, levels: int, rank: int, key: Array,
     communication; the U/W stages use child granularity with parents
     repeated so sibling pairs never straddle devices).
 
+    ``policy`` / ``rank_budget`` mirror :func:`~repro.core.hck.build_hck`:
+    the uniform policy stays INDEX-bitwise with the single-host build
+    (pure integer PRNG); clustered/leverage policies run the same jitted
+    :func:`~repro.landmarks.policy.select_indices` on the (transiently
+    device-resident) sorted blocks, keeping factor parity at the usual
+    1e-12 f64 gate.  Budget masks are computed from the (replicated or
+    node-sharded) landmark Grams exactly as the single-host path does and
+    land on the mesh via :func:`shard_by_subtree` with every other factor.
+
     ``levels`` must be at least max(log2(P), 1) so each device owns at
     least one leaf.  Returns factors committed via
     :func:`shard_by_subtree`.
     """
+    from repro.core.hck import _apply_rank_masks, _mask_transfer_ops
+    from repro.landmarks.policy import (UniformPolicy, get_policy,
+                                        select_indices)
+
     config = config if config is not None else DEFAULT_CONFIG
+    policy = get_policy(policy)
+    metric = KERNEL_METRIC.get(kernel.name, "l2")
     p = mesh.size
     t = device_level(p)
     n, d = x.shape
@@ -518,7 +534,12 @@ def dist_build_hck(x: Array, *, levels: int, rank: int, key: Array,
     for lvl in range(levels):
         key, sub = jax.random.split(key)
         bsz, m = 1 << lvl, n >> lvl
-        idx = np.asarray(landmark_indices(sub, bsz, m, rank))
+        if isinstance(policy, UniformPolicy):
+            idx = np.asarray(landmark_indices(sub, bsz, m, rank))
+        else:
+            blocks = jnp.asarray(xs_host).reshape(bsz, m, d)
+            idx = np.asarray(select_indices(policy, sub, blocks, rank,
+                                            metric=metric, config=config))
         rows = (np.arange(bsz)[:, None] * m + idx).reshape(-1)
         lm = jnp.asarray(xs_host[rows]).reshape(bsz, rank, d)
         landmarks.append(jax.device_put(lm, node_sh if bsz >= p else rep_sh))
@@ -526,6 +547,14 @@ def dist_build_hck(x: Array, *, levels: int, rank: int, key: Array,
 
     sigma, sigma_cho, sigma_li = _dist_middle_factors(
         landmarks, kernel, config, mesh, axis)
+
+    rank_mask = None
+    if rank_budget is not None:
+        from repro.landmarks.budget import allocate_rank_masks
+
+        rank_mask = allocate_rank_masks(sigma, rank_budget, rank)
+        sigma, sigma_cho, sigma_li = _apply_rank_masks(
+            rank_mask, sigma, sigma_cho, sigma_li)
 
     # leaf factors: leaf-granularity stages under shard_map, parent
     # stacks repeated per leaf (the streaming engine's layout)
@@ -536,8 +565,11 @@ def dist_build_hck(x: Array, *, levels: int, rank: int, key: Array,
         jnp.repeat(sigma_li[-1], 2, axis=0))
 
     w = _dist_transfer_ops(landmarks, sigma_li, kernel, config, mesh, axis)
+    if rank_mask is not None:
+        u = u * jnp.repeat(rank_mask[-1], 2, axis=0)[:, None, :]
+        w = _mask_transfer_ops(w, rank_mask)
     f = HCKFactors(x_sorted, tree, landmarks, tuple(sigma), tuple(sigma_cho),
-                   w, u, adiag)
+                   w, u, adiag, rank_mask)
     return shard_by_subtree(f, mesh, axis=axis)
 
 
@@ -546,7 +578,8 @@ def dist_build_hck_streaming(source, *, levels: int, rank: int, key: Array,
                              method: str = "rp",
                              config: SolveConfig | None = None,
                              leaf_batch: int = 64, chunk_rows: int = 1 << 16,
-                             axis: str = "dev") -> HCKFactors:
+                             axis: str = "dev", policy=None,
+                             rank_budget: int | None = None) -> HCKFactors:
     """Mesh-parallel :func:`repro.core.hck.build_hck_streaming`.
 
     Same key tree and stage numerics as the streaming engine (which in
@@ -559,8 +592,18 @@ def dist_build_hck_streaming(source, *, levels: int, rank: int, key: Array,
     are independent, so the values are identical either way).
     """
     from repro.data.pipeline import stream_partition
+    from repro.landmarks.policy import UniformPolicy, get_policy
 
     config = config if config is not None else DEFAULT_CONFIG
+    if not isinstance(get_policy(policy), UniformPolicy):
+        raise ValueError(
+            "dist_build_hck_streaming supports the uniform landmark policy "
+            "only: node blocks are never device-resident in one piece — "
+            "use dist_build_hck for clustered/leverage selection")
+    if rank_budget is not None:
+        raise ValueError(
+            "dist_build_hck_streaming does not support rank_budget; use "
+            "dist_build_hck for budgeted adaptive rank")
     p = mesh.size
     t = device_level(p)
     n, d = source.n, source.dim
@@ -626,7 +669,8 @@ def dist_build_hck_streaming(source, *, levels: int, rank: int, key: Array,
 
 def dist_sweep_factors(plan, kernel: BaseKernel, mesh: Mesh,
                        config: SolveConfig | None = None,
-                       axis: str = "dev") -> HCKFactors:
+                       axis: str = "dev",
+                       rank_budget: int | None = None) -> HCKFactors:
     """Sweep-engine factor instantiation on a subtree-sharded plan.
 
     :func:`repro.core.hck.sweep_factors` is already one batched
@@ -636,9 +680,12 @@ def dist_sweep_factors(plan, kernel: BaseKernel, mesh: Mesh,
     replicated) via :func:`shard_by_subtree` and GSPMD partitions every
     stage launch over the mesh.  Values are placement-invariant — the
     σ-sweep parity tests pass unchanged on the sharded plan.
+    ``rank_budget`` passes through to the sweep engine's budgeted
+    adaptive rank.
     """
     from repro.core.hck import sweep_factors
 
     plan = shard_by_subtree(plan, mesh, axis=axis)
-    return shard_by_subtree(sweep_factors(plan, kernel, config), mesh,
-                            axis=axis)
+    return shard_by_subtree(
+        sweep_factors(plan, kernel, config, rank_budget=rank_budget), mesh,
+        axis=axis)

@@ -161,12 +161,14 @@ def run_krr(args):
             factors = dist_build_hck_streaming(
                 source, levels=levels, rank=args.rank, key=kbuild,
                 kernel=ker, mesh=mesh, config=cfg,
-                leaf_batch=args.leaf_batch)
+                leaf_batch=args.leaf_batch, policy=args.landmarks,
+                rank_budget=args.rank_budget)
         else:
             xp, yp, _ = pad_points(x, y, args.rank, levels, kpad)
             factors = dist_build_hck(xp, levels=levels, rank=args.rank,
                                      key=kbuild, kernel=ker, mesh=mesh,
-                                     config=cfg)
+                                     config=cfg, policy=args.landmarks,
+                                     rank_budget=args.rank_budget)
         targets = jnp.asarray(yp)[:, None]
         alpha = hmatrix.solve(factors, targets[factors.tree.perm],
                               ridge=lam, config=cfg)
@@ -192,10 +194,13 @@ def run_krr(args):
         model = krr.fit_streaming(
             ArraySource(np.asarray(x)), y, kernel=ker, lam=lam,
             rank=args.rank, key=jax.random.PRNGKey(1), solve_config=cfg,
-            leaf_batch=args.leaf_batch)
+            leaf_batch=args.leaf_batch, landmarks=args.landmarks,
+            rank_budget=args.rank_budget)
     else:
         model = krr.fit(x, y, kernel=ker, lam=lam, rank=args.rank,
-                        key=jax.random.PRNGKey(1), solve_config=cfg)
+                        key=jax.random.PRNGKey(1), solve_config=cfg,
+                        landmarks=args.landmarks,
+                        rank_budget=args.rank_budget)
     jax.block_until_ready(model.alpha)
     t_fit = time.perf_counter() - t0
 
@@ -256,7 +261,8 @@ def run_krr_grid(args):
 
     t0 = time.perf_counter()
     plan = build_sweep_plan(x, levels=levels, rank=args.rank,
-                            key=jax.random.PRNGKey(1))
+                            key=jax.random.PRNGKey(1),
+                            policy=args.landmarks, config=cfg)
     jax.block_until_ready(plan.leaf_self)
     t_plan = time.perf_counter() - t0
 
@@ -266,8 +272,11 @@ def run_krr_grid(args):
     t0 = time.perf_counter()
     for s in sigmas:
         ker = BaseKernel("gaussian", sigma=s)
-        factors = (dist_sweep_factors(plan, ker, mesh, cfg)
-                   if mesh is not None else sweep_factors(plan, ker, cfg))
+        factors = (dist_sweep_factors(plan, ker, mesh, cfg,
+                                      rank_budget=args.rank_budget)
+                   if mesh is not None
+                   else sweep_factors(plan, ker, cfg,
+                                      rank_budget=args.rank_budget))
         paths.append(krr.fit_path(
             x, y, kernel=ker, lams=lams, solve_config=cfg,
             factors=factors, x_val=xv, y_val=yv))
@@ -345,6 +354,17 @@ def main():
                     "full-rebuild rate (0 = off)")
     ap.add_argument("--leaf-batch", type=int, default=64,
                     help="leaves staged per device launch when streaming")
+    ap.add_argument("--landmarks",
+                    choices=["uniform", "kmeans", "leverage"],
+                    default="uniform",
+                    help="landmark-selection policy for the krr build "
+                    "(repro.landmarks): 'uniform' is bitwise-identical to "
+                    "the pre-policy engine; 'kmeans'/'leverage' trade build "
+                    "overhead for accuracy per rank")
+    ap.add_argument("--rank-budget", type=int, default=None,
+                    help="global rank budget for budgeted adaptive per-node "
+                    "rank (sum of active ranks over all nodes; see "
+                    "repro.landmarks.budget); default: full rank everywhere")
     ap.add_argument("--grid", action="store_true",
                     help="σ×λ grid search through the sweep engine "
                          "(krr task)")

@@ -134,16 +134,23 @@ def _rebuild_frozen(factors, kernel, config, base: int):
     however accurately the leaves are recomputed — the middle factors
     must be promoted with them.
     """
-    from repro.core.hck import HCKFactors, _middle_factors, _transfer_ops
+    from repro.core.hck import (HCKFactors, _apply_rank_masks,
+                                _mask_transfer_ops, _middle_factors,
+                                _transfer_ops)
     from repro.core.update import refit_frozen
 
     f = factors
     if config.precision == "f64":
         f = _cast_float(f, jnp.float64)
     sigma, sigma_cho, sigma_li = _middle_factors(f.landmarks, kernel, config)
+    if f.rank_mask is not None:  # budgeted model: the masks are frozen too
+        sigma, sigma_cho, sigma_li = _apply_rank_masks(
+            f.rank_mask, sigma, sigma_cho, sigma_li)
     w = _transfer_ops(f.landmarks, sigma_li, kernel, config)
+    if f.rank_mask is not None:
+        w = _mask_transfer_ops(w, f.rank_mask)
     mid = HCKFactors(f.x_sorted, f.tree, f.landmarks, sigma, sigma_cho, w,
-                     f.u, f.adiag)
+                     f.u, f.adiag, f.rank_mask)
     return refit_frozen(mid, kernel, config, jitter_rows=base)
 
 
@@ -215,7 +222,9 @@ def repair_factors(factors, kernel, config=None, *,
     reach (points + landmarks), so a recovered set is parity-exact with
     the original clean build.  Returns ``(factors, audit)``.
     """
-    from repro.core.hck import HCKFactors, _middle_factors, _transfer_ops
+    from repro.core.hck import (HCKFactors, _apply_rank_masks,
+                                _mask_transfer_ops, _middle_factors,
+                                _transfer_ops)
     from repro.core.update import refit_frozen
     from repro.kernels.registry import DEFAULT_CONFIG
 
@@ -229,14 +238,20 @@ def repair_factors(factors, kernel, config=None, *,
     def _rebuild_middle():
         sigma, sigma_cho, sigma_li = _middle_factors(
             factors.landmarks, kernel, config)
+        if factors.rank_mask is not None:  # frozen budget masks re-apply
+            sigma, sigma_cho, sigma_li = _apply_rank_masks(
+                factors.rank_mask, sigma, sigma_cho, sigma_li)
         w = _transfer_ops(factors.landmarks, sigma_li, kernel, config)
+        if factors.rank_mask is not None:
+            w = _mask_transfer_ops(w, factors.rank_mask)
         cast = tuple(
             tuple(a.astype(o.dtype) for a, o in zip(new, old))
             for new, old in ((sigma, factors.sigma),
                              (sigma_cho, factors.sigma_cho),
                              (w, factors.w)))
         mid = HCKFactors(factors.x_sorted, factors.tree, factors.landmarks,
-                         cast[0], cast[1], cast[2], factors.u, factors.adiag)
+                         cast[0], cast[1], cast[2], factors.u, factors.adiag,
+                         factors.rank_mask)
         return _refit(mid)
 
     plans = [("probe", lambda: factors),

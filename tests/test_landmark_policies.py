@@ -1,0 +1,440 @@
+"""Landmark-policy subsystem: pluggable selection + budgeted adaptive rank.
+
+Property pins for ``repro.landmarks``:
+
+- the uniform policy IS the historical build — ``build_hck(policy="uniform")``
+  must equal the no-argument build BITWISE (every pytree leaf);
+- every policy sees the SAME tree / permutation / sorted points (policies
+  choose rows WITHIN blocks, never the partition);
+- budgeted adaptive rank conserves the global budget (sum of per-node
+  ranks <= budget), masks are prefix masks, and a budget that pins every
+  node to a native rank reproduces that native build up to the documented
+  jitter-scaling difference;
+- masked models stay exact through the solve/OOS/update engines (the
+  identity-padding contract of ``repro.landmarks.budget``);
+- the distributed build matches the single-host build per policy at the
+  repo's standard 1e-12 f64 gate;
+- streaming builds reject non-uniform policies and budgets loudly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hmatrix, oos, update
+from repro.core.hck import (HCKFactors, RankSummary, build_hck,
+                            build_hck_streaming, build_sweep_plan,
+                            replan_policy, sweep_factors, to_dense)
+from repro.core.kernels_fn import BaseKernel
+from repro.kernels.registry import (SolveConfig, get_impl, registered,
+                                    tile_config)
+from repro.landmarks import (KMeansPolicy, LandmarkPolicy, LeveragePolicy,
+                             UniformPolicy, allocate_rank_masks,
+                             allocate_ranks, get_policy, node_mass,
+                             select_indices)
+
+POLICIES = ("uniform", "kmeans", "leverage")
+
+
+@pytest.fixture(scope="module")
+def problem(f64):
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 4), jnp.float64)
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-8)
+    return x, ker
+
+
+def _build(x, ker, **kw):
+    kw.setdefault("levels", 3)
+    kw.setdefault("rank", 16)
+    kw.setdefault("key", jax.random.PRNGKey(1))
+    return build_hck(x, kernel=ker, **kw)
+
+
+# ---------------------------------------------------------------------------
+# policy registry + protocol
+# ---------------------------------------------------------------------------
+
+def test_get_policy_resolution():
+    assert isinstance(get_policy(None), UniformPolicy)
+    assert isinstance(get_policy("uniform"), UniformPolicy)
+    assert isinstance(get_policy("kmeans"), KMeansPolicy)
+    assert isinstance(get_policy("leverage"), LeveragePolicy)
+    custom = KMeansPolicy(iters=3)
+    assert get_policy(custom) is custom
+    with pytest.raises(ValueError, match="unknown landmark policy"):
+        get_policy("nope")
+
+
+def test_policies_satisfy_protocol():
+    for name in POLICIES:
+        p = get_policy(name)
+        assert isinstance(p, LandmarkPolicy)
+        assert p.name == name
+
+
+# ---------------------------------------------------------------------------
+# uniform policy == historical build, bitwise
+# ---------------------------------------------------------------------------
+
+def test_uniform_policy_bitwise_default(problem):
+    x, ker = problem
+    f0 = _build(x, ker)
+    f1 = _build(x, ker, policy="uniform")
+    f2 = _build(x, ker, policy=UniformPolicy())
+    for fa in (f1, f2):
+        for a, b in zip(jax.tree_util.tree_leaves(f0),
+                        jax.tree_util.tree_leaves(fa)):
+            assert a.dtype == b.dtype and (a == b).all()
+
+
+def test_policies_share_tree_and_permutation(problem):
+    x, ker = problem
+    f_uni = _build(x, ker)
+    for name in ("kmeans", "leverage"):
+        f = _build(x, ker, policy=name)
+        assert (np.asarray(f.tree.perm) == np.asarray(f_uni.tree.perm)).all()
+        assert (f.x_sorted == f_uni.x_sorted).all()
+        # same shapes, different landmark choices
+        for a, b in zip(f.landmarks, f_uni.landmarks):
+            assert a.shape == b.shape
+        assert not all(bool((a == b).all())
+                       for a, b in zip(f.landmarks, f_uni.landmarks))
+
+
+def test_policy_indices_distinct_per_node(f64):
+    blocks = jax.random.normal(jax.random.PRNGKey(3), (4, 64, 5),
+                               jnp.float64)
+    for name in POLICIES:
+        idx = select_indices(get_policy(name), jax.random.PRNGKey(4),
+                             blocks, 16)
+        assert idx.shape == (4, 16)
+        assert jnp.issubdtype(idx.dtype, jnp.integer)
+        for row in np.asarray(idx):
+            assert len(set(row.tolist())) == 16          # distinct
+            assert row.min() >= 0 and row.max() < 64
+
+
+def test_leverage_policy_sigma_independent(f64):
+    """Selection must not depend on kernel hyperparameters (the SweepPlan
+    policy axis reuses one landmark draw across the (sigma, lam) grid)."""
+    blocks = jax.random.normal(jax.random.PRNGKey(5), (2, 64, 3),
+                               jnp.float64)
+    for name in ("kmeans", "leverage"):
+        pol = get_policy(name)
+        a = select_indices(pol, jax.random.PRNGKey(6), blocks, 8)
+        b = select_indices(pol, jax.random.PRNGKey(6), blocks, 8)
+        assert (a == b).all()                            # deterministic
+
+
+# ---------------------------------------------------------------------------
+# strict PD across precisions at the documented jitter floors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("precision,jitter", [("bf16", 1e-4),
+                                              ("f32", 1e-6),
+                                              ("f64", 1e-8)])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_policy_pd_across_precisions(f64, policy, precision, jitter):
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 4), jnp.float64)
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=jitter)
+    cfg = SolveConfig(precision=precision)
+    f = _build(x, ker, policy=policy, config=cfg)
+    for cho in f.sigma_cho:
+        c = jnp.asarray(cho, jnp.float64)
+        assert bool(jnp.isfinite(c).all())
+        diag = jnp.diagonal(c, axis1=-2, axis2=-1)
+        assert bool((diag > 0).all())                    # strict PD
+
+
+# ---------------------------------------------------------------------------
+# budget allocation
+# ---------------------------------------------------------------------------
+
+def test_allocate_ranks_properties():
+    masses = jnp.asarray([16.0, 4.0, 1.0, 9.0])
+    for budget in (32, 40, 64, 128):
+        r = np.asarray(allocate_ranks(masses, budget, 32))
+        assert r.sum() <= budget                         # conservation
+        assert (r >= 1).all() and (r <= 32).all()
+        assert ((r - r.min()) % 8 == 0).all()            # snap-8 extras
+    # budget below one slot per node is unsatisfiable
+    with pytest.raises(ValueError, match="budget"):
+        allocate_ranks(masses, 3, 32)
+
+
+def test_node_mass_bounds(f64):
+    g = jax.random.normal(jax.random.PRNGKey(7), (3, 16, 16), jnp.float64)
+    g = g @ jnp.swapaxes(g, -1, -2) + 16 * jnp.eye(16)
+    m = np.asarray(node_mass(g))
+    assert (m >= 1.0 - 1e-12).all() and (m <= 16.0 + 1e-12).all()
+
+
+def test_budget_conservation_and_prefix_masks(problem):
+    x, ker = problem
+    budget = 80
+    f = _build(x, ker, rank_budget=budget)
+    assert f.rank_mask is not None
+    total = 0
+    for mask in f.rank_mask:
+        m = np.asarray(mask)
+        assert set(np.unique(m).tolist()) <= {0.0, 1.0}
+        # prefix property: once a row hits 0 it stays 0
+        assert (np.diff(m, axis=1) <= 0).all()
+        total += int(m.sum())
+    s = f.ranks
+    assert isinstance(s, RankSummary)
+    assert s.total == total <= budget
+    assert 1 <= s.min <= s.max <= f.rank
+    with pytest.raises(ValueError, match="budget"):
+        _build(x, ker, rank_budget=6)                    # < node count (7)
+
+
+def test_ranks_summary_unbudgeted(problem):
+    x, ker = problem
+    f = _build(x, ker)
+    nodes = sum(1 << lvl for lvl in range(f.levels))
+    assert f.rank_mask is None
+    assert f.ranks == RankSummary(16, 16, 16 * nodes)
+
+
+# ---------------------------------------------------------------------------
+# budget-masked build == native smaller-rank build (up to jitter scaling)
+# ---------------------------------------------------------------------------
+
+def test_budget_masked_matches_native_rank(problem):
+    """budget = 8 * nodes pins every node to rank 8; the permutation-
+    prefix property makes those 8 landmarks IDENTICAL to a native rank-8
+    draw, so the dense operators differ only by the documented jitter
+    scaling (jitter * bucket on the gram diagonal): ~1e-6 at 1e-8."""
+    x, ker = problem
+    f8 = _build(x, ker, rank=8)
+    nodes = sum(1 << lvl for lvl in range(3))
+    f16 = _build(x, ker, rank=16, rank_budget=8 * nodes)
+    assert f16.ranks == RankSummary(8, 8, 8 * nodes)
+    for lm16, lm8 in zip(f16.landmarks, f8.landmarks):
+        assert (lm16[:, :8, :] == lm8).all()             # prefix landmarks
+    err = float(jnp.max(jnp.abs(to_dense(f16) - to_dense(f8))))
+    assert err < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# budgeted models through the engines
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def budgeted(problem):
+    x, ker = problem
+    f = _build(x, ker, rank_budget=80)
+    return x, ker, f
+
+
+def test_budgeted_matvec_vs_dense(budgeted):
+    x, ker, f = budgeted
+    dense = to_dense(f)
+    b = jax.random.normal(jax.random.PRNGKey(8), (256, 3), jnp.float64)
+    got = hmatrix.matvec(f, b)
+    assert float(jnp.max(jnp.abs(got - dense @ b))) < 1e-10
+    assert float(jnp.max(jnp.abs(dense - dense.T))) < 1e-12
+
+
+def test_budgeted_inverse_vs_dense(budgeted):
+    x, ker, f = budgeted
+    dense = to_dense(f)
+    b = jax.random.normal(jax.random.PRNGKey(9), (256, 2), jnp.float64)
+    inv = hmatrix.invert(f, ridge=0.1)
+    got = hmatrix.apply_inverse(inv, b)
+    want = jnp.linalg.solve(dense + 0.1 * jnp.eye(256), b)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-8
+    # logdet picks up log(1) = 0 from the identity padding
+    want_ld = 2.0 * jnp.sum(jnp.log(jnp.diagonal(
+        jnp.linalg.cholesky(dense + 0.1 * jnp.eye(256)))))
+    assert abs(float(hmatrix.logdet(f, ridge=0.1)) - float(want_ld)) < 1e-8
+
+
+def test_budgeted_invert_multi(budgeted):
+    """The stacked-ridge path stays bit-identical to the per-ridge loop
+    on masked factors (the grid axis is orthogonal to the prefix masks)."""
+    x, ker, f = budgeted
+    ridges = jnp.asarray([0.05, 0.5], jnp.float64)
+    multi = hmatrix.invert_multi(f, ridges)
+    for g, ridge in enumerate([0.05, 0.5]):
+        one = hmatrix.invert(f, ridge)
+        np.testing.assert_array_equal(np.asarray(multi.linv[g]),
+                                      np.asarray(one.linv))
+        for a, b in zip(multi.sigma, one.sigma):
+            np.testing.assert_array_equal(np.asarray(a[g]), np.asarray(b))
+        assert float(multi.logabsdet[g]) == float(one.logabsdet)
+
+
+def test_budgeted_oos_engines_agree(budgeted):
+    x, ker, f = budgeted
+    w = jax.random.normal(jax.random.PRNGKey(11), (256,), jnp.float64)
+    plan = oos.prepare(f, w)
+    q = jax.random.normal(jax.random.PRNGKey(12), (33, 4), jnp.float64)
+    batched = oos.apply_plan(f, plan, q, ker)
+    walk = oos.apply_plan_walk(f, plan, q, ker)
+    assert bool(jnp.isfinite(batched).all())
+    assert float(jnp.max(jnp.abs(batched - walk))) < 1e-10
+
+
+def test_budgeted_insert_downdate_roundtrip(budgeted):
+    x, ker, f = budgeted
+    x_new = jax.random.normal(jax.random.PRNGKey(13), (5, 4), jnp.float64)
+    f2, ys2, rec = update.insert(f, x_new, ker, key=jax.random.PRNGKey(14))
+    assert f2.rank_mask is not None
+    # inactive U columns stay zeroed on the extended rows
+    u_mask = np.repeat(np.asarray(f.rank_mask[-1]), 2, axis=0)
+    assert (np.asarray(f2.u)[:, :, :] * (1 - u_mask[:, None, :]) == 0).all()
+    f3 = update.downdate(f2, rec.k)
+    for a, b in zip(jax.tree_util.tree_leaves(f3),
+                    jax.tree_util.tree_leaves(f)):
+        assert (a == b).all()                            # bitwise round-trip
+
+
+def test_budgeted_refit_frozen_preserves_mask(budgeted):
+    x, ker, f = budgeted
+    f_re = update.refit_frozen(f, ker)
+    assert f_re.rank_mask is not None
+    for a, b in zip(f_re.rank_mask, f.rank_mask):
+        assert (a == b).all()
+    u_mask = np.repeat(np.asarray(f.rank_mask[-1]), 2, axis=0)
+    assert (np.asarray(f_re.u) * (1 - u_mask[:, None, :]) == 0).all()
+    err = float(jnp.max(jnp.abs(to_dense(f_re) - to_dense(f))))
+    assert err < 1e-10
+
+
+# ---------------------------------------------------------------------------
+# sweep-plan policy axis + replan
+# ---------------------------------------------------------------------------
+
+def test_sweep_policy_axis_matches_direct_build(problem):
+    x, ker = problem
+    key = jax.random.PRNGKey(1)
+    for name in ("kmeans", "leverage"):
+        plan = build_sweep_plan(x, levels=3, rank=16, key=key, policy=name)
+        f_sw = sweep_factors(plan, ker)
+        f_di = _build(x, ker, policy=name)
+        assert float(jnp.max(jnp.abs(to_dense(f_sw) - to_dense(f_di)))) == 0.0
+
+
+def test_replan_policy_matches_fresh_plan(problem):
+    x, ker = problem
+    key = jax.random.PRNGKey(1)
+    plan_u = build_sweep_plan(x, levels=3, rank=16, key=key)
+    plan_k = replan_policy(plan_u, rank=16, key=key, policy="kmeans")
+    plan_ref = build_sweep_plan(x, levels=3, rank=16, key=key,
+                                policy="kmeans")
+    for a, b in zip(jax.tree_util.tree_leaves(plan_k),
+                    jax.tree_util.tree_leaves(plan_ref)):
+        assert (a == b).all()
+
+
+def test_sweep_factors_budget(problem):
+    x, ker = problem
+    plan = build_sweep_plan(x, levels=3, rank=16, key=jax.random.PRNGKey(1))
+    f = sweep_factors(plan, ker, rank_budget=80)
+    assert f.rank_mask is not None and f.ranks.total <= 80
+
+
+# ---------------------------------------------------------------------------
+# streaming guards
+# ---------------------------------------------------------------------------
+
+def test_streaming_rejects_non_uniform_policy(problem):
+    from repro.data.pipeline import ArraySource
+    x, ker = problem
+    src = ArraySource(np.asarray(x))
+    with pytest.raises(ValueError, match="streaming"):
+        build_hck_streaming(src, levels=3, rank=16,
+                            key=jax.random.PRNGKey(1), kernel=ker,
+                            policy="kmeans")
+    with pytest.raises(ValueError, match="streaming"):
+        build_hck_streaming(src, levels=3, rank=16,
+                            key=jax.random.PRNGKey(1), kernel=ker,
+                            rank_budget=80)
+
+
+# ---------------------------------------------------------------------------
+# distributed parity (single-device mesh runs everywhere)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_dist_build_matches_single_host_per_policy(f64, policy):
+    from repro.launch.dist_hck import dist_build_hck
+    from repro.launch.mesh import kernel_mesh
+
+    mesh = kernel_mesh(1)
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-6)
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, 4), jnp.float64)
+    key = jax.random.PRNGKey(1)
+    f_ref = build_hck(x, levels=4, rank=8, key=key, kernel=ker,
+                      policy=policy)
+    f_dist = dist_build_hck(x, levels=4, rank=8, key=key, kernel=ker,
+                            mesh=mesh, policy=policy)
+    for lm_a, lm_b in zip(f_dist.landmarks, f_ref.landmarks):
+        assert float(jnp.max(jnp.abs(lm_a - lm_b))) < 1e-12
+    diffs = [jnp.max(jnp.abs(f_dist.u - f_ref.u)),
+             jnp.max(jnp.abs(f_dist.adiag - f_ref.adiag))]
+    for a, b in zip(f_dist.sigma, f_ref.sigma):
+        diffs.append(jnp.max(jnp.abs(a - b)))
+    assert float(jnp.max(jnp.stack(diffs))) < 1e-12
+
+
+def test_dist_build_budget_matches_single_host(f64):
+    from repro.launch.dist_hck import dist_build_hck
+    from repro.launch.mesh import kernel_mesh
+
+    mesh = kernel_mesh(1)
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-6)
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, 4), jnp.float64)
+    key = jax.random.PRNGKey(1)
+    f_ref = build_hck(x, levels=4, rank=8, key=key, kernel=ker,
+                      rank_budget=120)
+    f_dist = dist_build_hck(x, levels=4, rank=8, key=key, kernel=ker,
+                            mesh=mesh, rank_budget=120)
+    assert f_dist.rank_mask is not None
+    for a, b in zip(f_dist.rank_mask, f_ref.rank_mask):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    assert float(jnp.max(jnp.abs(f_dist.u - f_ref.u))) < 1e-12
+
+
+def test_dist_streaming_rejects_non_uniform_policy(f64):
+    from repro.data.pipeline import ArraySource
+    from repro.launch.dist_hck import dist_build_hck_streaming
+    from repro.launch.mesh import kernel_mesh
+
+    ker = BaseKernel("gaussian", sigma=2.0, jitter=1e-6)
+    src = ArraySource(np.zeros((128, 4)))
+    with pytest.raises(ValueError, match="streaming"):
+        dist_build_hck_streaming(src, levels=3, rank=8,
+                                 key=jax.random.PRNGKey(1), kernel=ker,
+                                 mesh=kernel_mesh(1), policy="leverage")
+
+
+# ---------------------------------------------------------------------------
+# policy_dist registry stage
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", ("l2", "l1"))
+def test_policy_dist_stage_parity(f64, metric):
+    blocks = jax.random.normal(jax.random.PRNGKey(15), (3, 128, 5),
+                               jnp.float64)
+    centers = blocks[:, :16, :]
+    ref = get_impl("policy_dist", "xla")(blocks, centers, metric=metric)
+    pal = get_impl("policy_dist", "pallas")(blocks, centers, metric=metric,
+                                            interpret=True)
+    assert ref.shape == (3, 128, 16)
+    assert float(jnp.max(jnp.abs(jnp.asarray(ref, jnp.float64)
+                                 - jnp.asarray(pal, jnp.float64)))) < 1e-5
+    if metric == "l2":
+        want = jnp.sum((blocks[0, :, None, :] - centers[0, None, :, :]) ** 2,
+                       axis=-1)
+        assert float(jnp.max(jnp.abs(jnp.asarray(ref[0], jnp.float64)
+                                     - want))) < 1e-10
+
+
+def test_policy_dist_registered_and_tiled():
+    assert {b for _, b in registered("policy_dist")} == {"xla", "pallas"}
+    t = tile_config("policy_dist", n0=128, r=16, k=1, d=8)
+    assert t.block_n0 > 0 and 128 % t.block_n0 == 0
+    assert t.vmem_bytes > 0
